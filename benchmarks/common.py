@@ -1,0 +1,28 @@
+"""Benchmark utilities: timing with block_until_ready + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+ROWS: list[tuple] = []
+
+
+def time_fn(fn, *args, warmup=1, repeats=3, **kw):
+    """Median wall time (s) of fn(*args) with jitted-result sync."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """Print one ``name,us_per_call,derived`` CSV row (scaffold contract)."""
+    row = (name, seconds * 1e6, derived)
+    ROWS.append(row)
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,80 @@
+"""Pallas-kernel micro-benchmarks.
+
+On this CPU container the kernels execute in ``interpret=True`` mode, so
+wall times measure the *reference semantics*, not TPU performance.  The
+``derived`` column therefore reports the analytically-derived TPU-relevant
+quantities: HBM bytes moved and MXU flops per call, plus the roofline-model
+time at v5e constants — these are the numbers the §Perf log tracks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    countsketch_apply,
+    countsketch_ref,
+    fused_gaussian_sketch,
+    sketch_matmul,
+    srht_apply,
+)
+from repro.launch.mesh import HW
+
+from .common import emit, time_fn
+
+
+def run(seed=0):
+    m, n, d = 16384, 256, 1024
+    A = jax.random.normal(jax.random.key(seed), (m, n), jnp.float32)
+
+    # --- CountSketch: kernel vs segment-sum oracle -------------------------
+    h = jax.random.randint(jax.random.key(1), (m,), 0, d, dtype=jnp.int32)
+    s = jax.random.rademacher(jax.random.key(2), (m,), jnp.float32)
+    t_ref = time_fn(lambda: countsketch_ref(A, h, s, d))
+    t_int = time_fn(lambda: countsketch_apply(A, h, s, d, interpret=True))
+    bytes_moved = (m * n + d * n) * 4 + m * 8
+    mxu_flops = 2 * m * d * n  # one-hot matmul recast
+    t_mem = bytes_moved / HW["hbm_bw"]
+    t_mxu = mxu_flops / HW["peak_flops_bf16"]
+    emit(
+        "kernel/countsketch",
+        t_int,
+        f"ref_us={t_ref*1e6:.0f};hbm_bytes={bytes_moved};mxu_flops={mxu_flops};"
+        f"v5e_mem_us={t_mem*1e6:.1f};v5e_mxu_us={t_mxu*1e6:.1f};"
+        f"bound={'mem' if t_mem > t_mxu else 'mxu'}",
+    )
+
+    # --- SRHT: two-stage blocked Hadamard ----------------------------------
+    m2 = 16384
+    signs = jax.random.rademacher(jax.random.key(3), (m2,), jnp.float32)
+    rows = jax.random.choice(jax.random.key(4), m2, (d,), replace=False)
+    t_srht = time_fn(lambda: srht_apply(A, signs, rows, d, interpret=True))
+    r, c = 16, 1024  # stage split for m=16384
+    bytes_srht = 2 * (m2 * n * 4) * 2 + d * n * 4  # two streamed passes
+    flops_srht = 2 * m2 * n * (r + c)
+    emit(
+        "kernel/srht",
+        t_srht,
+        f"hbm_bytes={bytes_srht};mxu_flops={flops_srht};"
+        f"v5e_mem_us={bytes_srht/HW['hbm_bw']*1e6:.1f}",
+    )
+
+    # --- dense Gaussian: materialized vs fused-PRNG ------------------------
+    S = jax.random.normal(jax.random.key(5), (d, m), jnp.float32)
+    t_mat = time_fn(lambda: sketch_matmul(S, A, interpret=True))
+    t_fused = time_fn(
+        lambda: fused_gaussian_sketch(A, jax.random.key(6), d, interpret=True)
+    )
+    bytes_mat = (d * m + m * n + d * n) * 4
+    bytes_fused = (m * n + d * n) * 4
+    emit(
+        "kernel/gauss_materialized",
+        t_mat,
+        f"hbm_bytes={bytes_mat};v5e_mem_us={bytes_mat/HW['hbm_bw']*1e6:.1f}",
+    )
+    emit(
+        "kernel/gauss_fused_prng",
+        t_fused,
+        f"hbm_bytes={bytes_fused};v5e_mem_us={bytes_fused/HW['hbm_bw']*1e6:.1f};"
+        f"hbm_reduction={bytes_mat/bytes_fused:.1f}x",
+    )

@@ -1,0 +1,65 @@
+"""Roofline table from the dry-run JSONs (experiments/dryrun)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+
+def load_cells(out_dir="experiments/dryrun", mesh="single"):
+    d = os.path.join(out_dir, mesh)
+    cells = []
+    if not os.path.isdir(d):
+        return cells
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            cells.append(json.load(open(os.path.join(d, f))))
+    return cells
+
+
+def run(out_dir="experiments/dryrun"):
+    cells = load_cells(out_dir)
+    if not cells:
+        print("# no dry-run results found — run: python -m repro.launch.dryrun --all")
+        return
+    for c in cells:
+        if c.get("status") != "ok" or not c.get("roofline"):
+            emit(f"roofline/{c['arch']}/{c['shape']}", 0.0, f"status={c.get('status')}")
+            continue
+        r = c["roofline"]
+        dom = r["bottleneck"]
+        t_dom = r[f"t_{dom}_s"] if dom != "collective" else r["t_collective_s"]
+        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(
+            f"roofline/{c['arch']}/{c['shape']}",
+            t_dom,
+            f"bottleneck={dom};t_comp={r['t_compute_s']:.3e};"
+            f"t_mem={r['t_memory_s']:.3e};t_coll={r['t_collective_s']:.3e};"
+            f"useful_ratio={r['useful_flops_ratio']:.3f}",
+        )
+
+
+def markdown_table(out_dir="experiments/dryrun"):
+    """Full §Roofline markdown table (used to build EXPERIMENTS.md)."""
+    cells = load_cells(out_dir)
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | "
+        "bottleneck | MODEL/HLO flops | mem/chip (GB) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok" or not c.get("roofline"):
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | - | - | - | {c.get('status')} | - | - |"
+            )
+            continue
+        r = c["roofline"]
+        mem = c["full"]["memory"]
+        mem_gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9 if mem else 0
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.3f} | {mem_gb:.1f} |"
+        )
+    return "\n".join(lines)

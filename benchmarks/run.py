@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig3      paper Fig. 3: runtime vs m, SAA-SAS vs LSQR
+  fig4      paper Fig. 4: forward error on the ill-conditioned problem
+  sketch    paper §2: operator quality/cost comparison
+  kernels   Pallas kernel micro-benches (interpret mode + derived TPU terms)
+  dist      distributed sketched LSQ (shard_map) + comm accounting
+  roofline  per-cell roofline terms from the dry-run JSONs
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
+sizes (slow on 1 CPU core).
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,sketch,kernels,dist,roofline")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    if want("fig4"):
+        from . import error_comparison
+        error_comparison.run(m=20000 if args.full else 8192,
+                             n=100 if args.full else 64)
+    if want("fig3"):
+        from . import runtime_comparison
+        runtime_comparison.run(full=args.full)
+    if want("sketch"):
+        from . import sketch_quality
+        sketch_quality.run(m=65536 if args.full else 16384)
+    if want("kernels"):
+        from . import kernels_bench
+        kernels_bench.run()
+    if want("dist"):
+        from . import distributed_bench
+        distributed_bench.run()
+    if want("roofline"):
+        from . import roofline
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

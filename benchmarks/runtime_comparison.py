@@ -1,0 +1,41 @@
+"""Paper Figure 3: runtime vs m for SAA-SAS vs LSQR.
+
+Paper sweep: m equally log-spaced in [2^12, 2^20], n=1000.  Default here is
+capped at 2^17 with n=256 (single CPU core, see DESIGN.md §7 deviations);
+``--full`` restores the paper sizes.  Problem generation uses the 'fast'
+§5.1 variant (Gaussian left factor) so generation cost does not drown the
+solver comparison.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_problem, lsqr_dense, saa_sas
+
+from .common import emit, time_fn
+
+
+def run(full=False, seed=0):
+    n = 1000 if full else 256
+    max_pow = 20 if full else 17
+    sizes = [2**p for p in range(12, max_pow + 1, 2 if not full else 1)]
+    key = jax.random.key(seed)
+
+    for m in sizes:
+        prob = generate_problem(
+            jax.random.key(seed), m, n, cond=1e10, beta=1e-10, method="fast"
+        )
+        A, b = prob.A, prob.b
+
+        t_saa = time_fn(lambda: saa_sas(A, b, key), repeats=3)
+        r = saa_sas(A, b, key)
+        emit(f"fig3/saa_sas/m{m}", t_saa, f"n={n};itn={int(r.itn)}")
+
+        t_lsqr = time_fn(lambda: lsqr_dense(A, b, iter_lim=2 * n), repeats=3)
+        rl = lsqr_dense(A, b, iter_lim=2 * n)
+        emit(
+            f"fig3/lsqr/m{m}",
+            t_lsqr,
+            f"n={n};itn={int(rl.itn)};speedup={t_lsqr / t_saa:.2f}x",
+        )

@@ -1,0 +1,40 @@
+"""Paper §2 operator comparison: subspace-embedding distortion and apply
+cost for all six sketching operators at equal sketch size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sample_sketch
+
+from .common import emit, time_fn
+
+OPERATORS = (
+    "gaussian",
+    "uniform_dense",
+    "srht",
+    "countsketch",
+    "sparse_sign",
+    "uniform_sparse",
+)
+
+
+def run(m=65536, n=128, d_mult=4, seed=0):
+    d = d_mult * n
+    # orthonormal test basis: distortion = max |sv(SQ) - 1|
+    Q, _ = jnp.linalg.qr(jax.random.normal(jax.random.key(seed), (m, n)))
+    for kind in OPERATORS:
+        op = sample_sketch(kind, jax.random.key(seed + 1), d, m)
+        t_sample = time_fn(
+            lambda: jax.tree.leaves(
+                sample_sketch(kind, jax.random.key(seed + 1), d, m)
+            )[0]
+        )
+        t_apply = time_fn(lambda: op.apply(Q))
+        sv = jnp.linalg.svd(op.apply(Q), compute_uv=False)
+        dist = float(jnp.maximum(sv.max() - 1.0, 1.0 - sv.min()))
+        emit(
+            f"sketch/{kind}",
+            t_apply,
+            f"distortion={dist:.4f};sample_us={t_sample*1e6:.0f};d={d};m={m}",
+        )

@@ -1,0 +1,42 @@
+"""Distributed sketch-and-solve: row-sharded A over 8 (simulated) devices.
+
+Each shard CountSketch-es its local rows into the global bucket space; one
+s x (n+1) all-reduce assembles the sketch; LSQR runs distributed with
+psum-reduced inner products.  Communication is independent of m.
+
+    PYTHONPATH=src python examples/distributed_lsq.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from repro.core import generate_problem, qr_solve, sketched_lstsq
+from repro.core.distributed import shard_rows
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    m, n = 65536, 128
+    prob = generate_problem(jax.random.key(0), m, n, cond=1e8, beta=1e-10)
+    A, b = shard_rows(mesh, ("data",), prob.A, prob.b)
+    print(f"A: {A.shape} sharded as {A.sharding.spec} over {len(jax.devices())} devices")
+
+    res = sketched_lstsq(A, b, jax.random.key(1), mesh=mesh)
+    x_ref = qr_solve(prob.A, prob.b)
+    err_vs_truth = float(jnp.linalg.norm(res.x - prob.x_true) / jnp.linalg.norm(prob.x_true))
+    err_vs_qr = float(jnp.linalg.norm(res.x - x_ref) / jnp.linalg.norm(x_ref))
+    s = 4 * n
+    print(f"converged istop={int(res.istop)} in {int(res.itn)} LSQR iterations")
+    print(f"relative error vs x_true: {err_vs_truth:.3e}   vs QR: {err_vs_qr:.3e}")
+    print(f"comm per solve: one all-reduce of {s*(n+1)*8/1e6:.2f} MB (sketch) "
+          f"+ {int(res.itn)} x {(n+3)*8} B (LSQR) — independent of m={m}")
+
+
+if __name__ == "__main__":
+    main()

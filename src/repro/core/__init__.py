@@ -1,0 +1,29 @@
+"""The paper's primary contribution: sketch-and-solve least squares.
+
+- ``sketch``      — the six sketching operators (paper §2)
+- ``lsqr``        — operator-form LSQR baseline/inner solver (paper §3.1)
+- ``saa``         — SAA-SAS, Algorithm 1 (paper §4)
+- ``sap``         — sketch-and-precondition baseline (paper §4, negative result)
+- ``direct``      — deterministic QR/SVD ground truth
+- ``problems``    — §5.1 ill-conditioned problem generator
+- ``distributed`` — multi-pod row-sharded SAA-SAS (shard_map + psum)
+"""
+from . import direct, distributed, lsqr, problems, sap, sketch
+from .direct import normal_equations, qr_solve, svd_solve
+from .distributed import DistributedLSQResult, sketched_lstsq
+from .lsqr import LSQRResult, lsqr as lsqr_solve, lsqr_dense
+from .problems import Problem, generate as generate_problem
+from .saa import SAAResult, default_sketch_size, saa_sas
+from .sap import sap_sas
+from .sketch import SKETCH_KINDS, fwht, sample as sample_sketch
+
+__all__ = [
+    "direct", "distributed", "lsqr", "problems", "sap", "sketch",
+    "normal_equations", "qr_solve", "svd_solve",
+    "DistributedLSQResult", "sketched_lstsq",
+    "LSQRResult", "lsqr_solve", "lsqr_dense",
+    "Problem", "generate_problem",
+    "SAAResult", "default_sketch_size", "saa_sas",
+    "sap_sas",
+    "SKETCH_KINDS", "fwht", "sample_sketch",
+]

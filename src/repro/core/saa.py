@@ -1,0 +1,183 @@
+"""SAA-SAS — Sketch-and-Apply (paper Algorithm 1).
+
+  1. Draw S ∈ R^{s×m} (Clarkson–Woodruff by default, the paper's choice).
+  2. B = SA, c = Sb.
+  3. Householder QR of B (jnp.linalg.qr is Householder-based).
+  4. Y = A R⁻¹ via triangular substitution (the "apply" step).
+  5. Warm start z₀ = Qᵀ c.
+  6. LSQR on min‖Y z − b‖ (Y has cond ≈ O(1) w.h.p. — fast convergence).
+  7. Converged → x = R⁻¹ z (back substitution).
+  8. Fallback (paper lines 10–17): perturb Ã = A + σG/√m with σ = 10‖A‖₂u,
+     re-sketch, re-factor and re-solve.  (The paper's line 12 literally says
+     "B = SA"; we sketch the perturbed Ã, which is the mathematically
+     consistent reading — noted in DESIGN.md.)
+
+``materialize_y=False`` gives the operator-form variant (computes R⁻¹v on the
+fly inside LSQR) — same math, O(mn) less memory; this is the at-scale path
+used by ``repro.core.distributed``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.scipy.linalg import solve_triangular
+
+from . import sketch as sketch_lib
+from .lsqr import LSQRResult, lsqr
+
+__all__ = ["saa_sas", "SAAResult", "default_sketch_size"]
+
+
+class SAAResult(NamedTuple):
+    x: jax.Array
+    istop: jax.Array
+    itn: jax.Array
+    rnorm: jax.Array
+    used_fallback: jax.Array  # bool
+
+    @property
+    def converged(self):
+        return (self.istop > 0) & (self.istop != 7)
+
+
+def default_sketch_size(n: int, m: int) -> int:
+    """Paper regime: m ≫ s > n.  s = 4n is the usual CW sweet spot."""
+    return int(min(max(4 * n, n + 16), max(m // 2, n + 1)))
+
+
+def _estimate_2norm(A, key, iters: int = 25):
+    """Power iteration on AᵀA for σ_max(A) (used by the fallback's σ)."""
+    v = jax.random.normal(key, (A.shape[1],), A.dtype)
+    v = v / jnp.linalg.norm(v)
+
+    def body(_, v):
+        w = A.T @ (A @ v)
+        return w / jnp.maximum(jnp.linalg.norm(w), jnp.finfo(A.dtype).tiny)
+
+    v = lax.fori_loop(0, iters, body, v)
+    return jnp.linalg.norm(A @ v)
+
+
+def _solve_with_factor(A, b, B, c, *, materialize_y, atol, btol, iter_lim, steptol):
+    """Steps 3–6 of Algorithm 1 given the sketched pair (B, c)."""
+    Q, R = jnp.linalg.qr(B, mode="reduced")  # HHQR
+    z0 = Q.T @ c
+    if materialize_y:
+        # Y = A R⁻¹  ⇔  Rᵀ Yᵀ = Aᵀ (forward substitution on lower-tri Rᵀ).
+        Y = solve_triangular(R, A.T, trans=1, lower=False).T
+        res = lsqr(
+            lambda z: Y @ z,
+            lambda u: Y.T @ u,
+            b,
+            x0=z0,
+            atol=atol,
+            btol=btol,
+            iter_lim=iter_lim,
+            steptol=steptol,
+        )
+    else:
+        # Operator form: Yz = A(R⁻¹z); Yᵀu = R⁻ᵀ(Aᵀu).
+        def mv(z):
+            return A @ solve_triangular(R, z, lower=False)
+
+        def rmv(u):
+            return solve_triangular(R, A.T @ u, trans=1, lower=False)
+
+        res = lsqr(mv, rmv, b, x0=z0, atol=atol, btol=btol, iter_lim=iter_lim, steptol=steptol)
+    x = solve_triangular(R, res.x, lower=False)  # back substitution
+    return x, res
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "sketch",
+        "sketch_size",
+        "materialize_y",
+        "iter_lim",
+        "use_fallback",
+        "steptol",
+        "atol",
+        "btol",
+    ),
+)
+def saa_sas(
+    A: jax.Array,
+    b: jax.Array,
+    key: jax.Array,
+    *,
+    sketch: str = "clarkson_woodruff",
+    sketch_size: int | None = None,
+    atol: float = 0.0,
+    btol: float = 0.0,
+    steptol: float | None = None,
+    iter_lim: int = 100,
+    materialize_y: bool = True,
+    use_fallback: bool = True,
+) -> SAAResult:
+    """Solve min‖Ax − b‖ by Sketch-and-Apply (paper Algorithm 1)."""
+    m, n = A.shape
+    s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
+    if steptol is None:
+        # z-space numerical floor of the whitened system (see lsqr docstring)
+        steptol = 32 * float(jnp.finfo(A.dtype).eps)
+    k_sketch, k_pert, k_norm = jax.random.split(key, 3)
+
+    op = sketch_lib.sample(sketch, k_sketch, s, m, dtype=A.dtype)
+    B = op.apply(A)
+    c = op.apply(b)
+    x, res = _solve_with_factor(
+        A, b, B, c, materialize_y=materialize_y, atol=atol, btol=btol,
+        iter_lim=iter_lim, steptol=steptol,
+    )
+    converged = (res.istop > 0) & (res.istop != 7)
+
+    if not use_fallback:
+        return SAAResult(
+            x=x,
+            istop=res.istop,
+            itn=res.itn,
+            rnorm=res.rnorm,
+            used_fallback=jnp.asarray(False),
+        )
+
+    def ok_branch(_):
+        return SAAResult(
+            x=x,
+            istop=res.istop,
+            itn=res.itn,
+            rnorm=res.rnorm,
+            used_fallback=jnp.asarray(False),
+        )
+
+    def fallback_branch(_):
+        # Lines 10–17: Ã = A + σ G/√m, σ = 10‖A‖₂u.
+        u_round = jnp.asarray(jnp.finfo(A.dtype).eps / 2, A.dtype)
+        sigma = 10.0 * _estimate_2norm(A, k_norm) * u_round
+        G = jax.random.normal(k_pert, A.shape, A.dtype)
+        A_t = A + sigma * G / jnp.sqrt(jnp.asarray(m, A.dtype))
+        B2 = op.apply(A_t)
+        x2, res2 = _solve_with_factor(
+            A_t,
+            b,
+            B2,
+            c,
+            materialize_y=materialize_y,
+            atol=atol,
+            btol=btol,
+            iter_lim=iter_lim,
+            steptol=steptol,
+        )
+        return SAAResult(
+            x=x2,
+            istop=res2.istop,
+            itn=res2.itn,
+            rnorm=res2.rnorm,
+            used_fallback=jnp.asarray(True),
+        )
+
+    return lax.cond(converged, ok_branch, fallback_branch, operand=None)

@@ -1,0 +1,58 @@
+"""Sketch-and-Precondition (SAP-SAS) baseline — paper §4's negative result.
+
+Blendenpik-style: sketch, QR-factor the sketch, then run LSQR on the
+right-preconditioned operator A R⁻¹ *without* reducing the problem's row
+dimension.  The paper reports this is not competitive (precompute cost, no
+dimensionality reduction); we implement it so the comparison is reproducible.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+from . import sketch as sketch_lib
+from .lsqr import lsqr
+from .saa import SAAResult, default_sketch_size
+
+__all__ = ["sap_sas"]
+
+
+@partial(jax.jit, static_argnames=("sketch", "sketch_size", "iter_lim", "atol", "btol", "steptol"))
+def sap_sas(
+    A: jax.Array,
+    b: jax.Array,
+    key: jax.Array,
+    *,
+    sketch: str = "clarkson_woodruff",
+    sketch_size: int | None = None,
+    atol: float = 0.0,
+    btol: float = 0.0,
+    steptol: float | None = None,
+    iter_lim: int = 200,
+) -> SAAResult:
+    m, n = A.shape
+    s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
+    if steptol is None:
+        steptol = 32 * float(jnp.finfo(A.dtype).eps)
+    op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
+    B = op.apply(A)
+    _, R = jnp.linalg.qr(B, mode="reduced")
+
+    def mv(z):
+        return A @ solve_triangular(R, z, lower=False)
+
+    def rmv(u):
+        return solve_triangular(R, A.T @ u, trans=1, lower=False)
+
+    res = lsqr(mv, rmv, b, n=n, atol=atol, btol=btol, iter_lim=iter_lim, steptol=steptol)
+    x = solve_triangular(R, res.x, lower=False)
+    return SAAResult(
+        x=x,
+        istop=res.istop,
+        itn=res.itn,
+        rnorm=res.rnorm,
+        used_fallback=jnp.asarray(False),
+    )

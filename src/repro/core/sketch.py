@@ -1,0 +1,287 @@
+"""Sketching operators (paper §2).
+
+Dense:  Gaussian, uniform-dense, SRHT (subsampled randomized Hadamard).
+Sparse: CountSketch (Clarkson–Woodruff), sparse-sign(k), uniform-sparse.
+
+All operators are functional pytrees: ``sample(kind, key, d, m)`` draws the
+operator, ``op.apply(A)`` applies it to an (m,) vector or (m, n) matrix along
+axis 0. Every operator is scaled so that ``E[SᵀS] = I`` (an isometry in
+expectation), which is the normalization the sketch-and-solve analysis
+assumes. ``op.as_dense()`` materializes S (testing / small problems only).
+
+These are the reference (pure-jnp) paths; TPU Pallas kernels for the
+compute-critical applies live in ``repro.kernels`` and are selected by
+``repro.core.saa`` when requested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sample",
+    "fwht",
+    "GaussianSketch",
+    "UniformDenseSketch",
+    "SRHTSketch",
+    "CountSketch",
+    "SparseSignSketch",
+    "UniformSparseSketch",
+    "SKETCH_KINDS",
+]
+
+
+def _static(default=None):
+    return dataclasses.field(metadata=dict(static=True), default=default)
+
+
+def fwht(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Unnormalized fast Walsh–Hadamard transform along ``axis``.
+
+    Length along ``axis`` must be a power of two.  O(m log m) adds.
+    """
+    x = jnp.moveaxis(x, axis, 0)
+    m = x.shape[0]
+    if m & (m - 1):
+        raise ValueError(f"FWHT length must be a power of two, got {m}")
+    tail = x.shape[1:]
+    h = m // 2
+    while h >= 1:
+        x = x.reshape((-1, 2, h) + tail)
+        a, b = x[:, 0], x[:, 1]
+        x = jnp.concatenate([a + b, a - b], axis=1)
+        x = x.reshape((m,) + tail)
+        h //= 2
+    return jnp.moveaxis(x, 0, axis)
+
+
+def _next_pow2(m: int) -> int:
+    p = 1
+    while p < m:
+        p *= 2
+    return p
+
+
+def _as_2d(A):
+    """Canonicalize (m,) -> (m, 1); returns (A2d, was_vector)."""
+    if A.ndim == 1:
+        return A[:, None], True
+    return A, False
+
+
+def _maybe_squeeze(B, was_vector):
+    return B[:, 0] if was_vector else B
+
+
+# --------------------------------------------------------------------------
+# Dense operators
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GaussianSketch:
+    """S with iid N(0, 1/d) entries."""
+
+    S: jax.Array
+    d: int = _static()
+    m: int = _static()
+
+    @classmethod
+    def sample(cls, key, d, m, dtype=jnp.float64):
+        S = jax.random.normal(key, (d, m), dtype) / jnp.sqrt(jnp.asarray(d, dtype))
+        return cls(S=S, d=d, m=m)
+
+    def apply(self, A):
+        A2, vec = _as_2d(A)
+        return _maybe_squeeze(self.S @ A2, vec)
+
+    def as_dense(self):
+        return self.S
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class UniformDenseSketch:
+    """S with iid U(-sqrt(3/d), sqrt(3/d)) entries (unit row variance /d)."""
+
+    S: jax.Array
+    d: int = _static()
+    m: int = _static()
+
+    @classmethod
+    def sample(cls, key, d, m, dtype=jnp.float64):
+        lim = jnp.sqrt(jnp.asarray(3.0 / d, dtype))
+        S = jax.random.uniform(key, (d, m), dtype, minval=-lim, maxval=lim)
+        return cls(S=S, d=d, m=m)
+
+    apply = GaussianSketch.apply
+    as_dense = GaussianSketch.as_dense
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SRHTSketch:
+    """Subsampled randomized Hadamard transform: S = (1/sqrt(d)) P H D.
+
+    H is the (unnormalized, power-of-two padded) Hadamard matrix, D a random
+    sign diagonal, P a uniform row sample of size d.  Apply cost
+    O(m log m · n) via the FWHT.
+    """
+
+    signs: jax.Array  # (m_pad,)
+    rows: jax.Array  # (d,) int32 indices into m_pad
+    d: int = _static()
+    m: int = _static()
+    m_pad: int = _static()
+
+    @classmethod
+    def sample(cls, key, d, m, dtype=jnp.float64):
+        m_pad = _next_pow2(m)
+        k1, k2 = jax.random.split(key)
+        signs = jax.random.rademacher(k1, (m_pad,), dtype)
+        # sampling without replacement needs d <= m_pad; fall back to
+        # with-replacement for oversampling sketches (valid SRHT variant)
+        rows = jax.random.choice(k2, m_pad, (d,), replace=d > m_pad)
+        return cls(signs=signs, rows=rows, d=d, m=m, m_pad=m_pad)
+
+    def apply(self, A):
+        A2, vec = _as_2d(A)
+        dtype = A2.dtype
+        if self.m_pad != self.m:
+            pad = [(0, self.m_pad - self.m)] + [(0, 0)] * (A2.ndim - 1)
+            A2 = jnp.pad(A2, pad)
+        HDx = fwht(self.signs[:, None].astype(dtype) * A2)
+        B = HDx[self.rows] / jnp.sqrt(jnp.asarray(self.d, dtype))
+        return _maybe_squeeze(B, vec)
+
+    def as_dense(self):
+        eye = jnp.eye(self.m, dtype=self.signs.dtype)
+        return self.apply(eye)
+
+
+# --------------------------------------------------------------------------
+# Sparse operators
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CountSketch:
+    """Clarkson–Woodruff: one ±1 per column of S, at a random bucket.
+
+    SA[k] = sum_{i : h(i)=k} s(i) · A[i]  — an exact isometry in expectation
+    with no scaling.  Apply cost O(nnz(A)).
+    """
+
+    buckets: jax.Array  # (m,) int32 in [0, d)
+    signs: jax.Array  # (m,)
+    d: int = _static()
+    m: int = _static()
+
+    @classmethod
+    def sample(cls, key, d, m, dtype=jnp.float64):
+        k1, k2 = jax.random.split(key)
+        buckets = jax.random.randint(k1, (m,), 0, d, dtype=jnp.int32)
+        signs = jax.random.rademacher(k2, (m,), dtype)
+        return cls(buckets=buckets, signs=signs, d=d, m=m)
+
+    def apply(self, A):
+        A2, vec = _as_2d(A)
+        contrib = self.signs[:, None].astype(A2.dtype) * A2
+        B = jax.ops.segment_sum(contrib, self.buckets, num_segments=self.d)
+        return _maybe_squeeze(B, vec)
+
+    def as_dense(self):
+        S = jnp.zeros((self.d, self.m), self.signs.dtype)
+        return S.at[self.buckets, jnp.arange(self.m)].set(self.signs)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseSignSketch:
+    """k nonzeros (±1/sqrt(k)) per column of S at iid random buckets."""
+
+    buckets: jax.Array  # (k, m) int32
+    signs: jax.Array  # (k, m)
+    d: int = _static()
+    m: int = _static()
+    k: int = _static(default=8)
+
+    @classmethod
+    def sample(cls, key, d, m, dtype=jnp.float64, k=8):
+        k1, k2 = jax.random.split(key)
+        buckets = jax.random.randint(k1, (k, m), 0, d, dtype=jnp.int32)
+        signs = jax.random.rademacher(k2, (k, m), dtype)
+        return cls(buckets=buckets, signs=signs, d=d, m=m, k=k)
+
+    def apply(self, A):
+        A2, vec = _as_2d(A)
+
+        def one(h, s):
+            return jax.ops.segment_sum(
+                s[:, None].astype(A2.dtype) * A2, h, num_segments=self.d
+            )
+
+        B = jax.vmap(one)(self.buckets, self.signs).sum(0)
+        B = B / jnp.sqrt(jnp.asarray(self.k, A2.dtype))
+        return _maybe_squeeze(B, vec)
+
+    def as_dense(self):
+        S = jnp.zeros((self.d, self.m), self.signs.dtype)
+        cols = jnp.broadcast_to(jnp.arange(self.m), (self.k, self.m))
+        scale = 1.0 / jnp.sqrt(jnp.asarray(self.k, self.signs.dtype))
+        return S.at[self.buckets, cols].add(self.signs * scale)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class UniformSparseSketch:
+    """One U(-sqrt(3), sqrt(3)) entry per column at a random bucket."""
+
+    buckets: jax.Array
+    values: jax.Array
+    d: int = _static()
+    m: int = _static()
+
+    @classmethod
+    def sample(cls, key, d, m, dtype=jnp.float64):
+        k1, k2 = jax.random.split(key)
+        buckets = jax.random.randint(k1, (m,), 0, d, dtype=jnp.int32)
+        lim = jnp.sqrt(jnp.asarray(3.0, dtype))
+        values = jax.random.uniform(k2, (m,), dtype, minval=-lim, maxval=lim)
+        return cls(buckets=buckets, values=values, d=d, m=m)
+
+    def apply(self, A):
+        A2, vec = _as_2d(A)
+        contrib = self.values[:, None].astype(A2.dtype) * A2
+        B = jax.ops.segment_sum(contrib, self.buckets, num_segments=self.d)
+        return _maybe_squeeze(B, vec)
+
+    def as_dense(self):
+        S = jnp.zeros((self.d, self.m), self.values.dtype)
+        return S.at[self.buckets, jnp.arange(self.m)].set(self.values)
+
+
+SKETCH_KINDS: dict[str, type] = {
+    "gaussian": GaussianSketch,
+    "uniform_dense": UniformDenseSketch,
+    "srht": SRHTSketch,
+    "countsketch": CountSketch,
+    "clarkson_woodruff": CountSketch,  # alias — the paper's final choice
+    "sparse_sign": SparseSignSketch,
+    "uniform_sparse": UniformSparseSketch,
+}
+
+
+def sample(kind: str, key: jax.Array, d: int, m: int, dtype=jnp.float64, **kw):
+    """Draw a sketching operator ``S : R^m -> R^d`` of the given kind."""
+    try:
+        cls = SKETCH_KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown sketch kind {kind!r}; have {sorted(SKETCH_KINDS)}")
+    return cls.sample(key, d, m, dtype=dtype, **kw)

@@ -1,0 +1,3 @@
+from .synthetic import SyntheticConfig, batch_at, make_batch_specs
+
+__all__ = ["SyntheticConfig", "batch_at", "make_batch_specs"]

@@ -1,0 +1,30 @@
+"""TPU Pallas kernels for the sketch applies (the paper's compute hot path).
+
+Each subpackage has ``kernel.py`` (pl.pallas_call body + BlockSpec tiling),
+``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp oracle).  On this
+CPU container kernels are validated with ``interpret=True``; the BlockSpecs
+target TPU v5e VMEM/MXU geometry (128-lane tiles, ≤2 MiB working sets).
+"""
+from .countsketch import countsketch_apply, countsketch_ref
+from .sketch_matmul import (
+    fused_gaussian_ref,
+    fused_gaussian_sketch,
+    gaussian_matrix_ref,
+    sketch_matmul,
+    sketch_matmul_ref,
+)
+from .srht import hadamard_matrix, hadamard_transform, srht_apply, srht_ref
+
+__all__ = [
+    "countsketch_apply",
+    "countsketch_ref",
+    "fused_gaussian_ref",
+    "fused_gaussian_sketch",
+    "gaussian_matrix_ref",
+    "sketch_matmul",
+    "sketch_matmul_ref",
+    "hadamard_matrix",
+    "hadamard_transform",
+    "srht_apply",
+    "srht_ref",
+]

@@ -1,0 +1,78 @@
+"""Shared utilities for the TPU Pallas kernels.
+
+Includes a pure-jnp threefry2x32 (bit-identical to the algorithm JAX's own
+PRNG uses) that is written with uint32 add/xor/shift only, so the *same
+function* runs inside a Pallas kernel body (Mosaic) and in the ``ref.py``
+oracles — fused generate-and-multiply kernels are therefore bitwise
+testable against their references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["pad_to", "cdiv", "threefry2x32", "bits_to_gaussian", "key_to_u32"]
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: jax.Array, multiples: tuple[int, ...], value=0) -> jax.Array:
+    """Zero-pad each axis of ``x`` up to the next multiple."""
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        target = cdiv(dim, mult) * mult if mult else dim
+        pads.append((0, target - dim))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def key_to_u32(key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split a jax PRNG key into its two uint32 words."""
+    data = jax.random.key_data(key).astype(jnp.uint32)
+    return data[..., 0], data[..., 1]
+
+
+_ROTS_A = (13, 15, 26, 6)
+_ROTS_B = (17, 29, 16, 24)
+
+
+def _rotl(x, r):
+    r = np.uint32(r)
+    return (x << r) | (x >> np.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """Threefry-2x32, 20 rounds (the algorithm behind jax.random).
+
+    All inputs uint32 arrays (broadcastable); returns two uint32 arrays.
+    Pure uint32 add/xor/rotate — runs identically in jnp and Pallas/Mosaic.
+    """
+    k0 = k0.astype(jnp.uint32)
+    k1 = k1.astype(jnp.uint32)
+    x0 = x0.astype(jnp.uint32)
+    x1 = x1.astype(jnp.uint32)
+    ks = (k0, k1, k0 ^ k1 ^ np.uint32(0x1BD11BDA))
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for g in range(1, 6):
+        rots = _ROTS_A if g % 2 == 1 else _ROTS_B
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r) ^ x0
+        x0 = x0 + ks[g % 3]
+        x1 = x1 + ks[(g + 1) % 3] + np.uint32(g)
+    return x0, x1
+
+
+def bits_to_gaussian(b0, b1, dtype=jnp.float32):
+    """Box–Muller on two uint32 bit streams -> one N(0,1) stream."""
+    # 24-bit mantissa uniforms in (0, 1):
+    u1 = (b0 >> np.uint32(8)).astype(dtype) * dtype(2**-24) + dtype(2**-25)
+    u2 = (b1 >> np.uint32(8)).astype(dtype) * dtype(2**-24)
+    r = jnp.sqrt(-2.0 * jnp.log(u1)).astype(dtype)
+    theta = (2.0 * np.pi * u2).astype(dtype)
+    return r * jnp.cos(theta)

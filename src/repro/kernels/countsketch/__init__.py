@@ -1,0 +1,4 @@
+from .ops import countsketch_apply
+from .ref import countsketch_ref
+
+__all__ = ["countsketch_apply", "countsketch_ref"]

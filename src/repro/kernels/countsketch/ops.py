@@ -1,0 +1,66 @@
+"""jit'd wrapper for the CountSketch Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import cdiv, pad_to
+from .kernel import countsketch_kernel
+
+__all__ = ["countsketch_apply"]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("d", "block_m", "block_d", "block_n", "interpret"),
+)
+def countsketch_apply(
+    A: jax.Array,
+    buckets: jax.Array,
+    signs: jax.Array,
+    d: int,
+    *,
+    block_m: int = 256,
+    block_d: int = 256,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """SA for the CountSketch (buckets, signs); A is (m, n) or (m,).
+
+    Returns (d, n) in f32 accumulation dtype, cast back to A.dtype.
+    """
+    vec = A.ndim == 1
+    if vec:
+        A = A[:, None]
+    m, n = A.shape
+    acc_dtype = jnp.float32 if A.dtype in (jnp.bfloat16, jnp.float16) else A.dtype
+
+    bm = min(block_m, max(8, m))
+    bd = min(block_d, max(8, d))
+    bn = min(block_n, max(128, n)) if n >= 128 else 128
+
+    A_p = pad_to(A, (bm, bn))
+    # Padded rows get sign 0 -> contribute nothing (bucket 0 is fine).
+    h_p = pad_to(buckets.astype(jnp.int32)[:, None], (bm, 1))
+    s_p = pad_to(signs.astype(A.dtype)[:, None], (bm, 1))
+    m_p, n_p = A_p.shape
+    d_p = cdiv(d, bd) * bd
+
+    grid = (n_p // bn, d_p // bd, m_p // bm)
+    out = pl.pallas_call(
+        countsketch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda ni, di, mi: (mi, 0)),
+            pl.BlockSpec((bm, 1), lambda ni, di, mi: (mi, 0)),
+            pl.BlockSpec((bm, bn), lambda ni, di, mi: (mi, ni)),
+        ],
+        out_specs=pl.BlockSpec((bd, bn), lambda ni, di, mi: (di, ni)),
+        out_shape=jax.ShapeDtypeStruct((d_p, n_p), acc_dtype),
+        interpret=interpret,
+    )(h_p, s_p, A_p)
+    out = out[:d, :n].astype(A.dtype)
+    return out[:, 0] if vec else out

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the CountSketch kernel (exact segment-sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["countsketch_ref"]
+
+
+def countsketch_ref(A: jax.Array, buckets: jax.Array, signs: jax.Array, d: int):
+    vec = A.ndim == 1
+    A2 = A[:, None] if vec else A
+    out = jax.ops.segment_sum(
+        signs[:, None].astype(A2.dtype) * A2, buckets, num_segments=d
+    )
+    return out[:, 0] if vec else out

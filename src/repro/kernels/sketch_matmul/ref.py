@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the dense-sketch kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import bits_to_gaussian, key_to_u32, threefry2x32
+
+__all__ = ["sketch_matmul_ref", "gaussian_matrix_ref", "fused_gaussian_ref"]
+
+
+def sketch_matmul_ref(S: jax.Array, A: jax.Array) -> jax.Array:
+    return S @ A
+
+
+def gaussian_matrix_ref(key: jax.Array, d: int, m: int, dtype=jnp.float32):
+    """The exact S the fused kernel generates (same counters, same bits)."""
+    k0, k1 = key_to_u32(key)
+    rows = jnp.broadcast_to(jnp.arange(d, dtype=jnp.uint32)[:, None], (d, m))
+    cols = jnp.broadcast_to(jnp.arange(m, dtype=jnp.uint32)[None, :], (d, m))
+    b0, b1 = threefry2x32(k0, k1, rows, cols)
+    return bits_to_gaussian(b0, b1, jnp.float32).astype(dtype)
+
+
+def fused_gaussian_ref(A: jax.Array, key: jax.Array, d: int, scale=None):
+    vec = A.ndim == 1
+    A2 = A[:, None] if vec else A
+    m = A2.shape[0]
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    S = gaussian_matrix_ref(key, d, m, A2.dtype) * jnp.asarray(scale, A2.dtype)
+    out = S @ A2
+    return out[:, 0] if vec else out

@@ -1,0 +1,10 @@
+from .ops import hadamard_matrix, hadamard_transform, srht_apply
+from .ref import hadamard_ref, srht_ref
+
+__all__ = [
+    "hadamard_matrix",
+    "hadamard_transform",
+    "srht_apply",
+    "hadamard_ref",
+    "srht_ref",
+]

@@ -1,0 +1,115 @@
+"""jit'd wrappers: blocked Hadamard transform + full SRHT apply."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import cdiv, pad_to
+from .kernel import block_hadamard_kernel, cross_hadamard_kernel
+
+__all__ = ["hadamard_transform", "srht_apply", "hadamard_matrix"]
+
+
+def hadamard_matrix(k: int, dtype=jnp.float32) -> jax.Array:
+    """Sylvester Hadamard H_k (k a power of two) via parity of popcount(i&j)."""
+    i = jnp.arange(k, dtype=jnp.uint32)
+    par = jnp.bitwise_count(i[:, None] & i[None, :]) & 1
+    return (1 - 2 * par.astype(jnp.int32)).astype(dtype)
+
+
+def _split_pow2(m: int) -> tuple[int, int]:
+    """m = r * c, both powers of two, c as large as possible ≤ 1024."""
+    p = m.bit_length() - 1
+    c_bits = min(p, 10)
+    return m >> c_bits, 1 << c_bits  # (r, c)
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def hadamard_transform(
+    x: jax.Array, *, block_n: int = 256, interpret: bool = False
+) -> jax.Array:
+    """Unnormalized Walsh–Hadamard transform along axis 0 (m a power of 2)."""
+    vec = x.ndim == 1
+    if vec:
+        x = x[:, None]
+    m, n = x.shape
+    if m & (m - 1):
+        raise ValueError(f"m must be a power of two, got {m}")
+    dtype = x.dtype
+    r, c = _split_pow2(m)
+
+    bn = min(block_n, max(128, n)) if n >= 128 else 128
+    x_p = pad_to(x, (1, bn))
+    n_p = x_p.shape[1]
+    nb = n_p // bn
+
+    # ---- stage 1: (I_r ⊗ H_c) ----
+    h_c = hadamard_matrix(c, dtype)
+    y = pl.pallas_call(
+        block_hadamard_kernel,
+        grid=(r, nb),
+        in_specs=[
+            pl.BlockSpec((c, c), lambda k, ni: (0, 0)),
+            pl.BlockSpec((1, c, bn), lambda k, ni: (k, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, c, bn), lambda k, ni: (k, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((r, c, n_p), dtype),
+        interpret=interpret,
+    )(h_c, x_p.reshape(r, c, n_p))
+
+    if r == 1:
+        out = y.reshape(m, n_p)
+    else:
+        # ---- stage 2: (H_r ⊗ I_c) ----
+        h_r = hadamard_matrix(r, dtype)
+        # Sublane block of the c axis, sized so the (r, bs, bn) VMEM tile
+        # stays ≤ 2 MiB (H_r itself takes r²·4 bytes, up to 4 MiB at r=1024).
+        bs = max(8, (2**21 // (r * bn * 4)) // 8 * 8)
+        bs = min(bs, c)
+        while c % bs:
+            bs //= 2
+        bs = max(bs, 1)
+        z = pl.pallas_call(
+            cross_hadamard_kernel,
+            grid=(c // bs, nb),
+            in_specs=[
+                pl.BlockSpec((r, r), lambda si, ni: (0, 0)),
+                pl.BlockSpec((r, bs, bn), lambda si, ni: (0, si, ni)),
+            ],
+            out_specs=pl.BlockSpec((r, bs, bn), lambda si, ni: (0, si, ni)),
+            out_shape=jax.ShapeDtypeStruct((r, c, n_p), dtype),
+            interpret=interpret,
+        )(h_r, y)
+        out = z.reshape(m, n_p)
+
+    out = out[:, :n]
+    return out[:, 0] if vec else out
+
+
+@partial(jax.jit, static_argnames=("d", "interpret"))
+def srht_apply(
+    A: jax.Array,
+    signs: jax.Array,
+    rows: jax.Array,
+    d: int,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """SRHT sketch S·A = (1/√d) · P · H · D · A.
+
+    ``signs`` has length m_pad (power of two ≥ m); ``rows`` are d sampled
+    row indices.  The Hadamard transform runs in the Pallas kernels; the
+    D-scaling and P-gather stay in XLA (memory-bound, fusable).
+    """
+    vec = A.ndim == 1
+    A2 = A[:, None] if vec else A
+    m, n = A2.shape
+    m_pad = signs.shape[0]
+    if m_pad != m:
+        A2 = jnp.pad(A2, ((0, m_pad - m), (0, 0)))
+    HDx = hadamard_transform(signs[:, None].astype(A2.dtype) * A2, interpret=interpret)
+    out = HDx[rows] / jnp.sqrt(jnp.asarray(d, A2.dtype))
+    return out[:, 0] if vec else out

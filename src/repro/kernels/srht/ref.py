@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the SRHT kernels (recursive FWHT from repro.core)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.sketch import fwht
+
+__all__ = ["hadamard_ref", "srht_ref"]
+
+
+def hadamard_ref(x: jax.Array) -> jax.Array:
+    return fwht(x, axis=0)
+
+
+def srht_ref(A: jax.Array, signs: jax.Array, rows: jax.Array, d: int) -> jax.Array:
+    vec = A.ndim == 1
+    A2 = A[:, None] if vec else A
+    m = A2.shape[0]
+    m_pad = signs.shape[0]
+    if m_pad != m:
+        A2 = jnp.pad(A2, ((0, m_pad - m), (0, 0)))
+    out = fwht(signs[:, None].astype(A2.dtype) * A2)[rows] / jnp.sqrt(
+        jnp.asarray(d, A2.dtype)
+    )
+    return out[:, 0] if vec else out

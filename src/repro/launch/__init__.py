@@ -1,0 +1,7 @@
+"""Launchers: production meshes, the multi-pod dry-run, roofline report,
+and train/serve entry points."""
+from .hlo_stats import collective_stats, parse_shape_bytes
+from .mesh import HW, make_mesh, make_production_mesh
+
+__all__ = ["collective_stats", "parse_shape_bytes", "HW", "make_mesh",
+           "make_production_mesh"]

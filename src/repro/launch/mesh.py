@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Defined as functions (not module constants) so importing never touches jax
+device state.  Production target: TPU v5e pods — 16×16 = 256 chips per pod,
+2 pods = 512 chips for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh", "HW"]
+
+
+# v5e hardware constants for the roofline model.
+HW = {
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link (~per direction)
+    "hbm_bytes": 16e9,  # capacity per chip
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} "
+            "(dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before any jax import)"
+        )
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

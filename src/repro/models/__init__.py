@@ -1,0 +1,10 @@
+"""LM substrate: the ten assigned architectures on one pattern-scan stack."""
+from . import attention, common, mlp, moe, rglru, ssm, transformer
+from .transformer import (backbone, cache_axes, cache_shapes, decode_step,
+                          forward, init_cache, init_params, loss_fn,
+                          model_specs, params_axes, params_shapes, prefill)
+
+__all__ = ["attention", "common", "mlp", "moe", "rglru", "ssm", "transformer",
+           "backbone", "cache_axes", "cache_shapes", "decode_step", "forward",
+           "init_cache", "init_params", "loss_fn", "model_specs",
+           "params_axes", "params_shapes", "prefill"]

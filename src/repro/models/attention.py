@@ -1,0 +1,418 @@
+"""Attention mixers: blockwise flash attention (GQA / MQA / sliding-window /
+cross), qk-norm, and DeepSeek-style MLA with the weight-absorbed decode path.
+
+The train/prefill path is an online-softmax blockwise attention (flash
+attention expressed in jnp + lax.scan): O(qb·kvb) live scores instead of
+O(S²).  For sliding windows the inner scan runs over a *static* number of
+kv blocks selected with dynamic_slice — true sub-quadratic flops, which is
+what makes mixtral/recurrentgemma long_500k decode cells viable.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import MLAConfig, ModelConfig
+from .common import PSpec, apply_rope, make_rope, maybe_scan, rms_norm, constrain
+
+NEG_INF = -1e30
+
+
+def _pick_block(size: int, want: int) -> int:
+    b = min(want, size)
+    while size % b:
+        b -= 1
+    return max(b, 1)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, dk)
+    k: jax.Array,  # (B, Hkv, Skv, dk)
+    v: jax.Array,  # (B, Hkv, Skv, dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Blockwise online-softmax attention.  Returns (B, Hq, Sq, dv)."""
+    B, Hq, Sq, dk = q.shape
+    _, Hkv, Skv, _ = k.shape
+    dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(dk)
+
+    qb = _pick_block(Sq, q_block)
+    kvb = _pick_block(Skv, kv_block)
+    nq, nkv = Sq // qb, Skv // kvb
+
+    qg = q.reshape(B, Hkv, G, Sq, dk)
+    # scan over q blocks: (nq, B, Hkv, G, qb, dk)
+    qs = jnp.moveaxis(qg.reshape(B, Hkv, G, nq, qb, dk), 3, 0)
+
+    if window is not None:
+        n_win = min(nkv, -(-(window + qb) // kvb) + 1)
+    else:
+        n_win = nkv
+
+    kv_pos_base = jnp.arange(kvb)
+    q_pos_base = jnp.arange(qb)
+
+    def q_block_body(_, qi_and_q):
+        qi, q_i = qi_and_q
+        q_start = qi * qb + q_offset  # absolute position of q row 0
+
+        if window is not None:
+            first_needed = jnp.maximum(q_start - window + 1, 0) // kvb
+            start_blk = jnp.minimum(first_needed, nkv - n_win)
+        else:
+            start_blk = jnp.asarray(0, jnp.int32)
+
+        def kv_body(carry, j):
+            m, l, acc = carry
+            blk = start_blk + j
+            k_j = lax.dynamic_slice_in_dim(k, blk * kvb, kvb, axis=2)
+            v_j = lax.dynamic_slice_in_dim(v, blk * kvb, kvb, axis=2)
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", q_i, k_j, preferred_element_type=jnp.float32
+            ) * scale
+            q_pos = q_start + q_pos_base  # (qb,)
+            kv_pos = blk * kvb + kv_pos_base  # (kvb,)
+            mask = jnp.ones((qb, kvb), bool)
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd",
+                p.astype(v_j.dtype),
+                v_j,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, dv), jnp.float32)
+        (m, l, acc), _ = maybe_scan(
+            kv_body, (m0, l0, a0), jnp.arange(n_win, dtype=jnp.int32)
+        )
+        out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+        return None, out
+
+    _, outs = maybe_scan(
+        q_block_body, None, (jnp.arange(nq, dtype=jnp.int32), qs)
+    )
+    # (nq, B, Hkv, G, qb, dv) -> (B, Hq, Sq, dv)
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, Hkv, G, Sq, dv)
+    return out.reshape(B, Hq, Sq, dv).astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask):
+    """One-token attention.  q (B,Hq,dk); caches (B,Hkv,S,d*); mask (B,S)."""
+    B, Hq, dk = q.shape
+    Hkv = k_cache.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, dk)
+    s = jnp.einsum(
+        "bhgd,bhsd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) / math.sqrt(dk)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bhsd->bhgd",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, Hq, v_cache.shape[-1]).astype(v_cache.dtype)
+
+
+# ===========================================================================
+# GQA self-attention block
+# ===========================================================================
+
+
+def gqa_specs(cfg: ModelConfig) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "ln": PSpec((D,), ("embed",), "zeros"),
+        "wq": PSpec((D, H * hd), ("embed", "heads")),
+        "wk": PSpec((D, KV * hd), ("embed", "kv_heads")),
+        "wv": PSpec((D, KV * hd), ("embed", "kv_heads")),
+        "wo": PSpec((H * hd, D), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = PSpec((hd,), ("head_dim",), "zeros")
+        specs["k_norm"] = PSpec((hd,), ("head_dim",), "zeros")
+    return specs
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = make_rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_apply(p, x, cfg: ModelConfig, *, window=None, pos_offset=0):
+    """Full-sequence self-attention block (pre-norm, residual)."""
+    B, S, D = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    positions = pos_offset + jnp.arange(S)
+    q, k, v = _project_qkv(p, h, cfg, positions)
+    q = constrain(q, ("batch", "act_heads", "seq", None))
+    o = flash_attention(
+        q, k, v,
+        causal=True, window=window, q_offset=0,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return x + constrain(o @ p["wo"], ("batch", "seq", "act_embed"))
+
+
+def gqa_init_cache(cfg: ModelConfig, B: int, S: int, window, dtype):
+    L = min(S, window) if window else S
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((B, KV, L, hd), dtype),
+        "v": jnp.zeros((B, KV, L, hd), dtype),
+    }
+
+
+def gqa_cache_axes():
+    return {
+        "k": ("batch", "kv_heads", "cache_seq", "head_dim"),
+        "v": ("batch", "kv_heads", "cache_seq", "head_dim"),
+    }
+
+
+def gqa_decode(p, x, cache, step, cfg: ModelConfig, *, window=None):
+    """x (B, D), one token at absolute position ``step``."""
+    B, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, H, hd)
+    k = (h @ p["wk"]).reshape(B, KV, hd)
+    v = (h @ p["wv"]).reshape(B, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = make_rope(step[None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    L = cache["k"].shape[2]
+    slot = step % L if window else jnp.minimum(step, L - 1)
+    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k[:, :, None], slot, axis=2)
+    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v[:, :, None], slot, axis=2)
+    slots = jnp.arange(L)
+    valid = jnp.broadcast_to((slots <= step) | (step >= L), (B, L))
+    o = decode_attention(q, k_cache, v_cache, valid)
+    o = o.reshape(B, H * hd)
+    return x + o @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ===========================================================================
+# Cross-attention block (VLM): text queries attend to image patch embeddings
+# ===========================================================================
+
+
+def cross_specs(cfg: ModelConfig) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "ln": PSpec((D,), ("embed",), "zeros"),
+        "wq": PSpec((D, H * hd), ("embed", "heads")),
+        "wk": PSpec((D, KV * hd), ("embed", "kv_heads")),
+        "wv": PSpec((D, KV * hd), ("embed", "kv_heads")),
+        "wo": PSpec((H * hd, D), ("heads", "embed")),
+        "gate": PSpec((1,), (None,), "zeros"),  # tanh gate (llama-vision)
+        "k_norm": PSpec((hd,), ("head_dim",), "zeros"),
+        "q_norm": PSpec((hd,), ("head_dim",), "zeros"),
+    }
+
+
+def cross_apply(p, x, img, cfg: ModelConfig):
+    """x (B,S,D) text; img (B,P,D) precomputed patch embeddings (stub)."""
+    B, S, D = x.shape
+    P_img = img.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (img @ p["wk"]).reshape(B, P_img, KV, hd).transpose(0, 2, 1, 3)
+    v = (img @ p["wv"]).reshape(B, P_img, KV, hd).transpose(0, 2, 1, 3)
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    o = flash_attention(
+        q, k, v, causal=False,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return x + jnp.tanh(p["gate"]).astype(x.dtype) * (o @ p["wo"])
+
+
+def cross_decode(p, x, img, cfg: ModelConfig):
+    """One-token cross attention; img acts as a fixed kv cache."""
+    B, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = rms_norm((h @ p["wq"]).reshape(B, H, hd), p["q_norm"], cfg.norm_eps)
+    k = rms_norm(
+        (img @ p["wk"]).reshape(B, -1, KV, hd).transpose(0, 2, 1, 3),
+        p["k_norm"],
+        cfg.norm_eps,
+    )
+    v = (img @ p["wv"]).reshape(B, -1, KV, hd).transpose(0, 2, 1, 3)
+    valid = jnp.ones((B, k.shape[2]), bool)
+    o = decode_attention(q, k, v, valid).reshape(B, H * hd)
+    return x + jnp.tanh(p["gate"]).astype(x.dtype) * (o @ p["wo"])
+
+
+# ===========================================================================
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ===========================================================================
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    m: MLAConfig = cfg.mla
+    dq = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "ln": PSpec((D,), ("embed",), "zeros"),
+        "wq_a": PSpec((D, m.q_lora), ("embed", "lora")),
+        "q_ln": PSpec((m.q_lora,), ("lora",), "zeros"),
+        "wq_b": PSpec((m.q_lora, H * dq), ("lora", "heads")),
+        "wkv_a": PSpec((D, m.kv_lora + m.qk_rope_dim), ("embed", "lora")),
+        "kv_ln": PSpec((m.kv_lora,), ("lora",), "zeros"),
+        "wkv_b": PSpec(
+            (m.kv_lora, H * (m.qk_nope_dim + m.v_dim)), ("lora", "heads")
+        ),
+        "wo": PSpec((H * m.v_dim, D), ("heads", "embed")),
+    }
+
+
+def _mla_qkv(p, h, cfg: ModelConfig, positions):
+    B, S, D = h.shape
+    H = cfg.n_heads
+    m: MLAConfig = cfg.mla
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_dim
+
+    q = rms_norm(h @ p["wq_a"], p["q_ln"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(B, S, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    kv_a = h @ p["wkv_a"]  # (B, S, kv_lora + dr)
+    latent = rms_norm(kv_a[..., : m.kv_lora], p["kv_ln"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora :][:, None]  # (B, 1, S, dr) shared head
+
+    cos, sin = make_rope(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, pos_offset=0):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    m: MLAConfig = cfg.mla
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    positions = pos_offset + jnp.arange(S)
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, h, cfg, positions)
+
+    # Expand latent -> per-head k_nope, v (prefill/train path).
+    kv = (latent @ p["wkv_b"]).reshape(B, S, H, dn + dv).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, H, S, dr))], axis=-1
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = constrain(q, ("batch", "act_heads", "seq", None))
+    o = flash_attention(
+        q, k, v, causal=True,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * dv)
+    return x + constrain(o @ p["wo"], ("batch", "seq", "act_embed"))
+
+
+def mla_init_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    m: MLAConfig = cfg.mla
+    return {
+        "latent": jnp.zeros((B, S, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((B, S, m.qk_rope_dim), dtype),
+    }
+
+
+def mla_cache_axes():
+    return {
+        "latent": ("batch", "cache_seq", "lora"),
+        "k_rope": ("batch", "cache_seq", "head_dim"),
+    }
+
+
+def mla_decode(p, x, cache, step, cfg: ModelConfig):
+    """Weight-absorbed MLA decode: attention runs in latent space.
+
+    q̃ = q_nopeᵀ W_uk  (B,H,kv_lora);  scores = q̃·latentᵀ + q_rope·k_ropeᵀ;
+    ctx = attn·latent;  out_h = ctx·W_uv — per-step flops O(B·H·S·kv_lora)
+    instead of O(B·H·S·(dn+dv)·kv_lora/S...) of naive re-expansion.
+    """
+    B, D = x.shape
+    H = cfg.n_heads
+    m: MLAConfig = cfg.mla
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    q = rms_norm(h @ p["wq_a"], p["q_ln"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(B, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = make_rope(step[None], dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    kv_a = h @ p["wkv_a"]
+    latent_new = rms_norm(kv_a[..., : m.kv_lora], p["kv_ln"], cfg.norm_eps)
+    k_rope_new = apply_rope(kv_a[None, ..., m.kv_lora :], cos, sin)[0]
+
+    S = cache["latent"].shape[1]
+    slot = jnp.minimum(step, S - 1)
+    latent = lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent_new[:, None], slot, axis=1
+    )
+    k_rope = lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new[:, None], slot, axis=1
+    )
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora, H, dn + dv)
+    w_uk = wkv_b[..., :dn]  # (kv_lora, H, dn)
+    w_uv = wkv_b[..., dn:]  # (kv_lora, H, dv)
+
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope, w_uk)  # (B, H, kv_lora)
+    s = (
+        jnp.einsum("bhl,bsl->bhs", q_abs, latent, preferred_element_type=jnp.float32)
+        + jnp.einsum("bhr,bsr->bhs", q_rope, k_rope, preferred_element_type=jnp.float32)
+    ) / math.sqrt(dn + dr)
+    valid = jnp.broadcast_to(jnp.arange(S) <= step, (B, S))
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", probs.astype(latent.dtype), latent)
+    o = jnp.einsum("bhl,lhd->bhd", ctx, w_uv).reshape(B, H * dv)
+    return x + o @ p["wo"], {"latent": latent, "k_rope": k_rope}

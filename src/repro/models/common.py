@@ -1,0 +1,174 @@
+"""Shared model-building blocks: param-spec machinery, norms, rope, acts.
+
+Params are nested dicts of arrays.  Every init site declares a ``PSpec``
+(shape + logical axes + initializer); one traversal materializes arrays,
+another produces PartitionSpecs — so dry-run sharding never needs a real
+allocation and params/shardings can't drift apart.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+
+__all__ = [
+    "unrolled_scans",
+    "maybe_scan",
+    "PSpec",
+    "init_tree",
+    "axes_tree",
+    "shape_tree",
+    "rms_norm",
+    "make_rope",
+    "apply_rope",
+    "activation",
+    "constrain",
+    "DTYPES",
+]
+
+DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+    "float16": jnp.float16,
+}
+
+# When True, every model-internal lax.scan is fully unrolled.  The dry-run's
+# *cost artifacts* set this: XLA's cost analysis counts while-loop bodies
+# once regardless of trip count, so loop-free HLO is the only way to read
+# true flops/bytes/collectives out of the compiled module.  Production
+# artifacts keep scans rolled (small HLO, fast compiles).
+_UNROLL = False
+
+
+class unrolled_scans:
+    def __enter__(self):
+        global _UNROLL
+        self._prev = _UNROLL
+        _UNROLL = True
+
+    def __exit__(self, *exc):
+        global _UNROLL
+        _UNROLL = self._prev
+
+
+def scans_unrolled() -> bool:
+    return _UNROLL
+
+
+def maybe_scan(body, init, xs, length=None):
+    """lax.scan that honours the dry-run unroll flag."""
+    import jax.lax as lax
+
+    return lax.scan(body, init, xs, length=length, unroll=True if _UNROLL else 1)
+
+
+class PSpec(NamedTuple):
+    """Declarative parameter spec: shape, logical axes, init, dtype."""
+
+    shape: tuple
+    axes: tuple
+    init: str = "fan_in"  # 'fan_in' | 'zeros' | 'ones' | 'normal' | 'embed'
+    dtype: Any = None  # None -> model dtype
+
+
+def _is_pspec(x):
+    return isinstance(x, PSpec)
+
+
+def init_tree(specs, key: jax.Array, default_dtype):
+    """Materialize a PSpec tree into arrays (single key fold-in per leaf)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_pspec)
+    out = []
+    for i, spec in enumerate(leaves):
+        dtype = spec.dtype or default_dtype
+        k = jax.random.fold_in(key, i)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        elif spec.init == "normal":
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * 0.02).astype(dtype)
+        elif spec.init == "embed":
+            # 0.02-std (GPT/llama convention) — also keeps tied-embedding
+            # logits at an O(1) scale at init.
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * 0.02).astype(dtype)
+        elif spec.init == "fan_in":
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+        elif spec.init == "rglru_lambda":
+            # Griffin: a = sigmoid(Λ) uniform in [0.9, 0.999] -> Λ = logit(a)
+            u = jax.random.uniform(k, spec.shape, jnp.float32, 0.9, 0.999)
+            arr = jnp.log(u / (1 - u)).astype(jnp.float32)
+        elif spec.init == "ssm_a_log":
+            # Mamba2: A in [1, 16] -> log
+            u = jax.random.uniform(k, spec.shape, jnp.float32, 1.0, 16.0)
+            arr = jnp.log(u).astype(jnp.float32)
+        elif spec.init == "ssm_dt_bias":
+            # softplus^-1 of dt in [1e-3, 1e-1]
+            u = jax.random.uniform(k, spec.shape, jnp.float32, 1e-3, 1e-1)
+            arr = (u + jnp.log(-jnp.expm1(-u))).astype(jnp.float32)
+        else:
+            raise ValueError(f"unknown init {spec.init!r}")
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(specs):
+    """PSpec tree -> logical-axes tree (same structure)."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_pspec)
+
+
+def shape_tree(specs, default_dtype):
+    """PSpec tree -> ShapeDtypeStruct tree (for eval_shape-free dry runs)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        specs,
+        is_leaf=_is_pspec,
+    )
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * (1.0 + scale.astype(dt))
+
+
+def make_rope(positions, dim: int, theta: float, dtype=jnp.float32):
+    """positions (...,) -> (cos, sin) of shape (..., dim//2)."""
+    half = dim // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, d); cos/sin (S, d//2) or broadcastable.  Rotate-half form."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    while cos.ndim < x1.ndim:
+        cos, sin = cos[None], sin[None]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def activation(kind: str, h, g=None):
+    """Apply activation; ``g`` is the gate branch for GLU variants."""
+    if kind == "silu_glu":
+        return jax.nn.silu(h) * g
+    if kind == "gelu_glu":
+        return jax.nn.gelu(h) * g
+    if kind == "sq_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(f"unknown activation {kind!r}")

@@ -1,0 +1,35 @@
+"""Dense FFN block (gated-GLU / squared-ReLU variants)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import PSpec, activation, constrain, rms_norm
+
+GATED = {"silu_glu", "gelu_glu"}
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    specs = {
+        "ln": PSpec((D,), ("embed",), "zeros"),
+        "w_in": PSpec((D, F), ("embed", "mlp")),
+        "w_out": PSpec((F, D), ("mlp", "embed")),
+    }
+    if cfg.act in GATED:
+        specs["w_gate"] = PSpec((D, F), ("embed", "mlp"))
+    return specs
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_in"]
+    up = constrain(up, ("batch", "seq", "act_ff")) if up.ndim == 3 else up
+    if cfg.act in GATED:
+        act = activation(cfg.act, up, h @ p["w_gate"])
+    else:
+        act = activation(cfg.act, up)
+    out = act @ p["w_out"]
+    out = constrain(out, ("batch", "seq", "act_embed")) if out.ndim == 3 else out
+    return x + out

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: x -> [W_main -> causal conv -> RG-LRU] ⊙ GeLU(W_gate x) -> W_out.
+RG-LRU: r_t = σ(W_a u_t), i_t = σ(W_x u_t),
+        log a_t = -c · softplus(Λ) · r_t,
+        h_t = a_t h_{t-1} + √(1 − a_t²) · (i_t ⊙ u_t).
+
+Training uses an associative scan over (a_t, b_t) pairs — O(S log S) work,
+O(1)-state decode; this is why recurrentgemma runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .common import PSpec, constrain, rms_norm
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    R = cfg.d_rnn
+    W = cfg.rglru.conv_width
+    return {
+        "ln": PSpec((D,), ("embed",), "zeros"),
+        "w_main": PSpec((D, R), ("embed", "rnn")),
+        "w_gate": PSpec((D, R), ("embed", "rnn")),
+        "conv_w": PSpec((W, R), ("conv", "rnn")),
+        "conv_b": PSpec((R,), ("rnn",), "zeros"),
+        "rg_wa": PSpec((R, R), ("rnn", None)),
+        "rg_ba": PSpec((R,), (None,), "zeros"),
+        "rg_wx": PSpec((R, R), ("rnn", None)),
+        "rg_bx": PSpec((R,), (None,), "zeros"),
+        "lam": PSpec((R,), (None,), "rglru_lambda", jnp.float32),
+        "w_out": PSpec((R, D), ("rnn", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i]
+    return out + b
+
+
+def _gates(p, u, cfg: ModelConfig):
+    """u (..., R) -> (log_a, scaled_input) in f32."""
+    r = jax.nn.sigmoid((u @ p["rg_wa"]).astype(jnp.float32) + p["rg_ba"])
+    i = jax.nn.sigmoid((u @ p["rg_wx"]).astype(jnp.float32) + p["rg_bx"])
+    log_a = -cfg.rglru.c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = beta * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(p, x, cfg: ModelConfig, *, return_state=False, state0=None):
+    """Full-sequence Griffin recurrent block.  x (B, S, D)."""
+    B, S, D = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    u = _causal_conv(h @ p["w_main"], p["conv_w"], p["conv_b"])
+    u = constrain(u, ("batch", "seq", "act_ff"))
+    gate = jax.nn.gelu(h @ p["w_gate"])
+
+    a, b = _gates(p, u, cfg)  # (B,S,R) f32
+    if state0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * state0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = lax.associative_scan(combine, (a, b), axis=1)
+    y = (hseq.astype(x.dtype) * gate) @ p["w_out"]
+    out = x + constrain(y, ("batch", "seq", "act_embed"))
+    if return_state:
+        conv_tail = (h @ p["w_main"])[:, -(cfg.rglru.conv_width - 1):]
+        return out, (hseq[:, -1], conv_tail)
+    return out
+
+
+def rglru_init_cache(cfg: ModelConfig, B: int, dtype):
+    R, W = cfg.d_rnn, cfg.rglru.conv_width
+    return {
+        "h": jnp.zeros((B, R), jnp.float32),
+        "conv": jnp.zeros((B, W - 1, R), dtype),
+    }
+
+
+def rglru_cache_axes():
+    return {"h": ("batch", "rnn"), "conv": ("batch", "conv", "rnn")}
+
+
+def rglru_decode(p, x, cache, step, cfg: ModelConfig):
+    """One-token recurrent update.  x (B, D)."""
+    B, D = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    pre = h @ p["w_main"]
+    buf = jnp.concatenate([cache["conv"], pre[:, None]], axis=1)
+    u = jnp.einsum("bwc,wc->bc", buf, p["conv_w"]) + p["conv_b"]
+    gate = jax.nn.gelu(h @ p["w_gate"])
+
+    a, b = _gates(p, u, cfg)
+    h_new = a * cache["h"] + b
+    y = (h_new.astype(x.dtype) * gate) @ p["w_out"]
+    return x + y, {"h": h_new, "conv": buf[:, 1:]}

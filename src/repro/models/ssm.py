@@ -1,0 +1,220 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Train/prefill uses the chunked dual form: quadratic attention-like matmuls
+*within* chunks (MXU-friendly) and a parallel associative scan over chunk
+states — O(S·l) total instead of O(S²), which is what makes the 500k-token
+cell lowerable.  Decode carries the (B, H, P, N) recurrent state and a
+width-(w-1) conv tail — O(1) per token, no KV cache at all.
+
+Validated against a naive sequential recurrence oracle in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig, SSMConfig
+from .common import PSpec, constrain, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def ssd_specs(cfg: ModelConfig) -> dict:
+    s, d_inner, nh = _dims(cfg)
+    D, N, W = cfg.d_model, s.d_state, s.d_conv
+    return {
+        "ln": PSpec((D,), ("embed",), "zeros"),
+        "w_z": PSpec((D, d_inner), ("embed", "inner")),
+        "w_x": PSpec((D, d_inner), ("embed", "inner")),
+        "w_B": PSpec((D, N), ("embed", "state")),
+        "w_C": PSpec((D, N), ("embed", "state")),
+        "w_dt": PSpec((D, nh), ("embed", None)),
+        "conv_x": PSpec((W, d_inner), ("conv", "inner")),
+        "conv_B": PSpec((W, N), ("conv", "state")),
+        "conv_C": PSpec((W, N), ("conv", "state")),
+        "conv_b_x": PSpec((d_inner,), ("inner",), "zeros"),
+        "conv_b_B": PSpec((N,), ("state",), "zeros"),
+        "conv_b_C": PSpec((N,), ("state",), "zeros"),
+        "A_log": PSpec((nh,), (None,), "ssm_a_log", jnp.float32),
+        "D_skip": PSpec((nh,), (None,), "ones", jnp.float32),
+        "dt_bias": PSpec((nh,), (None,), "ssm_dt_bias", jnp.float32),
+        "norm": PSpec((d_inner,), ("inner",), "zeros"),
+        "w_out": PSpec((d_inner, D), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq: x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA):
+    """dA (..., l) -> (..., l, l): sum_{j<k<=i} dA_k, -inf above diagonal."""
+    l = dA.shape[-1]
+    cs = jnp.cumsum(dA, -1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """SSD dual form.
+
+    x (b,s,h,p)·dt-discretized inputs; dt (b,s,h); A (h,) negative;
+    B, C (b,s,n) shared across heads (n_groups=1).
+    Returns y (b,s,h,p) and the final state (b,h,p,n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    l = min(chunk, s)
+    while s % l:
+        l -= 1
+    nc = s // l
+
+    x_dt = x * dt[..., None]  # (b,s,h,p)
+    dA = dt * A  # (b,s,h)
+
+    xc = x_dt.reshape(b, nc, l, h, p)
+    dAc = dA.reshape(b, nc, l, h)
+    Bc = B.reshape(b, nc, l, n)
+    Cc = C.reshape(b, nc, l, n)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    L = jnp.exp(_segsum(jnp.moveaxis(dAc, -1, -2)))  # (b,nc,h,l,l)
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,nc,l,l)
+    M = G[:, :, None] * L  # (b,nc,h,l,l)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xc)
+
+    # ---- chunk states ----
+    dA_cum = jnp.cumsum(dAc, axis=2)  # (b,nc,l,h)
+    total = dA_cum[:, :, -1:]  # (b,nc,1,h)
+    decay_out = jnp.exp(total - dA_cum)  # decay from pos i to chunk end
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_out, xc)
+
+    # ---- inter-chunk associative scan: H_{c+1} = e^{total_c} H_c + S_c ----
+    chunk_decay = jnp.exp(total[:, :, 0])  # (b,nc,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), states.dtype)
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    a_all, s_all = lax.associative_scan(
+        combine, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0))
+    )
+    # state *entering* chunk c = scanned value of chunk c-1 (shift by one)
+    h_final = a_all[-1][..., None, None] * h0 + s_all[-1]
+    s_in = jnp.concatenate(
+        [h0[None], a_all[:-1, ..., None, None] * h0[None] + s_all[:-1]], axis=0
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (b,nc,h,p,n)
+
+    # ---- off-diagonal: contribution of the entering state ----
+    decay_in = jnp.exp(dA_cum)  # decay from chunk start to pos i
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, s_in, decay_in)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssd_apply(p, x, cfg: ModelConfig, *, return_state: bool = False, h0=None):
+    """Full-sequence Mamba2 block (pre-norm, residual)."""
+    s_cfg, d_inner, nh = _dims(cfg)
+    B_, S, D = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    z = h @ p["w_z"]
+    xin = _causal_conv(h @ p["w_x"], p["conv_x"], p["conv_b_x"])
+    Bv = _causal_conv(h @ p["w_B"], p["conv_B"], p["conv_b_B"])
+    Cv = _causal_conv(h @ p["w_C"], p["conv_C"], p["conv_b_C"])
+    dt = jax.nn.softplus(
+        (h @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+
+    xh = xin.reshape(B_, S, nh, s_cfg.head_dim).astype(jnp.float32)
+    xh = constrain(xh, ("batch", "seq", "act_heads", None))
+    dt = constrain(dt, ("batch", "seq", "act_heads"))
+    y, h_fin = ssd_chunked(
+        xh, dt, A, Bv.astype(jnp.float32), Cv.astype(jnp.float32),
+        s_cfg.chunk, h0=h0,
+    )
+    y = y + p["D_skip"][None, None, :, None] * xh
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + constrain(y @ p["w_out"], ("batch", "seq", "act_embed"))
+    if return_state:
+        conv_tail = {
+            "x": (h @ p["w_x"])[:, -(s_cfg.d_conv - 1):],
+            "B": (h @ p["w_B"])[:, -(s_cfg.d_conv - 1):],
+            "C": (h @ p["w_C"])[:, -(s_cfg.d_conv - 1):],
+        }
+        return out, (h_fin, conv_tail)
+    return out
+
+
+def ssd_init_cache(cfg: ModelConfig, B: int, dtype):
+    s, d_inner, nh = _dims(cfg)
+    W = s.d_conv
+    return {
+        "state": jnp.zeros((B, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((B, W - 1, d_inner), dtype),
+        "conv_B": jnp.zeros((B, W - 1, s.d_state), dtype),
+        "conv_C": jnp.zeros((B, W - 1, s.d_state), dtype),
+    }
+
+
+def ssd_cache_axes():
+    return {
+        "state": ("batch", None, "head_dim", "state"),
+        "conv_x": ("batch", "conv", "inner"),
+        "conv_B": ("batch", "conv", "state"),
+        "conv_C": ("batch", "conv", "state"),
+    }
+
+
+def _conv_step(tail, new, w, b):
+    """tail (B, W-1, C) history; new (B, C).  Returns (out, new_tail)."""
+    buf = jnp.concatenate([tail, new[:, None]], axis=1)  # (B, W, C)
+    out = jax.nn.silu(jnp.einsum("bwc,wc->bc", buf, w) + b)
+    return out, buf[:, 1:]
+
+
+def ssd_decode(p, x, cache, step, cfg: ModelConfig):
+    """One-token recurrent update.  x (B, D)."""
+    s_cfg, d_inner, nh = _dims(cfg)
+    B_, D = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    z = h @ p["w_z"]
+    xin, t_x = _conv_step(cache["conv_x"], h @ p["w_x"], p["conv_x"], p["conv_b_x"])
+    Bv, t_B = _conv_step(cache["conv_B"], h @ p["w_B"], p["conv_B"], p["conv_b_B"])
+    Cv, t_C = _conv_step(cache["conv_C"], h @ p["w_C"], p["conv_C"], p["conv_b_C"])
+    dt = jax.nn.softplus((h @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xh = xin.reshape(B_, nh, s_cfg.head_dim).astype(jnp.float32)
+    dA = jnp.exp(dt * A)  # (B, nh)
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bv.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv.astype(jnp.float32))
+    y = y + p["D_skip"][None, :, None] * xh
+    y = y.reshape(B_, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    new_cache = {"state": state, "conv_x": t_x, "conv_B": t_B, "conv_C": t_C}
+    return x + y @ p["w_out"], new_cache

@@ -1,0 +1,443 @@
+"""Unified decoder stack: pattern-scan over stacked layer params.
+
+A model = optional unrolled ``prefix`` layers + ``n_periods`` repetitions of
+a layer ``pattern`` (params stacked on a leading axis, executed via
+``lax.scan`` — HLO stays O(|pattern|) regardless of depth, which keeps
+512-device SPMD compiles tractable) + optional unrolled ``suffix``.
+
+Public entry points:
+  model_specs / init_params / params_axes / params_shapes
+  forward          — full-sequence logits-producing pass (train/eval)
+  loss_fn          — forward + seq-chunked softmax-xent (logits never
+                     materialized at full (B,S,V))
+  prefill          — forward that also builds the serving cache
+  decode_step      — one-token step updating the cache
+  init_cache / cache_axes / cache_shapes
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import LayerSpec, ModelConfig
+from . import attention as attn
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import (
+    DTYPES,
+    PSpec,
+    axes_tree,
+    constrain,
+    init_tree,
+    maybe_scan,
+    rms_norm,
+    shape_tree,
+)
+
+# ===========================================================================
+# Param specs
+# ===========================================================================
+
+
+def layer_specs(cfg: ModelConfig, spec: LayerSpec) -> dict:
+    if spec.mixer == "attn":
+        d = {"mixer": attn.gqa_specs(cfg)}
+    elif spec.mixer == "mla":
+        d = {"mixer": attn.mla_specs(cfg)}
+    elif spec.mixer == "cross_attn":
+        d = {"mixer": attn.cross_specs(cfg)}
+    elif spec.mixer == "ssd":
+        d = {"mixer": ssm_mod.ssd_specs(cfg)}
+    elif spec.mixer == "rglru":
+        d = {"mixer": rglru_mod.rglru_specs(cfg)}
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer!r}")
+    if spec.ffn:
+        d["ffn"] = moe_mod.moe_specs(cfg) if spec.moe else mlp_mod.mlp_specs(cfg)
+    return d
+
+
+def _stack_specs(specs, n: int):
+    return jax.tree.map(
+        lambda s: PSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab
+    specs: dict[str, Any] = {}
+    if cfg.frontend == "token" or cfg.frontend == "vision":
+        specs["embed"] = PSpec((V, D), ("vocab", "embed"), "embed")
+    # 'frames' frontend: inputs arrive as precomputed (B,S,D) embeddings (stub)
+    specs["prefix"] = [layer_specs(cfg, s) for s in cfg.prefix]
+    specs["pattern"] = [
+        _stack_specs(layer_specs(cfg, s), cfg.n_periods) for s in cfg.pattern
+    ]
+    specs["suffix"] = [layer_specs(cfg, s) for s in cfg.suffix]
+    specs["final_ln"] = PSpec((D,), ("embed",), "zeros")
+    if not cfg.tie_embeddings:
+        specs["head"] = PSpec((D, V), ("embed", "vocab"))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return init_tree(model_specs(cfg), key, DTYPES[cfg.dtype])
+
+
+def params_axes(cfg: ModelConfig):
+    return axes_tree(model_specs(cfg))
+
+
+def params_shapes(cfg: ModelConfig):
+    return shape_tree(model_specs(cfg), DTYPES[cfg.dtype])
+
+
+# ===========================================================================
+# Layer application
+# ===========================================================================
+
+
+def apply_layer(p, x, cfg: ModelConfig, spec: LayerSpec, img=None, pos_offset=0):
+    """Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mixer == "attn":
+        x = attn.gqa_apply(p["mixer"], x, cfg, window=spec.window, pos_offset=pos_offset)
+    elif spec.mixer == "mla":
+        x = attn.mla_apply(p["mixer"], x, cfg, pos_offset=pos_offset)
+    elif spec.mixer == "cross_attn":
+        x = attn.cross_apply(p["mixer"], x, img, cfg)
+    elif spec.mixer == "ssd":
+        x = ssm_mod.ssd_apply(p["mixer"], x, cfg)
+    elif spec.mixer == "rglru":
+        x = rglru_mod.rglru_apply(p["mixer"], x, cfg)
+    if spec.ffn:
+        if spec.moe:
+            x, aux = moe_mod.moe_apply(p["ffn"], x, cfg, return_aux=True)
+        else:
+            x = mlp_mod.mlp_apply(p["ffn"], x, cfg)
+    return x, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # 'full': save only block inputs
+
+
+# ===========================================================================
+# Forward (train / eval)
+# ===========================================================================
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    dtype = DTYPES[cfg.dtype]
+    if cfg.frontend == "frames":
+        x = batch["embeds"].astype(dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+    img = batch.get("image_embeds")
+    if img is not None:
+        img = img.astype(dtype)
+    return constrain(x, ("batch", "seq", "act_embed")), img
+
+
+def backbone(cfg: ModelConfig, params, x, img=None):
+    """Embeddings -> final hidden states.  Returns (x, total_aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for spec, p in zip(cfg.prefix, params["prefix"]):
+        x, aux = apply_layer(p, x, cfg, spec, img=img)
+        aux_total += aux
+
+    if cfg.n_periods:
+        def period_body(carry, period_params):
+            h, aux_acc = carry
+            for i, spec in enumerate(cfg.pattern):
+                h, aux = apply_layer(period_params[i], h, cfg, spec, img=img)
+                aux_acc += aux
+            h = constrain(h, ("batch", "seq", "act_embed"))
+            return (h, aux_acc), None
+
+        body = _remat(period_body, cfg)
+        (x, aux_total), _ = maybe_scan(body, (x, aux_total), params["pattern"])
+
+    for spec, p in zip(cfg.suffix, params["suffix"]):
+        x, aux = apply_layer(p, x, cfg, spec, img=img)
+        aux_total += aux
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, aux_total
+
+
+def _head_weight(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def forward(cfg: ModelConfig, params, batch):
+    """Full logits (careful: (B,S,V) — use loss_fn for training)."""
+    x, img = _embed_inputs(cfg, params, batch)
+    x, _ = backbone(cfg, params, x, img)
+    return (x @ _head_weight(cfg, params)).astype(jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Seq-chunked softmax cross-entropy.  Returns (loss, metrics)."""
+    x, img = _embed_inputs(cfg, params, batch)
+    x, aux = backbone(cfg, params, x, img)
+    w = _head_weight(cfg, params)
+    labels = batch["labels"]
+    B, S = labels.shape
+
+    chunk = cfg.loss_chunk or S
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+
+    xc = jnp.moveaxis(x.reshape(B, nc, chunk, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    def chunk_loss(carry, sl):
+        xs, ls = sl
+        logits = (xs @ w).astype(jnp.float32)  # (B, chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - ll), None
+
+    total, _ = maybe_scan(jax.checkpoint(chunk_loss), jnp.zeros((), jnp.float32), (xc, lc))
+    loss = total / (B * S) + aux
+    return loss, {"ce": total / (B * S), "aux": aux}
+
+
+# ===========================================================================
+# Serving: prefill + decode
+# ===========================================================================
+
+
+def _layer_cache_shape(cfg: ModelConfig, spec: LayerSpec, B: int, S: int, dtype):
+    if spec.mixer == "attn":
+        return attn.gqa_init_cache(cfg, B, S, spec.window, dtype)
+    if spec.mixer == "mla":
+        return attn.mla_init_cache(cfg, B, S, dtype)
+    if spec.mixer == "ssd":
+        return ssm_mod.ssd_init_cache(cfg, B, dtype)
+    if spec.mixer == "rglru":
+        return rglru_mod.rglru_init_cache(cfg, B, dtype)
+    if spec.mixer == "cross_attn":
+        return {}  # image embeds act as the (static) cache
+    raise ValueError(spec.mixer)
+
+
+def _layer_cache_axes(spec: LayerSpec):
+    if spec.mixer == "attn":
+        return attn.gqa_cache_axes()
+    if spec.mixer == "mla":
+        return attn.mla_cache_axes()
+    if spec.mixer == "ssd":
+        return ssm_mod.ssd_cache_axes()
+    if spec.mixer == "rglru":
+        return rglru_mod.rglru_cache_axes()
+    if spec.mixer == "cross_attn":
+        return {}
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int):
+    dtype = DTYPES[cfg.dtype]
+    stack = lambda tree: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), tree
+    )
+    return {
+        "prefix": [_layer_cache_shape(cfg, s, B, S, dtype) for s in cfg.prefix],
+        "pattern": [
+            stack(_layer_cache_shape(cfg, s, B, S, dtype)) for s in cfg.pattern
+        ],
+        "suffix": [_layer_cache_shape(cfg, s, B, S, dtype) for s in cfg.suffix],
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    stack = lambda tree: jax.tree.map(
+        lambda axes: ("layers",) + axes,
+        tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    return {
+        "prefix": [_layer_cache_axes(s) for s in cfg.prefix],
+        "pattern": [stack(_layer_cache_axes(s)) for s in cfg.pattern],
+        "suffix": [_layer_cache_axes(s) for s in cfg.suffix],
+    }
+
+
+def cache_shapes(cfg: ModelConfig, B: int, S: int):
+    return jax.eval_shape(lambda: init_cache(cfg, B, S))
+
+
+def _decode_layer(p, x, c, step, cfg: ModelConfig, spec: LayerSpec, img=None):
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mixer == "attn":
+        x, c = attn.gqa_decode(p["mixer"], x, c, step, cfg, window=spec.window)
+    elif spec.mixer == "mla":
+        x, c = attn.mla_decode(p["mixer"], x, c, step, cfg)
+    elif spec.mixer == "ssd":
+        x, c = ssm_mod.ssd_decode(p["mixer"], x, c, step, cfg)
+    elif spec.mixer == "rglru":
+        x, c = rglru_mod.rglru_decode(p["mixer"], x, c, step, cfg)
+    elif spec.mixer == "cross_attn":
+        x = attn.cross_decode(p["mixer"], x, img, cfg)
+    if spec.ffn:
+        if spec.moe:
+            x, aux = moe_mod.moe_apply(p["ffn"], x, cfg, return_aux=True)
+        else:
+            x = mlp_mod.mlp_apply(p["ffn"], x, cfg)
+    del aux
+    return x, c
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, step, embeds=None, img=None):
+    """One decoding step.
+
+    tokens (B,) int32 (or ``embeds`` (B,D) for the frames frontend);
+    ``step`` scalar int32 = absolute position being written.
+    Returns (logits (B,V) f32, new_cache).
+    """
+    dtype = DTYPES[cfg.dtype]
+    if cfg.frontend == "frames":
+        x = embeds.astype(dtype)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+
+    new_prefix = []
+    for spec, p, c in zip(cfg.prefix, params["prefix"], cache["prefix"]):
+        x, c2 = _decode_layer(p, x, c, step, cfg, spec, img=img)
+        new_prefix.append(c2)
+
+    new_pattern = cache["pattern"]
+    if cfg.n_periods:
+        def period_body(h, pc):
+            period_params, period_cache = pc
+            new_c = []
+            for i, spec in enumerate(cfg.pattern):
+                h, c2 = _decode_layer(
+                    period_params[i], h, period_cache[i], step, cfg, spec, img=img
+                )
+                new_c.append(c2)
+            return h, new_c
+
+        x, new_pattern = maybe_scan(
+            period_body, x, (params["pattern"], cache["pattern"])
+        )
+
+    new_suffix = []
+    for spec, p, c in zip(cfg.suffix, params["suffix"], cache["suffix"]):
+        x, c2 = _decode_layer(p, x, c, step, cfg, spec, img=img)
+        new_suffix.append(c2)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x @ _head_weight(cfg, params)).astype(jnp.float32)
+    new_cache = {"prefix": new_prefix, "pattern": new_pattern, "suffix": new_suffix}
+    return logits, new_cache
+
+
+def _prefill_layer(p, x, cfg, spec, S_cache, img=None):
+    """Apply layer over the full prompt and build its cache entry."""
+    dtype = DTYPES[cfg.dtype]
+    B, S, D = x.shape
+    if spec.mixer in ("attn", "mla"):
+        # Run the standard layer, then recompute cache projections (cheap
+        # relative to attention itself; keeps the blockwise path untouched).
+        if spec.mixer == "attn":
+            h = rms_norm(x, p["mixer"]["ln"], cfg.norm_eps)
+            positions = jnp.arange(S)
+            k, v = attn._project_qkv(p["mixer"], h, cfg, positions)[1:]
+            L = min(S_cache, spec.window) if spec.window else S_cache
+            c = attn.gqa_init_cache(cfg, B, S_cache, spec.window, dtype)
+            take = min(S, L)
+            idx = (jnp.arange(S - take, S)) % L
+            c["k"] = c["k"].at[:, :, idx].set(k[:, :, S - take :].astype(dtype))
+            c["v"] = c["v"].at[:, :, idx].set(v[:, :, S - take :].astype(dtype))
+            x = attn.gqa_apply(p["mixer"], x, cfg, window=spec.window)
+        else:
+            h = rms_norm(x, p["mixer"]["ln"], cfg.norm_eps)
+            kv_a = h @ p["mixer"]["wkv_a"]
+            m = cfg.mla
+            latent = rms_norm(kv_a[..., : m.kv_lora], p["mixer"]["kv_ln"], cfg.norm_eps)
+            cos, sin = attn.make_rope(jnp.arange(S), m.qk_rope_dim, cfg.rope_theta)
+            k_rope = attn.apply_rope(kv_a[:, None, :, m.kv_lora :], cos, sin)[:, 0]
+            c = attn.mla_init_cache(cfg, B, S_cache, dtype)
+            take = min(S, S_cache)
+            c["latent"] = c["latent"].at[:, :take].set(latent[:, :take].astype(dtype))
+            c["k_rope"] = c["k_rope"].at[:, :take].set(k_rope[:, :take].astype(dtype))
+            x = attn.mla_apply(p["mixer"], x, cfg)
+    elif spec.mixer == "ssd":
+        x, (state, tail) = ssm_mod.ssd_apply(p["mixer"], x, cfg, return_state=True)
+        c = {
+            "state": state,
+            "conv_x": tail["x"].astype(dtype),
+            "conv_B": tail["B"].astype(dtype),
+            "conv_C": tail["C"].astype(dtype),
+        }
+    elif spec.mixer == "rglru":
+        x, (hstate, tail) = rglru_mod.rglru_apply(p["mixer"], x, cfg, return_state=True)
+        c = {"h": hstate, "conv": tail.astype(dtype)}
+    elif spec.mixer == "cross_attn":
+        x = attn.cross_apply(p["mixer"], x, img, cfg)
+        c = {}
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn:
+        if spec.moe:
+            x, aux = moe_mod.moe_apply(p["ffn"], x, cfg, return_aux=True)
+        else:
+            x = mlp_mod.mlp_apply(p["ffn"], x, cfg)
+    del aux
+    return x, c
+
+
+def prefill(cfg: ModelConfig, params, batch, S_cache: int | None = None):
+    """Process the prompt; returns (last-token logits (B,V), cache)."""
+    x, img = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    S_cache = S_cache or S
+
+    new_prefix = []
+    for spec, p in zip(cfg.prefix, params["prefix"]):
+        x, c = _prefill_layer(p, x, cfg, spec, S_cache, img=img)
+        new_prefix.append(c)
+
+    new_pattern = []
+    if cfg.n_periods:
+        def period_body(h, period_params):
+            cs = []
+            for i, spec in enumerate(cfg.pattern):
+                h, c = _prefill_layer(period_params[i], h, cfg, spec, S_cache, img=img)
+                cs.append(c)
+            h = constrain(h, ("batch", "seq", "act_embed"))
+            return h, cs
+
+        x, new_pattern = maybe_scan(
+            _remat(period_body, cfg) if cfg.remat != "none" else period_body,
+            x,
+            params["pattern"],
+        )
+
+    new_suffix = []
+    for spec, p in zip(cfg.suffix, params["suffix"]):
+        x, c = _prefill_layer(p, x, cfg, spec, S_cache, img=img)
+        new_suffix.append(c)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x[:, -1] @ _head_weight(cfg, params)).astype(jnp.float32)
+    cache = {"prefix": new_prefix, "pattern": new_pattern, "suffix": new_suffix}
+    return logits, cache

@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cast_params, global_norm, lr_at
+from .compression import CompressionConfig, compress_state_init, sketched_psum_grads
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cast_params", "global_norm",
+    "lr_at", "CompressionConfig", "compress_state_init", "sketched_psum_grads",
+]

@@ -1,0 +1,26 @@
+from . import checkpoint, elastic, loop, serve, step
+from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .elastic import rebalance_microbatch, restore_elastic
+from .loop import train_loop
+from .serve import generate
+from .step import (
+    TrainState,
+    batch_pspec,
+    init_train_state,
+    jit_train_step,
+    make_decode_step,
+    make_dp_train_step,
+    make_prefill_step,
+    make_train_step,
+    state_pspecs,
+    state_shapes,
+)
+
+__all__ = [
+    "checkpoint", "elastic", "loop", "serve", "step",
+    "AsyncCheckpointer", "latest_step", "restore", "save",
+    "rebalance_microbatch", "restore_elastic", "train_loop", "generate",
+    "TrainState", "batch_pspec", "init_train_state", "jit_train_step",
+    "make_decode_step", "make_dp_train_step", "make_prefill_step",
+    "make_train_step", "state_pspecs", "state_shapes",
+]

@@ -1,0 +1,163 @@
+"""Fault-tolerant checkpointing.
+
+- Atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` into place; a
+  crash mid-write never corrupts the latest checkpoint.
+- Manifest: ``manifest.json`` records step, wall time and the tree paths,
+  so restore can validate structure before touching device memory.
+- Async: ``AsyncCheckpointer`` snapshots to host (blocking only on
+  device->host copy) and writes in a worker thread — training resumes
+  while bytes hit disk.
+- Elastic restore: arrays are loaded on host and ``device_put`` against
+  the *target* shardings — the restoring job may use a different mesh
+  shape or device count than the writer (see repro.train.elastic).
+- keep_n garbage collection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    """Blocking atomic save.  Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    named, _ = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in named.items()}
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}.{os.getpid()}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **host)
+    manifest = {
+        "step": int(step),
+        "time": time.time(),
+        "keys": sorted(host.keys()),
+        "nbytes": int(sum(a.nbytes for a in host.values())),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        _rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := _STEP_RE.match(d)) and os.path.exists(
+            os.path.join(ckpt_dir, d, "manifest.json")
+        )
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, target, step: int | None = None, shardings=None):
+    """Restore into the structure of ``target`` (arrays or ShapeDtypeStructs).
+
+    ``shardings``: optional matching pytree of Shardings for elastic
+    placement on a (possibly different) mesh.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    named_target, treedef = _flatten(target)
+    missing = set(named_target) - set(manifest["keys"])
+    if missing:
+        raise ValueError(f"checkpoint at step {step} missing keys: {sorted(missing)[:5]}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    if shardings is not None:
+        named_shard, _ = _flatten(shardings)
+    leaves = []
+    for key in named_target:
+        arr = data[key]
+        tgt = named_target[key]
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs target {tgt.shape}"
+            )
+        arr = arr.astype(tgt.dtype)
+        if shardings is not None:
+            leaves.append(jax.device_put(arr, named_shard[key]))
+        else:
+            leaves.append(jnp.asarray(arr))
+    ordered = [leaves[list(named_target).index(k)] for k in named_target]
+    return jax.tree_util.tree_unflatten(treedef, ordered), step
+
+
+def _rmtree(path):
+    for root, dirs, files in os.walk(path, topdown=False):
+        for f in files:
+            os.remove(os.path.join(root, f))
+        for d in dirs:
+            os.rmdir(os.path.join(root, d))
+    os.rmdir(path)
+
+
+def gc_checkpoints(ckpt_dir: str, keep_n: int = 3):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(m.group(1)) for d in os.listdir(ckpt_dir) if (m := _STEP_RE.match(d))
+    )
+    for s in steps[:-keep_n]:
+        _rmtree(os.path.join(ckpt_dir, f"step_{s}"))
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host + background-thread writer with keep_n GC."""
+
+    def __init__(self, ckpt_dir: str, keep_n: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_n = keep_n
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Exception | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save(self.ckpt_dir, step, tree)
+                gc_checkpoints(self.ckpt_dir, self.keep_n)
+            except Exception as e:  # surfaced on next submit/finalize
+                self._err = e
+
+    def submit(self, step: int, tree):
+        if self._err:
+            raise self._err
+        host = jax.tree.map(lambda x: np.asarray(x), tree)  # sync snapshot
+        self._q.put((int(step), host))
+
+    def finalize(self):
+        self._q.put(None)
+        self._thread.join()
+        if self._err:
+            raise self._err

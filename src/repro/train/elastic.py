@@ -1,0 +1,70 @@
+"""Elastic scaling + failure handling.
+
+Node failure / preemption model (documented for 1000+-node deployments):
+
+1. **Checkpoint/restart** is the base mechanism: `AsyncCheckpointer`
+   writes atomically every `ckpt_every` steps; on restart the launcher
+   calls `restore_elastic` with whatever mesh the *surviving* slice
+   supports.  The data pipeline is stateless-indexable (`batch_at(step)`),
+   so the stream resumes bit-identically — no data-order drift.
+
+2. **Elastic re-mesh**: checkpoints store unsharded host arrays; restore
+   `device_put`s them against shardings derived from the *new* mesh.  Any
+   (data × model) factorization whose axis sizes divide the weight dims
+   works — e.g. dropping from (2,16,16) to (16,16) after losing a pod, or
+   halving the data axis.  Global batch is preserved by raising
+   grad-accumulation microbatches (`rebalance_microbatch`).
+
+3. **Straggler mitigation**: synchronous SPMD steps are gang-scheduled; a
+   straggling host stalls the psum.  The practical levers we implement:
+   (a) deterministic per-step data indexing lets any host be replaced
+   without rewinding the stream; (b) checkpoint cadence bounds lost work;
+   (c) the sketched-compression DP path shrinks all-reduce payloads by
+   `ratio`, cutting the collective tail that stragglers amplify.
+
+On real TPU fleets, slice failure detection + re-scheduling is the
+platform's job (GKE/Borg); this module owns the state logistics.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..configs.base import ModelConfig
+from ..sharding import tree_pspecs
+from . import checkpoint as ckpt_lib
+from .step import TrainState, state_pspecs, state_shapes
+
+__all__ = ["restore_elastic", "rebalance_microbatch"]
+
+
+def restore_elastic(
+    ckpt_dir: str,
+    cfg: ModelConfig,
+    mesh: Mesh,
+    step: int | None = None,
+    rules=None,
+):
+    """Restore a TrainState checkpoint onto an arbitrary new mesh."""
+    shapes = state_shapes(cfg)
+    pspecs = state_pspecs(cfg, mesh, rules)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    state, found = ckpt_lib.restore(ckpt_dir, shapes, step=step, shardings=shardings)
+    return state, found
+
+
+def rebalance_microbatch(global_batch: int, old_dp: int, new_dp: int, old_micro: int):
+    """Keep the global batch fixed when the DP world size changes.
+
+    per-device batch = global/(dp·micro); hold global fixed by scaling the
+    microbatch count inversely with dp.
+    """
+    total_micro_tokens = global_batch // old_dp // old_micro
+    new_micro = max(1, global_batch // new_dp // max(total_micro_tokens, 1))
+    while global_batch % (new_dp * new_micro):
+        new_micro += 1
+    return new_micro

@@ -1,0 +1,64 @@
+"""Training driver: resume -> step loop -> async checkpoints -> metrics."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..data import SyntheticConfig, batch_at
+from ..optim import AdamWConfig
+from . import checkpoint as ckpt_lib
+from .step import TrainState, init_train_state, make_train_step
+
+__all__ = ["train_loop"]
+
+
+def train_loop(
+    cfg: ModelConfig,
+    data_cfg: SyntheticConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    steps: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    keep_n: int = 3,
+    n_micro: int = 1,
+    log_every: int = 10,
+    seed: int = 0,
+    log=print,
+):
+    """Single-process training loop (examples/tests; launch/train.py adds
+    the mesh).  Resumes from the latest checkpoint if one exists."""
+    state = init_train_state(cfg, jax.random.key(seed))
+    start = 0
+    writer = None
+    if ckpt_dir:
+        found = ckpt_lib.latest_step(ckpt_dir)
+        if found is not None:
+            state, start = ckpt_lib.restore(ckpt_dir, state, step=found)
+            log(f"[resume] restored step {start} from {ckpt_dir}")
+        writer = ckpt_lib.AsyncCheckpointer(ckpt_dir, keep_n=keep_n)
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, n_micro=n_micro), donate_argnums=0)
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        batch = batch_at(data_cfg, step)
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % log_every == 0 or step + 1 == steps:
+            loss = float(metrics["loss"])
+            losses.append((step + 1, loss))
+            dt = (time.time() - t0) / max(step + 1 - start, 1)
+            log(
+                f"step {step+1:5d} loss {loss:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"lr {float(metrics['lr']):.2e} ({dt*1e3:.0f} ms/step)"
+            )
+        if writer and (step + 1) % ckpt_every == 0:
+            writer.submit(step + 1, state)
+    if writer:
+        writer.submit(steps, state)
+        writer.finalize()
+    return state, losses

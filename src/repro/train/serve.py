@@ -1,0 +1,47 @@
+"""Batched serving: prefill a prompt batch, then greedy/temperature decode."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import transformer as tfm
+
+__all__ = ["generate"]
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_new"))
+def _decode_loop(cfg: ModelConfig, params, cache, first_tokens, start, max_new, key):
+    def body(carry, _):
+        tokens, cache, step, key = carry
+        logits, cache = tfm.decode_step(cfg, params, cache, tokens, step)
+        key, sub = jax.random.split(key)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, cache, step + 1, key), nxt
+
+    (_, cache, _, _), out = jax.lax.scan(
+        body, (first_tokens, cache, start, key), None, length=max_new
+    )
+    return out.T, cache  # (B, max_new)
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompts: jax.Array,  # (B, S_prompt) int32
+    *,
+    max_new: int = 32,
+    cache_len: int | None = None,
+    seed: int = 0,
+):
+    """Prefill + greedy decode.  Returns (B, max_new) generated tokens."""
+    B, S = prompts.shape
+    cache_len = cache_len or (S + max_new)
+    logits, cache = tfm.prefill(cfg, params, {"tokens": prompts}, S_cache=cache_len)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out, _ = _decode_loop(
+        cfg, params, cache, first, jnp.asarray(S, jnp.int32), max_new, jax.random.key(seed)
+    )
+    return jnp.concatenate([first[:, None], out[:, :-1]], axis=1)

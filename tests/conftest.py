@@ -1,0 +1,9 @@
+"""Test config: f64 for the numerics of the paper's solvers.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests see 1 device; multi-device behaviour is tested via subprocesses
+(test_multidevice.py) and the dry-run.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

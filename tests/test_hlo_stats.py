@@ -1,0 +1,41 @@
+"""HLO collective parser unit tests."""
+from repro.launch.hlo_stats import collective_stats, parse_shape_bytes
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert parse_shape_bytes("bf16[8]") == 16
+    assert parse_shape_bytes("(f32[4], bf16[2,2])") == 16 + 8
+
+
+def test_all_gather_line():
+    line = ("%all-gather = f32[256,128]{1,0} all-gather(%param.1), channel_id=1, "
+            "replica_groups=[4,4]<=[4,4]T(1,0), dimensions={0}, use_global_device_ids=true")
+    st = collective_stats(line)
+    assert st["by_kind"]["all-gather"]["count"] == 1
+    expect = 256 * 128 * 4 * (3 / 4)
+    assert abs(st["total_bytes"] - expect) < 1
+
+
+def test_all_reduce_and_permute():
+    text = """
+  %all-reduce.3 = bf16[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %collective-permute.1 = f32[64,64]{1,0} collective-permute(%y), source_target_pairs={{0,1},{1,0}}
+"""
+    st = collective_stats(text)
+    ar = st["by_kind"]["all-reduce"]["bytes"]
+    cp = st["by_kind"]["collective-permute"]["bytes"]
+    assert abs(ar - 2 * 1024 * 2 * (7 / 8)) < 1
+    assert cp == 64 * 64 * 4
+
+
+def test_reduce_scatter():
+    line = ("%reduce-scatter = f32[32,16]{1,0} reduce-scatter(%z), "
+            "replica_groups=[1,8]<=[8], dimensions={1}, to_apply=%add")
+    st = collective_stats(line)
+    assert abs(st["total_bytes"] - 32 * 16 * 4 * 7) < 1
+
+
+def test_ignores_non_collectives():
+    text = "%add.5 = f32[128]{0} add(%a, %b)\n%dot = f32[8,8]{1,0} dot(%c, %d)"
+    assert collective_stats(text)["total_bytes"] == 0

@@ -1,0 +1,75 @@
+"""Per-kernel allclose vs ref.py oracles — shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import (
+    countsketch_apply, countsketch_ref,
+    fused_gaussian_ref, fused_gaussian_sketch, gaussian_matrix_ref,
+    hadamard_transform, sketch_matmul, sketch_matmul_ref, srht_apply,
+)
+from repro.kernels.srht.ref import hadamard_ref, srht_ref
+
+
+def _tol(dtype):
+    return dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,n,d", [(1000, 100, 64), (513, 7, 200),
+                                   (4096, 256, 512), (300, 1, 33), (8, 128, 8)])
+def test_countsketch(m, n, d, dtype):
+    A = jax.random.normal(jax.random.key(1), (m, n), dtype)
+    h = jax.random.randint(jax.random.key(2), (m,), 0, d, dtype=jnp.int32)
+    s = jax.random.rademacher(jax.random.key(3), (m,), dtype)
+    got = countsketch_apply(A, h, s, d, interpret=True).astype(jnp.float32)
+    want = countsketch_ref(A.astype(jnp.float32), h, s.astype(jnp.float32), d)
+    assert got.shape == want.shape
+    assert jnp.allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("m", [8, 64, 512, 2048, 8192])
+@pytest.mark.parametrize("n", [1, 5, 130])
+def test_hadamard(m, n):
+    x = jax.random.normal(jax.random.key(m + n), (m, n), jnp.float32)
+    got = hadamard_transform(x, interpret=True)
+    want = hadamard_ref(x)
+    assert jnp.allclose(got, want, rtol=2e-4, atol=2e-3 * m ** 0.5)
+
+
+@pytest.mark.parametrize("m,n,d", [(1000, 37, 256), (4096, 128, 512)])
+def test_srht(m, n, d):
+    m_pad = 1 << (m - 1).bit_length()
+    A = jax.random.normal(jax.random.key(0), (m, n), jnp.float32)
+    signs = jax.random.rademacher(jax.random.key(1), (m_pad,), jnp.float32)
+    rows = jax.random.choice(jax.random.key(2), m_pad, (d,), replace=False)
+    got = srht_apply(A, signs, rows, d, interpret=True)
+    want = srht_ref(A, signs, rows, d)
+    assert jnp.allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("d,m,n", [(64, 1000, 100), (200, 513, 7), (128, 2048, 1)])
+def test_sketch_matmul(d, m, n, dtype):
+    S = jax.random.normal(jax.random.key(1), (d, m), dtype)
+    A = jax.random.normal(jax.random.key(2), (m, n), dtype)
+    got = sketch_matmul(S, A, interpret=True).astype(jnp.float32)
+    want = sketch_matmul_ref(S.astype(jnp.float32), A.astype(jnp.float32))
+    tol = dict(rtol=5e-2, atol=2.0) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-3)
+    assert jnp.allclose(got, want, **tol)
+
+
+@pytest.mark.parametrize("d,m,n", [(64, 500, 33), (256, 1024, 130), (33, 100, 1)])
+def test_fused_gaussian_bitwise_prng(d, m, n):
+    """The in-kernel threefry must generate the SAME S as the jnp oracle."""
+    A = jax.random.normal(jax.random.key(3), (m, n), jnp.float32)
+    key = jax.random.key(42)
+    got = fused_gaussian_sketch(A, key, d, interpret=True)
+    want = fused_gaussian_ref(A, key, d)
+    assert jnp.allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_gaussian_statistics():
+    G = gaussian_matrix_ref(jax.random.key(7), 512, 2048)
+    assert abs(float(G.mean())) < 0.01
+    assert abs(float(G.std()) - 1.0) < 0.01

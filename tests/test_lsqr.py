@@ -1,0 +1,46 @@
+"""LSQR solver tests (paper §3.1 baseline)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import generate_problem, lsqr_dense, lsqr_solve, qr_solve
+
+
+def test_well_conditioned_exact():
+    prob = generate_problem(jax.random.key(0), 500, 20, cond=10.0, beta=1e-12)
+    res = lsqr_dense(prob.A, prob.b)
+    assert res.converged
+    assert jnp.linalg.norm(res.x - prob.x_true) < 1e-6
+
+
+def test_operator_form_matches_dense():
+    prob = generate_problem(jax.random.key(1), 300, 10, cond=100.0, beta=1e-8)
+    A = prob.A
+    r1 = lsqr_dense(A, prob.b)
+    r2 = lsqr_solve(lambda x: A @ x, lambda u: A.T @ u, prob.b, n=10)
+    assert jnp.allclose(r1.x, r2.x, atol=1e-10)
+
+
+def test_warm_start_keeps_original_scale_tests():
+    """x0 near the solution must not make stopping tests unreachable."""
+    prob = generate_problem(jax.random.key(2), 400, 15, cond=10.0, beta=1e-10)
+    x_ref = qr_solve(prob.A, prob.b)
+    x0 = x_ref * (1 + 1e-6)
+    res = lsqr_dense(prob.A, prob.b, x0=x0)
+    assert res.converged
+    assert int(res.itn) < 15
+    assert jnp.linalg.norm(res.x - prob.x_true) < 1e-6
+
+
+def test_steptol_stops_at_floor():
+    prob = generate_problem(jax.random.key(3), 400, 15, cond=1e4, beta=1e-10)
+    res = lsqr_dense(prob.A, prob.b, atol=0.0, btol=0.0, steptol=1e-13,
+                     iter_lim=500)
+    assert int(res.istop) == 8
+    assert int(res.itn) < 200
+
+
+def test_zero_rhs():
+    A = jax.random.normal(jax.random.key(4), (50, 5))
+    res = lsqr_dense(A, jnp.zeros(50))
+    assert jnp.allclose(res.x, 0.0)

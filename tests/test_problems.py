@@ -1,0 +1,25 @@
+"""§5.1 problem-generator invariants."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_problem
+
+
+def test_residual_orthogonal_and_scaled():
+    prob = generate_problem(jax.random.key(0), 1000, 30, cond=1e8, beta=1e-6)
+    # r ⟂ range(A) certifies x_true as the LS minimizer
+    assert float(jnp.linalg.norm(prob.A.T @ prob.r_true)) < 1e-12
+    assert abs(float(jnp.linalg.norm(prob.r_true)) - 1e-6) < 1e-12
+    assert jnp.allclose(prob.b, prob.A @ prob.x_true + prob.r_true)
+
+
+def test_condition_number():
+    prob = generate_problem(jax.random.key(1), 500, 20, cond=1e6, beta=1e-8)
+    sv = jnp.linalg.svd(prob.A, compute_uv=False)
+    ratio = float(sv.max() / sv.min())
+    assert 1e5 < ratio < 1e7
+
+
+def test_unit_solution_norm():
+    prob = generate_problem(jax.random.key(2), 200, 10)
+    assert abs(float(jnp.linalg.norm(prob.x_true)) - 1.0) < 1e-12

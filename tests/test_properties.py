@@ -1,0 +1,62 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sample_sketch
+from repro.core.lsqr import lsqr_dense
+from repro.kernels import countsketch_apply, countsketch_ref
+
+dims = st.tuples(
+    st.integers(min_value=3, max_value=120),  # m
+    st.integers(min_value=1, max_value=9),    # n
+    st.integers(min_value=2, max_value=50),   # d
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims, st.integers(0, 2**30))
+def test_countsketch_linearity(mnd, seed):
+    """S is linear: S(aA + bB) == a·SA + b·SB exactly."""
+    m, n, d = mnd
+    op = sample_sketch("countsketch", jax.random.key(seed), d, m)
+    A = jax.random.normal(jax.random.key(seed + 1), (m, n))
+    B = jax.random.normal(jax.random.key(seed + 2), (m, n))
+    lhs = op.apply(2.5 * A - 1.25 * B)
+    rhs = 2.5 * op.apply(A) - 1.25 * op.apply(B)
+    assert jnp.allclose(lhs, rhs, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims, st.integers(0, 2**30))
+def test_countsketch_column_mass(mnd, seed):
+    """Signed column sums are preserved: 1ᵀ(SA) == (signs)ᵀA."""
+    m, n, d = mnd
+    op = sample_sketch("countsketch", jax.random.key(seed), d, m)
+    A = jax.random.normal(jax.random.key(seed + 3), (m, n))
+    assert jnp.allclose(op.apply(A).sum(0), op.signs @ A, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims, st.integers(0, 2**30))
+def test_kernel_matches_oracle_any_shape(mnd, seed):
+    m, n, d = mnd
+    A = jax.random.normal(jax.random.key(seed), (m, n), jnp.float32)
+    h = jax.random.randint(jax.random.key(seed + 1), (m,), 0, d, dtype=jnp.int32)
+    s = jax.random.rademacher(jax.random.key(seed + 2), (m,), jnp.float32)
+    got = countsketch_apply(A, h, s, d, interpret=True)
+    want = countsketch_ref(A, h, s, d)
+    assert jnp.allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 6), st.integers(0, 2**30))
+def test_lsqr_satisfies_normal_equations(m_extra, n, seed):
+    """For well-conditioned A, LSQR's x satisfies Aᵀ(Ax − b) ≈ 0."""
+    m = n + m_extra
+    A = jax.random.normal(jax.random.key(seed), (m, n))
+    b = jax.random.normal(jax.random.key(seed + 1), (m,))
+    res = lsqr_dense(A, b, atol=1e-12, btol=1e-12, iter_lim=200)
+    g = A.T @ (A @ res.x - b)
+    assert float(jnp.linalg.norm(g)) < 1e-6 * (1 + float(jnp.linalg.norm(b)))

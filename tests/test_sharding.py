@@ -1,0 +1,28 @@
+"""Logical-axis sharding rules."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import DEFAULT_RULES, OPT_RULES, logical_to_spec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def test_missing_axes_dropped(mesh):
+    # 'model' and 'pod' absent from this mesh -> replicated
+    assert logical_to_spec(("batch", "heads"), mesh) == P("data", None)
+
+
+def test_divisibility_guard(mesh):
+    assert logical_to_spec(("batch",), mesh, shape=(7,)) == P("data")  # 7 % 1 == 0
+    spec = logical_to_spec(("vocab",), mesh, shape=(50280,))
+    assert spec == P(None)  # 'model' absent
+
+
+def test_opt_rules_add_pod():
+    assert OPT_RULES["embed"] == ("pod", "data")
+    assert DEFAULT_RULES["embed"] == "data"

@@ -1,0 +1,55 @@
+"""Sketching-operator unit + property tests (paper §2)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SKETCH_KINDS, fwht, sample_sketch
+
+KINDS = sorted(set(SKETCH_KINDS) - {"clarkson_woodruff"})
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("m,n,d", [(200, 5, 64), (513, 1, 100), (100, 17, 40)])
+def test_apply_matches_dense(kind, m, n, d):
+    op = sample_sketch(kind, jax.random.key(0), d, m)
+    A = jax.random.normal(jax.random.key(1), (m, n) if n > 1 else (m,))
+    got = op.apply(A)
+    want = op.as_dense() @ (A if A.ndim == 2 else A)
+    assert got.shape == ((d, n) if A.ndim == 2 else (d,))
+    assert jnp.allclose(got, want, atol=1e-10)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_isometry_in_expectation(kind):
+    """E[SᵀS] = I — averaged over draws, diagonal ~1, off-diagonal ~0."""
+    m, d, reps = 64, 256, 20
+    acc = jnp.zeros((m, m))
+    for r in range(reps):
+        op = sample_sketch(kind, jax.random.key(r), d, m)
+        S = op.as_dense()
+        acc = acc + S.T @ S
+    G = acc / reps
+    # uniform-valued operators have Var[v²] = 4/5 per entry (vs 0 for ±1
+    # signs), so their diagonal concentrates ~√0.8/reps slower.
+    diag_tol = 0.65 if kind in ("uniform_sparse", "uniform_dense", "gaussian") else 0.25
+    assert jnp.abs(jnp.diag(G) - 1).max() < diag_tol
+    off = G - jnp.diag(jnp.diag(G))
+    assert jnp.abs(off).max() < 0.3
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_subspace_embedding(kind):
+    """singular values of S·Q stay in a (generous) [0.5, 1.5] band at d=8n."""
+    m, n = 2048, 16
+    d = 8 * n
+    Q, _ = jnp.linalg.qr(jax.random.normal(jax.random.key(2), (m, n)))
+    op = sample_sketch(kind, jax.random.key(3), d, m)
+    sv = jnp.linalg.svd(op.apply(Q), compute_uv=False)
+    assert sv.min() > 0.5 and sv.max() < 1.5
+
+
+def test_fwht_involution_and_orthogonality():
+    x = jax.random.normal(jax.random.key(0), (64, 3))
+    assert jnp.allclose(fwht(fwht(x)) / 64, x, atol=1e-12)
+    H = fwht(jnp.eye(8))
+    assert jnp.allclose(H @ H.T, 8 * jnp.eye(8))
