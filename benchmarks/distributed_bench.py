@@ -20,8 +20,7 @@ from .common import emit, time_fn
 def run(m=32768, n=128, seed=0):
     ndev = len(jax.devices())
     mesh = jax.make_mesh(
-        (ndev,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+        (ndev,), ("data",))
     prob = generate_problem(
         jax.random.key(seed), m, n, cond=1e10, beta=1e-10, method="fast"
     )

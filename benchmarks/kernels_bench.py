@@ -1,80 +1,87 @@
-"""Pallas-kernel micro-benchmarks.
+"""Backend sweep: the Pallas sketch kernels measured END-TO-END.
 
-On this CPU container the kernels execute in ``interpret=True`` mode, so
-wall times measure the *reference semantics*, not TPU performance.  The
-``derived`` column therefore reports the analytically-derived TPU-relevant
-quantities: HBM bytes moved and MXU flops per call, plus the roofline-model
-time at v5e constants — these are the numbers the §Perf log tracks.
+The paper's headline speedup lives or dies on the sketch apply inside the
+full solve, so this bench no longer times kernels in isolation: for every
+kernel-backed sketch kind it runs ``saa_sas`` twice — ``backend="reference"``
+(pure-jnp applies) vs ``backend="pallas"`` (the ``repro.kernels`` ops) — and
+reports both, plus the analytically-derived TPU roofline terms of the apply.
+
+On this CPU container the pallas rows execute in ``interpret=True`` mode, so
+their wall times measure the *kernel semantics*, not TPU performance; the
+``derived`` column's HBM bytes / MXU flops / v5e roofline times are the
+numbers the §Perf log tracks.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import (
-    countsketch_apply,
-    countsketch_ref,
-    fused_gaussian_sketch,
-    sketch_matmul,
-    srht_apply,
-)
+from repro.core import generate_problem, resolve_backend, saa_sas
 from repro.launch.mesh import HW
 
 from .common import emit, time_fn
 
+BACKENDS = ("reference", "pallas")
+KINDS = ("countsketch", "srht", "gaussian", "uniform_dense")
 
-def run(seed=0):
-    m, n, d = 16384, 256, 1024
-    A = jax.random.normal(jax.random.key(seed), (m, n), jnp.float32)
 
-    # --- CountSketch: kernel vs segment-sum oracle -------------------------
-    h = jax.random.randint(jax.random.key(1), (m,), 0, d, dtype=jnp.int32)
-    s = jax.random.rademacher(jax.random.key(2), (m,), jnp.float32)
-    t_ref = time_fn(lambda: countsketch_ref(A, h, s, d))
-    t_int = time_fn(lambda: countsketch_apply(A, h, s, d, interpret=True))
-    bytes_moved = (m * n + d * n) * 4 + m * 8
-    mxu_flops = 2 * m * d * n  # one-hot matmul recast
-    t_mem = bytes_moved / HW["hbm_bw"]
-    t_mxu = mxu_flops / HW["peak_flops_bf16"]
-    emit(
-        "kernel/countsketch",
-        t_int,
-        f"ref_us={t_ref*1e6:.0f};hbm_bytes={bytes_moved};mxu_flops={mxu_flops};"
-        f"v5e_mem_us={t_mem*1e6:.1f};v5e_mxu_us={t_mxu*1e6:.1f};"
-        f"bound={'mem' if t_mem > t_mxu else 'mxu'}",
-    )
-
-    # --- SRHT: two-stage blocked Hadamard ----------------------------------
-    m2 = 16384
-    signs = jax.random.rademacher(jax.random.key(3), (m2,), jnp.float32)
-    rows = jax.random.choice(jax.random.key(4), m2, (d,), replace=False)
-    t_srht = time_fn(lambda: srht_apply(A, signs, rows, d, interpret=True))
-    r, c = 16, 1024  # stage split for m=16384
-    bytes_srht = 2 * (m2 * n * 4) * 2 + d * n * 4  # two streamed passes
-    flops_srht = 2 * m2 * n * (r + c)
-    emit(
-        "kernel/srht",
-        t_srht,
-        f"hbm_bytes={bytes_srht};mxu_flops={flops_srht};"
-        f"v5e_mem_us={bytes_srht/HW['hbm_bw']*1e6:.1f}",
+def _derived_apply_terms(kind: str, m: int, n: int, d: int) -> str:
+    """Roofline terms of ONE sketch apply S·[A|b] at v5e constants."""
+    nn = n + 1  # the solvers sketch A and b
+    if kind == "countsketch":
+        hbm = (m * nn + d * nn) * 4 + m * 8
+        flops = 2 * m * d * nn  # one-hot matmul recast
+    elif kind == "srht":
+        m_pad = 1 << (m - 1).bit_length()
+        c = min(1024, m_pad)
+        r = m_pad // c
+        hbm = 2 * (m_pad * nn * 4) * 2 + d * nn * 4  # two streamed passes
+        flops = 2 * m_pad * nn * (r + c)
+    elif kind == "gaussian":
+        # fused-PRNG: S never touches HBM
+        hbm = (m * nn + d * nn) * 4
+        flops = 2 * m * d * nn
+    else:  # uniform_dense: materialized S streamed from HBM
+        hbm = (d * m + m * nn + d * nn) * 4
+        flops = 2 * m * d * nn
+    t_mem = hbm / HW["hbm_bw"]
+    t_mxu = flops / HW["peak_flops_bf16"]
+    bound = "mem" if t_mem > t_mxu else "mxu"
+    return (
+        f"hbm_bytes={hbm};mxu_flops={flops};"
+        f"v5e_mem_us={t_mem*1e6:.1f};v5e_mxu_us={t_mxu*1e6:.1f};bound={bound}"
     )
 
-    # --- dense Gaussian: materialized vs fused-PRNG ------------------------
-    S = jax.random.normal(jax.random.key(5), (d, m), jnp.float32)
-    t_mat = time_fn(lambda: sketch_matmul(S, A, interpret=True))
-    t_fused = time_fn(
-        lambda: fused_gaussian_sketch(A, jax.random.key(6), d, interpret=True)
+
+def run(seed=0, m=8192, n=128):
+    prob = generate_problem(
+        jax.random.key(seed), m, n, cond=1e10, beta=1e-10, method="fast"
     )
-    bytes_mat = (d * m + m * n + d * n) * 4
-    bytes_fused = (m * n + d * n) * 4
-    emit(
-        "kernel/gauss_materialized",
-        t_mat,
-        f"hbm_bytes={bytes_mat};v5e_mem_us={bytes_mat/HW['hbm_bw']*1e6:.1f}",
-    )
-    emit(
-        "kernel/gauss_fused_prng",
-        t_fused,
-        f"hbm_bytes={bytes_fused};v5e_mem_us={bytes_fused/HW['hbm_bw']*1e6:.1f};"
-        f"hbm_reduction={bytes_mat/bytes_fused:.1f}x",
-    )
+    A, b = prob.A, prob.b
+    key = jax.random.key(seed + 1)
+
+    for kind in KINDS:
+        d = 4 * n
+        derived = _derived_apply_terms(kind, m, n, d)
+        times = {}
+        for backend in BACKENDS:
+            rb = resolve_backend(backend)
+            t = time_fn(
+                lambda: saa_sas(
+                    A, b, key, sketch=kind, sketch_size=d, backend=backend
+                ).x
+            )
+            times[backend] = t
+            r = saa_sas(A, b, key, sketch=kind, sketch_size=d, backend=backend)
+            emit(
+                f"e2e/saa_sas/{kind}/{backend}",
+                t,
+                f"backend={rb.name};interpret={int(rb.interpret)};"
+                f"itn={int(r.itn)};m={m};n={n};d={d};{derived}",
+            )
+        emit(
+            f"e2e/saa_sas/{kind}/ratio",
+            times["pallas"],
+            f"pallas_over_reference={times['pallas']/times['reference']:.2f}x"
+            f";note=interpret-mode_wall_times_not_TPU_perf",
+        )

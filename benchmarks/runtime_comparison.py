@@ -1,19 +1,27 @@
-"""Paper Figure 3: runtime vs m for SAA-SAS vs LSQR.
+"""Paper Figure 3: runtime vs m for SAA-SAS vs LSQR — per backend.
 
 Paper sweep: m equally log-spaced in [2^12, 2^20], n=1000.  Default here is
 capped at 2^17 with n=256 (single CPU core, see DESIGN.md §7 deviations);
 ``--full`` restores the paper sizes.  Problem generation uses the 'fast'
 §5.1 variant (Gaussian left factor) so generation cost does not drown the
 solver comparison.
+
+``saa_sas`` is timed once per backend (``reference`` and ``pallas``) so the
+trajectory attributes every point to the code path that produced it.  Off-
+TPU the pallas backend runs in interpret mode — faithful semantics, very
+slow — so it is swept only up to ``PALLAS_INTERP_MAX_M`` rows there.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import generate_problem, lsqr_dense, saa_sas
+from repro.core import generate_problem, lsqr_dense, resolve_backend, saa_sas
 
 from .common import emit, time_fn
+
+# interpret-mode pallas is O(grid) python; keep its sweep bounded off-TPU
+PALLAS_INTERP_MAX_M = 2**14
 
 
 def run(full=False, seed=0):
@@ -28,9 +36,21 @@ def run(full=False, seed=0):
         )
         A, b = prob.A, prob.b
 
-        t_saa = time_fn(lambda: saa_sas(A, b, key), repeats=3)
-        r = saa_sas(A, b, key)
-        emit(f"fig3/saa_sas/m{m}", t_saa, f"n={n};itn={int(r.itn)}")
+        t_saa = None
+        for backend in ("reference", "pallas"):
+            rb = resolve_backend(backend)
+            if rb.interpret and backend == "pallas" and m > PALLAS_INTERP_MAX_M:
+                continue
+            t = time_fn(lambda: saa_sas(A, b, key, backend=backend), repeats=3)
+            r = saa_sas(A, b, key, backend=backend)
+            emit(
+                f"fig3/saa_sas/{backend}/m{m}",
+                t,
+                f"backend={rb.name};interpret={int(rb.interpret)};"
+                f"n={n};itn={int(r.itn)}",
+            )
+            if backend == "reference":
+                t_saa = t
 
         t_lsqr = time_fn(lambda: lsqr_dense(A, b, iter_lim=2 * n), repeats=3)
         rl = lsqr_dense(A, b, iter_lim=2 * n)

@@ -1,11 +1,18 @@
 """Paper §2 operator comparison: subspace-embedding distortion and apply
-cost for all six sketching operators at equal sketch size."""
+cost for all six sketching operators at equal sketch size.
+
+Every data point carries a ``backend=`` column naming the code path that
+produced it (reference jnp vs pallas kernels), so BENCH_*.json trajectories
+stay attributable when the per-platform default flips.  Kernel-backed kinds
+are swept under both backends; kernel-less kinds run reference only.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sample_sketch
+from repro.core import resolve_backend, sample_sketch
+from repro.core.backend import kernel_backed
 
 from .common import emit, time_fn
 
@@ -30,11 +37,15 @@ def run(m=65536, n=128, d_mult=4, seed=0):
                 sample_sketch(kind, jax.random.key(seed + 1), d, m)
             )[0]
         )
-        t_apply = time_fn(lambda: op.apply(Q))
-        sv = jnp.linalg.svd(op.apply(Q), compute_uv=False)
-        dist = float(jnp.maximum(sv.max() - 1.0, 1.0 - sv.min()))
-        emit(
-            f"sketch/{kind}",
-            t_apply,
-            f"distortion={dist:.4f};sample_us={t_sample*1e6:.0f};d={d};m={m}",
-        )
+        backends = ("reference", "pallas") if kernel_backed(kind) else ("reference",)
+        for backend in backends:
+            rb = resolve_backend(backend)
+            t_apply = time_fn(lambda: op.apply(Q, backend=backend))
+            sv = jnp.linalg.svd(op.apply(Q, backend=backend), compute_uv=False)
+            dist = float(jnp.maximum(sv.max() - 1.0, 1.0 - sv.min()))
+            emit(
+                f"sketch/{kind}/{backend}",
+                t_apply,
+                f"backend={rb.name};interpret={int(rb.interpret)};"
+                f"distortion={dist:.4f};sample_us={t_sample*1e6:.0f};d={d};m={m}",
+            )

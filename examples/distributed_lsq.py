@@ -1,11 +1,14 @@
 """Distributed sketch-and-solve: row-sharded A over 8 (simulated) devices.
 
-Each shard CountSketch-es its local rows into the global bucket space; one
-s x (n+1) all-reduce assembles the sketch; LSQR runs distributed with
-psum-reduced inner products.  Communication is independent of m.
+Each shard applies the shared ``CountSketch`` operator to its local rows
+(into the global bucket space); one s x (n+1) all-reduce assembles the
+sketch; LSQR runs distributed with psum-reduced inner products.
+Communication is independent of m.  ``--backend pallas`` routes the local
+applies through the Pallas kernel (interpret mode off-TPU).
 
-    PYTHONPATH=src python examples/distributed_lsq.py
+    PYTHONPATH=src python examples/distributed_lsq.py [--backend auto]
 """
+import argparse
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -20,14 +23,18 @@ from repro.core.distributed import shard_rows
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("auto", "reference", "pallas"),
+                    default="auto", help="local sketch-apply backend")
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((8,), ("data",))
     m, n = 65536, 128
     prob = generate_problem(jax.random.key(0), m, n, cond=1e8, beta=1e-10)
     A, b = shard_rows(mesh, ("data",), prob.A, prob.b)
     print(f"A: {A.shape} sharded as {A.sharding.spec} over {len(jax.devices())} devices")
 
-    res = sketched_lstsq(A, b, jax.random.key(1), mesh=mesh)
+    res = sketched_lstsq(A, b, jax.random.key(1), mesh=mesh, backend=args.backend)
     x_ref = qr_solve(prob.A, prob.b)
     err_vs_truth = float(jnp.linalg.norm(res.x - prob.x_true) / jnp.linalg.norm(prob.x_true))
     err_vs_qr = float(jnp.linalg.norm(res.x - x_ref) / jnp.linalg.norm(x_ref))

@@ -2,6 +2,19 @@
 with Sketch-and-Apply (SAA-SAS, paper Algorithm 1).
 
     PYTHONPATH=src python examples/quickstart.py [--m 20000] [--n 100]
+                                                 [--backend auto]
+
+The ``--backend`` knob selects the sketch-apply implementation (see
+``repro.core.backend``):
+
+- ``auto``      — pallas kernels on TPU, reference jnp elsewhere (default)
+- ``reference`` — pure-jnp operator paths (segment_sum / FWHT / matmul)
+- ``pallas``    — TPU Pallas kernels from ``repro.kernels``; off-TPU these
+  run in interpret mode (exact kernel semantics, much slower — useful for
+  validation, not speed)
+
+The same knob threads through ``saa_sas``, ``sap_sas``, ``saa_sas_batch``
+and the distributed ``sketched_lstsq``.
 """
 import argparse
 import time
@@ -11,7 +24,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
-from repro.core import generate_problem, lsqr_dense, qr_solve, saa_sas
+from repro.core import generate_problem, lsqr_dense, qr_solve, saa_sas, saa_sas_batch
 
 
 def main():
@@ -20,6 +33,12 @@ def main():
     ap.add_argument("--n", type=int, default=100)
     ap.add_argument("--cond", type=float, default=1e10)
     ap.add_argument("--beta", type=float, default=1e-10)
+    ap.add_argument(
+        "--backend",
+        choices=("auto", "reference", "pallas"),
+        default="auto",
+        help="sketch-apply backend (pallas is interpret-mode off-TPU)",
+    )
     args = ap.parse_args()
 
     print(f"generating {args.m}x{args.n} problem with cond={args.cond:.0e} ...")
@@ -31,7 +50,12 @@ def main():
         return float(jnp.linalg.norm(x - prob.x_true) / jnp.linalg.norm(prob.x_true))
 
     for name, solve in [
-        ("saa_sas (sketch-and-apply)", lambda: saa_sas(prob.A, prob.b, jax.random.key(1)).x),
+        (
+            f"saa_sas (backend={args.backend})",
+            lambda: saa_sas(
+                prob.A, prob.b, jax.random.key(1), backend=args.backend
+            ).x,
+        ),
         ("qr direct", lambda: qr_solve(prob.A, prob.b)),
         ("lsqr baseline", lambda: lsqr_dense(prob.A, prob.b, iter_lim=2 * args.n).x),
     ]:
@@ -40,6 +64,31 @@ def main():
         x = jax.block_until_ready(solve())
         dt = time.perf_counter() - t0
         print(f"{name:30s} {dt*1e3:8.1f} ms   relative error {relerr(x):.3e}")
+
+    # Serving-style multi-query: many right-hand sides against one design
+    # matrix share a single sketch + QR factor via saa_sas_batch.  Column 0
+    # is the original b (so its error is comparable to the solves above);
+    # the rest are perturbed queries.
+    k = 8
+    rhs = jnp.concatenate(
+        [
+            prob.b[:, None],
+            prob.b[:, None]
+            + 0.01 * jax.random.normal(jax.random.key(2), (args.m, k - 1)),
+        ],
+        axis=1,
+    )
+    batch = lambda: saa_sas_batch(
+        prob.A, rhs, jax.random.key(1), backend=args.backend
+    ).x
+    X = jax.block_until_ready(batch())  # warm
+    t0 = time.perf_counter()
+    X = jax.block_until_ready(batch())
+    dt = time.perf_counter() - t0
+    print(
+        f"{'saa_sas_batch (k=%d rhs)' % k:30s} {dt*1e3:8.1f} ms   "
+        f"relative error {relerr(X[:, 0]):.3e}  ({dt/k*1e3:.1f} ms/query)"
+    )
 
 
 if __name__ == "__main__":

@@ -66,8 +66,7 @@ def main():
         return
 
     # --- DP + CountSketch gradient compression over 4 simulated devices ----
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((4,), ("data",))
     comp = CompressionConfig(ratio=8, min_size=16384)
     state = init_train_state(cfg, jax.random.key(0))
     ef = compress_state_init(comp, state.params)

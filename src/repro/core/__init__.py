@@ -1,29 +1,32 @@
 """The paper's primary contribution: sketch-and-solve least squares.
 
 - ``sketch``      — the six sketching operators (paper §2)
+- ``backend``     — sketch-apply backend policy (reference jnp vs Pallas)
 - ``lsqr``        — operator-form LSQR baseline/inner solver (paper §3.1)
-- ``saa``         — SAA-SAS, Algorithm 1 (paper §4)
+- ``saa``         — SAA-SAS, Algorithm 1 (paper §4) + batched front-end
 - ``sap``         — sketch-and-precondition baseline (paper §4, negative result)
 - ``direct``      — deterministic QR/SVD ground truth
 - ``problems``    — §5.1 ill-conditioned problem generator
 - ``distributed`` — multi-pod row-sharded SAA-SAS (shard_map + psum)
 """
-from . import direct, distributed, lsqr, problems, sap, sketch
+from . import backend, direct, distributed, lsqr, problems, sap, sketch
+from .backend import BACKENDS, ResolvedBackend, resolve as resolve_backend
 from .direct import normal_equations, qr_solve, svd_solve
 from .distributed import DistributedLSQResult, sketched_lstsq
 from .lsqr import LSQRResult, lsqr as lsqr_solve, lsqr_dense
 from .problems import Problem, generate as generate_problem
-from .saa import SAAResult, default_sketch_size, saa_sas
+from .saa import SAAResult, default_sketch_size, saa_sas, saa_sas_batch
 from .sap import sap_sas
 from .sketch import SKETCH_KINDS, fwht, sample as sample_sketch
 
 __all__ = [
-    "direct", "distributed", "lsqr", "problems", "sap", "sketch",
+    "backend", "direct", "distributed", "lsqr", "problems", "sap", "sketch",
+    "BACKENDS", "ResolvedBackend", "resolve_backend",
     "normal_equations", "qr_solve", "svd_solve",
     "DistributedLSQResult", "sketched_lstsq",
     "LSQRResult", "lsqr_solve", "lsqr_dense",
     "Problem", "generate_problem",
-    "SAAResult", "default_sketch_size", "saa_sas",
+    "SAAResult", "default_sketch_size", "saa_sas", "saa_sas_batch",
     "sap_sas",
     "SKETCH_KINDS", "fwht", "sample_sketch",
 ]

@@ -9,6 +9,14 @@ independent of m.  The small QR runs replicated; LSQR then runs distributed
 with row-sharded u-space vectors and psum-reduced inner products (injected
 via ``lsqr(udot=...)``).
 
+The sketch itself is the shared ``repro.core.sketch.CountSketch`` operator:
+sampled ONCE at global size from ``key``, then row-sharded with A — each
+shard wraps its slice of (buckets, signs) back into a local ``CountSketch``
+and calls the same backend-dispatched ``apply`` (reference segment_sum or
+the Pallas one-hot-matmul kernel, per ``backend=``).  Note the draw is NOT
+bit-identical to ``saa_sas(key)``'s: that solver derives its sketch key via
+``split(key, 3)`` (it also needs perturbation/norm keys for the fallback).
+
 This is the native multi-pod form of SAA-SAS: compute scales 1/P, the
 collective term is O(s·n) per solve + O(n) per LSQR iteration.
 """
@@ -23,6 +31,9 @@ from jax import lax
 from jax.scipy.linalg import solve_triangular
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..sharding import shard_map_compat
+from . import backend as backend_lib
+from . import sketch as sketch_lib
 from .lsqr import lsqr
 from .saa import default_sketch_size
 
@@ -55,28 +66,34 @@ def sketched_lstsq(
     btol: float = 0.0,
     steptol: float | None = None,
     iter_lim: int = 100,
+    backend: str = "auto",
 ) -> DistributedLSQResult:
     """Distributed SAA-SAS.  ``A``/``b`` must be row-sharded over ``axes``.
 
     Jit-compatible; lowers to one psum of the s×(n+1) sketch + one psum per
-    LSQR iteration (n-vector + 3 scalars).
+    LSQR iteration (n-vector + 3 scalars).  ``backend`` selects the local
+    sketch-apply implementation (see ``repro.core.backend``).
     """
+    backend = backend_lib.resolve(backend).name
     if isinstance(axes, str):
         axes = (axes,)
     m, n = A.shape
     s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
     if steptol is None:
         steptol = 32 * float(jnp.finfo(A.dtype).eps)
-    k1, k2 = jax.random.split(key)
-    buckets = jax.random.randint(k1, (m,), 0, s, dtype=jnp.int32)
-    signs = jax.random.rademacher(k2, (m,), A.dtype)
+    # One global operator draw, shared by every shard; its (buckets, signs)
+    # arrays row-shard with A.
+    op = sketch_lib.CountSketch.sample(key, s, m, dtype=A.dtype)
 
     def local_solve(A_i, b_i, h_i, s_i):
         # --- sketch locally into global bucket space, psum to assemble ----
-        SA = lax.psum(
-            jax.ops.segment_sum(s_i[:, None] * A_i, h_i, num_segments=s), axes
+        # Each shard's rows form a valid CountSketch into the SAME s-bucket
+        # space: rewrap the local slice and reuse the operator's apply.
+        local_op = sketch_lib.CountSketch(
+            buckets=h_i, signs=s_i, d=s, m=A_i.shape[0]
         )
-        Sb = lax.psum(jax.ops.segment_sum(s_i * b_i, h_i, num_segments=s), axes)
+        SA = lax.psum(local_op.apply(A_i, backend=backend), axes)
+        Sb = lax.psum(local_op.apply(b_i, backend=backend), axes)
 
         # --- replicated small factorization -------------------------------
         Q, R = jnp.linalg.qr(SA, mode="reduced")
@@ -102,12 +119,11 @@ def sketched_lstsq(
         return x, res.istop, res.itn, res.rnorm
 
     row = P(axes)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_solve,
         mesh=mesh,
         in_specs=(P(axes, None), row, row, row),
         out_specs=(P(), P(), P(), P()),
-        check_vma=False,  # outputs are replicated by construction (psum-fed)
     )
-    x, istop, itn, rnorm = fn(A, b, buckets, signs)
+    x, istop, itn, rnorm = fn(A, b, op.buckets, op.signs)
     return DistributedLSQResult(x=x, istop=istop, itn=itn, rnorm=rnorm)

@@ -12,9 +12,20 @@
      "B = SA"; we sketch the perturbed Ã, which is the mathematically
      consistent reading — noted in DESIGN.md.)
 
+The sketch apply (step 2) is the compute hot path and dispatches through
+``repro.core.backend``: ``backend="reference"`` runs the pure-jnp operator
+paths, ``backend="pallas"`` the TPU Pallas kernels in ``repro.kernels``
+(interpret mode off-TPU), ``backend="auto"`` resolves per platform.
+``backend`` is a static argument, so each choice compiles its own
+executable and the dispatch is free at runtime.
+
 ``materialize_y=False`` gives the operator-form variant (computes R⁻¹v on the
 fly inside LSQR) — same math, O(mn) less memory; this is the at-scale path
 used by ``repro.core.distributed``.
+
+``saa_sas_batch`` is the serving front-end: one operator draw + one QR
+factor amortized across stacked right-hand sides (A (m,n), b (m,k)) or
+across a batch of equally-shaped problems (A (batch,m,n), b (batch,m)).
 """
 from __future__ import annotations
 
@@ -27,9 +38,10 @@ from jax import lax
 from jax.scipy.linalg import solve_triangular
 
 from . import sketch as sketch_lib
+from .backend import resolve_backend_arg
 from .lsqr import LSQRResult, lsqr
 
-__all__ = ["saa_sas", "SAAResult", "default_sketch_size"]
+__all__ = ["saa_sas", "saa_sas_batch", "SAAResult", "default_sketch_size"]
 
 
 class SAAResult(NamedTuple):
@@ -92,6 +104,7 @@ def _solve_with_factor(A, b, B, c, *, materialize_y, atol, btol, iter_lim, stept
     return x, res
 
 
+@resolve_backend_arg
 @partial(
     jax.jit,
     static_argnames=(
@@ -103,6 +116,7 @@ def _solve_with_factor(A, b, B, c, *, materialize_y, atol, btol, iter_lim, stept
         "steptol",
         "atol",
         "btol",
+        "backend",
     ),
 )
 def saa_sas(
@@ -118,6 +132,7 @@ def saa_sas(
     iter_lim: int = 100,
     materialize_y: bool = True,
     use_fallback: bool = True,
+    backend: str = "auto",
 ) -> SAAResult:
     """Solve min‖Ax − b‖ by Sketch-and-Apply (paper Algorithm 1)."""
     m, n = A.shape
@@ -128,8 +143,8 @@ def saa_sas(
     k_sketch, k_pert, k_norm = jax.random.split(key, 3)
 
     op = sketch_lib.sample(sketch, k_sketch, s, m, dtype=A.dtype)
-    B = op.apply(A)
-    c = op.apply(b)
+    B = op.apply(A, backend=backend)
+    c = op.apply(b, backend=backend)
     x, res = _solve_with_factor(
         A, b, B, c, materialize_y=materialize_y, atol=atol, btol=btol,
         iter_lim=iter_lim, steptol=steptol,
@@ -160,7 +175,7 @@ def saa_sas(
         sigma = 10.0 * _estimate_2norm(A, k_norm) * u_round
         G = jax.random.normal(k_pert, A.shape, A.dtype)
         A_t = A + sigma * G / jnp.sqrt(jnp.asarray(m, A.dtype))
-        B2 = op.apply(A_t)
+        B2 = op.apply(A_t, backend=backend)
         x2, res2 = _solve_with_factor(
             A_t,
             b,
@@ -181,3 +196,127 @@ def saa_sas(
         )
 
     return lax.cond(converged, ok_branch, fallback_branch, operand=None)
+
+
+@resolve_backend_arg
+@partial(
+    jax.jit,
+    static_argnames=(
+        "sketch",
+        "sketch_size",
+        "materialize_y",
+        "iter_lim",
+        "steptol",
+        "atol",
+        "btol",
+        "backend",
+    ),
+)
+def saa_sas_batch(
+    A: jax.Array,
+    b: jax.Array,
+    key: jax.Array,
+    *,
+    sketch: str = "clarkson_woodruff",
+    sketch_size: int | None = None,
+    atol: float = 0.0,
+    btol: float = 0.0,
+    steptol: float | None = None,
+    iter_lim: int = 100,
+    materialize_y: bool = True,
+    backend: str = "auto",
+) -> SAAResult:
+    """Batched SAA-SAS: one operator draw amortized over many solves.
+
+    Two layouts (the serving-style multi-query front-ends):
+
+    - ``A (m, n), b (m, k)`` — one design matrix, k stacked right-hand
+      sides.  The sketch, QR factor and (if ``materialize_y``) the whitened
+      Y = A R⁻¹ are computed ONCE and shared; only the LSQR iterations run
+      per-query (vmapped over columns of b).  Returns x of shape (n, k) and
+      per-column istop/itn/rnorm.
+    - ``A (batch, m, n), b (batch, m)`` — a batch of equally-shaped
+      problems sharing ONE operator draw S.  The whole factor+solve is
+      vmapped over the batch.  Returns x of shape (batch, n).
+
+    The perturbation fallback of ``saa_sas`` is a per-problem control-flow
+    feature and is not taken here (``used_fallback`` is always False);
+    batch callers should re-solve non-converged lanes individually.  Note
+    vmap-of-while semantics: all lanes keep iterating until every lane's
+    stopping test fires (extra LSQR iterations past convergence are benign —
+    the whitened system's updates just stall at the numerical floor).
+    """
+    if steptol is None:
+        steptol = 32 * float(jnp.finfo(A.dtype).eps)
+    kw = dict(atol=atol, btol=btol, iter_lim=iter_lim, steptol=steptol)
+
+    if A.ndim == 2:
+        if b.ndim != 2 or b.shape[0] != A.shape[0]:
+            raise ValueError(
+                f"multi-RHS mode needs b of shape ({A.shape[0]}, k), got {b.shape}"
+            )
+        m, n = A.shape
+        s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
+        op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
+        B = op.apply(A, backend=backend)
+        C = op.apply(b, backend=backend)  # (s, k)
+        Q, R = jnp.linalg.qr(B, mode="reduced")
+        Z0 = Q.T @ C  # (n, k) warm starts
+
+        if materialize_y:
+            Y = solve_triangular(R, A.T, trans=1, lower=False).T
+
+            def mv(z):
+                return Y @ z
+
+            def rmv(u):
+                return Y.T @ u
+
+        else:
+
+            def mv(z):
+                return A @ solve_triangular(R, z, lower=False)
+
+            def rmv(u):
+                return solve_triangular(R, A.T @ u, trans=1, lower=False)
+
+        def solve_one(b_i, z0_i):
+            return lsqr(mv, rmv, b_i, x0=z0_i, **kw)
+
+        res = jax.vmap(solve_one, in_axes=(1, 1))(b, Z0)
+        X = solve_triangular(R, res.x.T, lower=False)  # (n, k)
+        return SAAResult(
+            x=X,
+            istop=res.istop,
+            itn=res.itn,
+            rnorm=res.rnorm,
+            used_fallback=jnp.zeros(b.shape[1], bool),
+        )
+
+    if A.ndim == 3:
+        if b.ndim != 2 or b.shape[0] != A.shape[0] or b.shape[1] != A.shape[1]:
+            raise ValueError(
+                f"problem-batch mode needs b of shape {A.shape[:2]}, got {b.shape}"
+            )
+        batch, m, n = A.shape
+        s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
+        op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
+
+        def solve_one(A_i, b_i):
+            B = op.apply(A_i, backend=backend)
+            c = op.apply(b_i, backend=backend)
+            x, res = _solve_with_factor(
+                A_i, b_i, B, c, materialize_y=materialize_y, **kw
+            )
+            return x, res.istop, res.itn, res.rnorm
+
+        x, istop, itn, rnorm = jax.vmap(solve_one)(A, b)
+        return SAAResult(
+            x=x,
+            istop=istop,
+            itn=itn,
+            rnorm=rnorm,
+            used_fallback=jnp.zeros(batch, bool),
+        )
+
+    raise ValueError(f"A must be (m, n) or (batch, m, n), got shape {A.shape}")

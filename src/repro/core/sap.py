@@ -14,13 +14,20 @@ import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
 from . import sketch as sketch_lib
+from .backend import resolve_backend_arg
 from .lsqr import lsqr
 from .saa import SAAResult, default_sketch_size
 
 __all__ = ["sap_sas"]
 
 
-@partial(jax.jit, static_argnames=("sketch", "sketch_size", "iter_lim", "atol", "btol", "steptol"))
+@resolve_backend_arg
+@partial(
+    jax.jit,
+    static_argnames=(
+        "sketch", "sketch_size", "iter_lim", "atol", "btol", "steptol", "backend"
+    ),
+)
 def sap_sas(
     A: jax.Array,
     b: jax.Array,
@@ -32,13 +39,14 @@ def sap_sas(
     btol: float = 0.0,
     steptol: float | None = None,
     iter_lim: int = 200,
+    backend: str = "auto",
 ) -> SAAResult:
     m, n = A.shape
     s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
     if steptol is None:
         steptol = 32 * float(jnp.finfo(A.dtype).eps)
     op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
-    B = op.apply(A)
+    B = op.apply(A, backend=backend)
     _, R = jnp.linalg.qr(B, mode="reduced")
 
     def mv(z):

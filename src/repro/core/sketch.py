@@ -1,17 +1,27 @@
-"""Sketching operators (paper §2).
+"""Sketching operators (paper §2) with backend-dispatched applies.
 
 Dense:  Gaussian, uniform-dense, SRHT (subsampled randomized Hadamard).
 Sparse: CountSketch (Clarkson–Woodruff), sparse-sign(k), uniform-sparse.
 
 All operators are functional pytrees: ``sample(kind, key, d, m)`` draws the
-operator, ``op.apply(A)`` applies it to an (m,) vector or (m, n) matrix along
-axis 0. Every operator is scaled so that ``E[SᵀS] = I`` (an isometry in
-expectation), which is the normalization the sketch-and-solve analysis
-assumes. ``op.as_dense()`` materializes S (testing / small problems only).
+operator, ``op.apply(A, backend=...)`` applies it to an (m,) vector or (m, n)
+matrix along axis 0. Every operator is scaled so that ``E[SᵀS] = I`` (an
+isometry in expectation), which is the normalization the sketch-and-solve
+analysis assumes. ``op.as_dense()`` materializes S (testing / small problems
+only) and is backend-independent.
 
-These are the reference (pure-jnp) paths; TPU Pallas kernels for the
-compute-critical applies live in ``repro.kernels`` and are selected by
-``repro.core.saa`` when requested.
+Backend dispatch (see ``repro.core.backend``): every ``apply`` takes a
+``backend`` knob — ``"reference"`` runs the pure-jnp path in this module;
+``"pallas"`` routes kernel-backed kinds to the TPU Pallas ops in
+``repro.kernels`` (``countsketch_apply`` for CountSketch, ``srht_apply`` for
+SRHT, ``fused_gaussian_sketch`` for Gaussian, ``sketch_matmul`` for
+uniform-dense), in ``interpret=True`` mode off-TPU; ``"auto"`` picks
+``"pallas"`` on TPU and ``"reference"`` elsewhere. Both backends of an
+operator realize the SAME linear map S (the Gaussian S is drawn with the
+kernels' counter-based threefry + Box–Muller stream so the fused kernel
+regenerates it bit-for-bit), so backends agree to accumulation-order
+rounding and can be swapped under any solver. Kinds without a kernel
+(sparse-sign, uniform-sparse) fall back to the reference path.
 """
 from __future__ import annotations
 
@@ -21,6 +31,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from . import backend as backend_lib
 
 __all__ = [
     "sample",
@@ -37,6 +49,13 @@ __all__ = [
 
 def _static(default=None):
     return dataclasses.field(metadata=dict(static=True), default=default)
+
+
+def _kernels():
+    """Lazy kernel import: repro.kernels imports this module (srht oracle)."""
+    from .. import kernels
+
+    return kernels
 
 
 def fwht(x: jax.Array, axis: int = 0) -> jax.Array:
@@ -85,18 +104,34 @@ def _maybe_squeeze(B, was_vector):
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class GaussianSketch:
-    """S with iid N(0, 1/d) entries."""
+    """S with iid N(0, 1/d) entries.
+
+    S is drawn from the counter-based threefry2x32 + Box–Muller stream of
+    ``repro.kernels.sketch_matmul`` (element (i, j) ← counter pair (i, j)),
+    so the ``"pallas"`` backend's ``fused_gaussian_sketch`` regenerates the
+    SAME matrix inside the kernel from ``key`` alone — the materialized S
+    never has to leave HBM on that path.
+    """
 
     S: jax.Array
+    key: jax.Array  # PRNG key the fused kernel regenerates S from
     d: int = _static()
     m: int = _static()
 
     @classmethod
     def sample(cls, key, d, m, dtype=jnp.float64):
-        S = jax.random.normal(key, (d, m), dtype) / jnp.sqrt(jnp.asarray(d, dtype))
-        return cls(S=S, d=d, m=m)
+        from ..kernels.sketch_matmul import gaussian_matrix_ref
 
-    def apply(self, A):
+        scale = jnp.float32(1.0 / float(d) ** 0.5)
+        S = (gaussian_matrix_ref(key, d, m, jnp.float32) * scale).astype(dtype)
+        return cls(S=S, key=key, d=d, m=m)
+
+    def apply(self, A, *, backend: str = "auto"):
+        rb = backend_lib.resolve(backend)
+        if rb.use_pallas:
+            return _kernels().fused_gaussian_sketch(
+                A, self.key, self.d, interpret=rb.interpret
+            )
         A2, vec = _as_2d(A)
         return _maybe_squeeze(self.S @ A2, vec)
 
@@ -119,8 +154,15 @@ class UniformDenseSketch:
         S = jax.random.uniform(key, (d, m), dtype, minval=-lim, maxval=lim)
         return cls(S=S, d=d, m=m)
 
-    apply = GaussianSketch.apply
-    as_dense = GaussianSketch.as_dense
+    def apply(self, A, *, backend: str = "auto"):
+        rb = backend_lib.resolve(backend)
+        if rb.use_pallas:
+            return _kernels().sketch_matmul(self.S, A, interpret=rb.interpret)
+        A2, vec = _as_2d(A)
+        return _maybe_squeeze(self.S @ A2, vec)
+
+    def as_dense(self):
+        return self.S
 
 
 @jax.tree_util.register_dataclass
@@ -130,7 +172,8 @@ class SRHTSketch:
 
     H is the (unnormalized, power-of-two padded) Hadamard matrix, D a random
     sign diagonal, P a uniform row sample of size d.  Apply cost
-    O(m log m · n) via the FWHT.
+    O(m log m · n) via the FWHT (reference) or the two-stage blocked
+    Hadamard kernel (pallas).
     """
 
     signs: jax.Array  # (m_pad,)
@@ -149,7 +192,12 @@ class SRHTSketch:
         rows = jax.random.choice(k2, m_pad, (d,), replace=d > m_pad)
         return cls(signs=signs, rows=rows, d=d, m=m, m_pad=m_pad)
 
-    def apply(self, A):
+    def apply(self, A, *, backend: str = "auto"):
+        rb = backend_lib.resolve(backend)
+        if rb.use_pallas:
+            return _kernels().srht_apply(
+                A, self.signs, self.rows, self.d, interpret=rb.interpret
+            )
         A2, vec = _as_2d(A)
         dtype = A2.dtype
         if self.m_pad != self.m:
@@ -161,7 +209,7 @@ class SRHTSketch:
 
     def as_dense(self):
         eye = jnp.eye(self.m, dtype=self.signs.dtype)
-        return self.apply(eye)
+        return self.apply(eye, backend="reference")
 
 
 # --------------------------------------------------------------------------
@@ -175,7 +223,8 @@ class CountSketch:
     """Clarkson–Woodruff: one ±1 per column of S, at a random bucket.
 
     SA[k] = sum_{i : h(i)=k} s(i) · A[i]  — an exact isometry in expectation
-    with no scaling.  Apply cost O(nnz(A)).
+    with no scaling.  Apply cost O(nnz(A)) via segment_sum (reference) or
+    the blocked one-hot-matmul kernel (pallas).
     """
 
     buckets: jax.Array  # (m,) int32 in [0, d)
@@ -190,7 +239,12 @@ class CountSketch:
         signs = jax.random.rademacher(k2, (m,), dtype)
         return cls(buckets=buckets, signs=signs, d=d, m=m)
 
-    def apply(self, A):
+    def apply(self, A, *, backend: str = "auto"):
+        rb = backend_lib.resolve(backend)
+        if rb.use_pallas:
+            return _kernels().countsketch_apply(
+                A, self.buckets, self.signs, self.d, interpret=rb.interpret
+            )
         A2, vec = _as_2d(A)
         contrib = self.signs[:, None].astype(A2.dtype) * A2
         B = jax.ops.segment_sum(contrib, self.buckets, num_segments=self.d)
@@ -204,7 +258,11 @@ class CountSketch:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SparseSignSketch:
-    """k nonzeros (±1/sqrt(k)) per column of S at iid random buckets."""
+    """k nonzeros (±1/sqrt(k)) per column of S at iid random buckets.
+
+    No Pallas kernel yet — ``backend="pallas"`` falls back to the reference
+    path (see ``repro.core.backend.KERNEL_BACKED_KINDS``).
+    """
 
     buckets: jax.Array  # (k, m) int32
     signs: jax.Array  # (k, m)
@@ -219,7 +277,8 @@ class SparseSignSketch:
         signs = jax.random.rademacher(k2, (k, m), dtype)
         return cls(buckets=buckets, signs=signs, d=d, m=m, k=k)
 
-    def apply(self, A):
+    def apply(self, A, *, backend: str = "auto"):
+        del backend  # no kernel for this kind — reference path only
         A2, vec = _as_2d(A)
 
         def one(h, s):
@@ -241,7 +300,11 @@ class SparseSignSketch:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class UniformSparseSketch:
-    """One U(-sqrt(3), sqrt(3)) entry per column at a random bucket."""
+    """One U(-sqrt(3), sqrt(3)) entry per column at a random bucket.
+
+    No Pallas kernel yet — ``backend="pallas"`` falls back to the reference
+    path (see ``repro.core.backend.KERNEL_BACKED_KINDS``).
+    """
 
     buckets: jax.Array
     values: jax.Array
@@ -256,7 +319,8 @@ class UniformSparseSketch:
         values = jax.random.uniform(k2, (m,), dtype, minval=-lim, maxval=lim)
         return cls(buckets=buckets, values=values, d=d, m=m)
 
-    def apply(self, A):
+    def apply(self, A, *, backend: str = "auto"):
+        del backend  # no kernel for this kind — reference path only
         A2, vec = _as_2d(A)
         contrib = self.values[:, None].astype(A2.dtype) * A2
         B = jax.ops.segment_sum(contrib, self.buckets, num_segments=self.d)

@@ -26,12 +26,18 @@ def countsketch_apply(
     block_m: int = 256,
     block_d: int = 256,
     block_n: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """SA for the CountSketch (buckets, signs); A is (m, n) or (m,).
 
     Returns (d, n) in f32 accumulation dtype, cast back to A.dtype.
+    ``interpret=None`` resolves via ``repro.core.backend.default_interpret``
+    (real Mosaic on TPU, interpret mode elsewhere).
     """
+    if interpret is None:
+        from ...core.backend import default_interpret
+
+        interpret = default_interpret()
     vec = A.ndim == 1
     if vec:
         A = A[:, None]

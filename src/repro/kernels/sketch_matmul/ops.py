@@ -23,9 +23,16 @@ def sketch_matmul(
     block_d: int = 256,
     block_m: int = 512,
     block_n: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """S (d, m) @ A (m, n) with VMEM-tiled accumulation."""
+    """S (d, m) @ A (m, n) with VMEM-tiled accumulation.
+
+    ``interpret=None`` resolves via ``repro.core.backend.default_interpret``.
+    """
+    if interpret is None:
+        from ...core.backend import default_interpret
+
+        interpret = default_interpret()
     vec = A.ndim == 1
     A2 = A[:, None] if vec else A
     d, m = S.shape
@@ -69,13 +76,19 @@ def fused_gaussian_sketch(
     block_d: int = 256,
     block_m: int = 512,
     block_n: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """(1/√d)·G·A with G ~ N(0,1)^{d×m} generated inside the kernel.
 
     G is never materialized in HBM.  Bitwise-reproducible from ``key`` (see
-    ref.py for the matching oracle).
+    ref.py for the matching oracle — ``repro.core.sketch.GaussianSketch``
+    draws its S from the same stream, so this kernel IS its pallas backend).
+    ``interpret=None`` resolves via ``repro.core.backend.default_interpret``.
     """
+    if interpret is None:
+        from ...core.backend import default_interpret
+
+        interpret = default_interpret()
     vec = A.ndim == 1
     A2 = A[:, None] if vec else A
     m, n = A2.shape

@@ -29,9 +29,16 @@ def _split_pow2(m: int) -> tuple[int, int]:
 
 @partial(jax.jit, static_argnames=("block_n", "interpret"))
 def hadamard_transform(
-    x: jax.Array, *, block_n: int = 256, interpret: bool = False
+    x: jax.Array, *, block_n: int = 256, interpret: bool | None = None
 ) -> jax.Array:
-    """Unnormalized Walsh–Hadamard transform along axis 0 (m a power of 2)."""
+    """Unnormalized Walsh–Hadamard transform along axis 0 (m a power of 2).
+
+    ``interpret=None`` resolves via ``repro.core.backend.default_interpret``.
+    """
+    if interpret is None:
+        from ...core.backend import default_interpret
+
+        interpret = default_interpret()
     vec = x.ndim == 1
     if vec:
         x = x[:, None]
@@ -96,14 +103,19 @@ def srht_apply(
     rows: jax.Array,
     d: int,
     *,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """SRHT sketch S·A = (1/√d) · P · H · D · A.
 
     ``signs`` has length m_pad (power of two ≥ m); ``rows`` are d sampled
     row indices.  The Hadamard transform runs in the Pallas kernels; the
     D-scaling and P-gather stay in XLA (memory-bound, fusable).
+    ``interpret=None`` resolves via ``repro.core.backend.default_interpret``.
     """
+    if interpret is None:
+        from ...core.backend import default_interpret
+
+        interpret = default_interpret()
     vec = A.ndim == 1
     A2 = A[:, None] if vec else A
     m, n = A2.shape

@@ -278,12 +278,13 @@ def _moe_shard_map(p, x, cfg: ModelConfig, mesh, return_aux: bool):
             pspecs["shared_gate"] = P(d_fsdp, tp)
     p_in = {k: p[k] for k in pspecs}
 
-    fn = jax.shard_map(
+    from ..sharding import shard_map_compat
+
+    fn = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(xspec, pspecs),
         out_specs=(xspec, P()),
-        check_vma=False,
     )
     out, aux = fn(x, p_in)
     if return_aux:

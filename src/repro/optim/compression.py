@@ -71,7 +71,12 @@ def sketched_psum_grads(
     """
     n_dev = 1
     for ax in axis_names:
-        n_dev *= jax.lax.axis_size(ax)
+        # jax.lax.axis_size is newer-JAX only; psum(1, ax) is equivalent
+        # (and constant-folded) on every version.
+        if hasattr(jax.lax, "axis_size"):
+            n_dev *= jax.lax.axis_size(ax)
+        else:
+            n_dev *= jax.lax.psum(1, ax)
 
     flat, treedef = jax.tree.flatten(grads)
     flat_ef = treedef.flatten_up_to(ef_state) if ef_state is not None else [None] * len(flat)

@@ -21,8 +21,28 @@ __all__ = [
     "logical_to_spec",
     "constrain",
     "named_sharding",
+    "shard_map_compat",
     "tree_pspecs",
 ]
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map(..., check_vma=False)`` across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map`` with the ``check_vma`` knob; older
+    releases only have ``jax.experimental.shard_map.shard_map`` with the
+    pre-rename ``check_rep``.  Replication checking is disabled either way —
+    every caller here produces replicated outputs by construction (psum-fed).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 # logical axis -> physical mesh axis (or tuple of axes), None = replicated
 DEFAULT_RULES: dict[str, object] = {

@@ -229,14 +229,15 @@ def make_dp_train_step(
         return jax.tree.map(lambda _: spec, tree)
 
     def step(state, ef, batch):
-        fn = jax.shard_map(
+        from ..sharding import shard_map_compat
+
+        fn = shard_map_compat(
             local_step,
             mesh=mesh,
             in_specs=((specs_like(state, rep), specs_like(ef, rep)),
                       specs_like(batch, row)),
             out_specs=((specs_like(state, rep), specs_like(ef, rep)),
                        {"loss": rep, "grad_norm": rep, "lr": rep}),
-            check_vma=False,
         )
         return fn((state, ef), batch)
 

@@ -26,7 +26,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 from repro.core import generate_problem, sketched_lstsq
 from repro.core.distributed import shard_rows
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 prob = generate_problem(jax.random.key(0), 4096, 48, cond=1e8, beta=1e-10)
 A, b = shard_rows(mesh, ("data",), prob.A, prob.b)
 res = sketched_lstsq(A, b, jax.random.key(1), mesh=mesh)
@@ -51,16 +51,17 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.optim import CompressionConfig
 from repro.optim.compression import sketched_psum_grads
+from repro.sharding import shard_map_compat
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("data",))
 cfg = CompressionConfig(ratio=4, min_size=1)
 g = jax.random.normal(jax.random.key(0), (65536,)) + 0.5
 ef = jnp.zeros((65536,))
 def f(t, e):
     out, ne = sketched_psum_grads(cfg, {"w": t}, {"w": e}, ("data",), step=0)
     return out["w"], ne["w"]
-r, ne = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-                      check_vma=False)(g, ef)
+r, ne = shard_map_compat(f, mesh=mesh, in_specs=(P(), P()),
+                         out_specs=(P(), P()))(g, ef)
 corr = float(jnp.corrcoef(g, r)[0, 1])
 assert 0.3 < corr < 0.7, corr                      # 1/sqrt(ratio) regime
 assert abs(float(r.mean()/g.mean()) - 1/cfg.ratio) < 0.05  # contractive gain
@@ -102,8 +103,7 @@ from repro.optim import AdamWConfig
 from repro.train import init_train_state, make_train_step
 from repro.train.step import state_pspecs, batch_pspec
 cfg = smoke_config("mixtral-8x7b").replace(n_periods=2)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 dcfg = SyntheticConfig(vocab=cfg.vocab, seq_len=64, global_batch=4, kind="bigram")
 state = init_train_state(cfg, jax.random.key(0))
 sspec = state_pspecs(cfg, mesh)
@@ -132,8 +132,7 @@ from repro.train.elastic import restore_elastic
 cfg = smoke_config("qwen3-0.6b").replace(n_periods=2)
 state = init_train_state(cfg, jax.random.key(0))
 save(r"{tmp_path}", 5, state)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
 restored, step = restore_elastic(r"{tmp_path}", cfg, mesh)
 assert step == 5
 leaf = jax.tree.leaves(restored.params)[0]
@@ -155,8 +154,7 @@ import dataclasses
 for arch, tp in [("mixtral-8x7b", 4), ("deepseek-v2-236b", 2)]:
     cfg = smoke_config(arch)
     cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
-    mesh = jax.make_mesh((8 // tp, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = jax.make_mesh((8 // tp, tp), ("data", "model"))
     params = init_params(cfg, jax.random.key(0))
     p0 = jax.tree.map(lambda a: a[0], params["pattern"][0]["ffn"])
     x = jax.random.normal(jax.random.key(1), (8, 16, cfg.d_model), jnp.float32)

@@ -1,7 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped (not errored) when hypothesis isn't installed, so a bare
+environment can still collect and run the rest of the tier-1 suite;
+``pip install -r requirements-dev.txt`` provides it.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sample_sketch

@@ -8,8 +8,7 @@ from repro.sharding import DEFAULT_RULES, OPT_RULES, logical_to_spec
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.make_mesh((1,), ("data",))
 
 
 def test_missing_axes_dropped(mesh):

@@ -48,6 +48,49 @@ def test_subspace_embedding(kind):
     assert sv.min() > 0.5 and sv.max() < 1.5
 
 
+@pytest.mark.parametrize("kind", sorted(SKETCH_KINDS))
+def test_as_dense_matches_apply_all_kinds(kind):
+    """as_dense() and apply() must realize the SAME linear map S — for all
+    six operator kinds (plus the clarkson_woodruff alias), matrix and
+    vector operands alike."""
+    m, n, d = 150, 6, 48
+    op = sample_sketch(kind, jax.random.key(10), d, m)
+    S = op.as_dense()
+    assert S.shape == (d, m)
+    A = jax.random.normal(jax.random.key(11), (m, n))
+    v = jax.random.normal(jax.random.key(12), (m,))
+    assert jnp.allclose(op.apply(A), S @ A, atol=1e-10)
+    assert jnp.allclose(op.apply(v), S @ v, atol=1e-10)
+
+
+@pytest.mark.parametrize("m,d", [(100, 200), (513, 2048), (64, 65)])
+def test_srht_oversampling_with_replacement(m, d):
+    """d > m_pad triggers the with-replacement row-sample fallback of
+    SRHTSketch.sample — the oversampling SRHT variant must still be a
+    well-formed, correctly scaled operator."""
+    op = sample_sketch("srht", jax.random.key(20), d, m)
+    assert d > op.m_pad  # this parametrization must exercise the fallback
+    assert op.rows.shape == (d,)
+    assert int(op.rows.min()) >= 0 and int(op.rows.max()) < op.m_pad
+    # with-replacement sampling must actually repeat rows (pigeonhole)
+    assert len(set(op.rows.tolist())) <= op.m_pad
+
+    A = jax.random.normal(jax.random.key(21), (m, 3))
+    got = op.apply(A)
+    assert got.shape == (d, 3)
+    assert jnp.allclose(got, op.as_dense() @ A, atol=1e-10)
+    # every column of S has d entries of ±1/sqrt(d) => unit column norm,
+    # so the Frobenius mass ‖S‖_F² = m exactly, replacement or not.
+    S = op.as_dense()
+    assert jnp.allclose(jnp.linalg.norm(S) ** 2, m, rtol=1e-9)
+
+
+def test_srht_undersampled_rows_are_distinct():
+    """d <= m_pad keeps the without-replacement path: rows are unique."""
+    op = sample_sketch("srht", jax.random.key(22), 64, 200)
+    assert len(set(op.rows.tolist())) == 64
+
+
 def test_fwht_involution_and_orthogonality():
     x = jax.random.normal(jax.random.key(0), (64, 3))
     assert jnp.allclose(fwht(fwht(x)) / 64, x, atol=1e-12)
