@@ -1,13 +1,31 @@
-"""Paper Figure 4: forward-error comparison on the §5.1 ill-conditioned
-problem (m=20000, n=100, κ=1e10, β=1e-10): SAA-SAS vs LSQR vs QR vs SAP."""
+"""Paper Figure 4 + forward-stability comparison.
+
+Part 1 (paper Fig. 4): forward error on the §5.1 ill-conditioned problem
+(m=20000, n=100, κ=1e10, β=1e-10): SAA-SAS vs LSQR vs QR vs SAP vs the
+forward-stable solvers (iterative sketching, FOSSILS), all through the
+unified ``lstsq()`` result type.
+
+Part 2 (forward-stability demo, Epperly/EMN 2024): same shape at β=1e-6
+with the sketch applied in OPERATOR form (``materialize_y=False`` — the
+at-scale configuration that ``repro.core.distributed`` uses, where fresh
+triangular-solve rounding enters every LSQR iteration).  Plain SAA-SAS
+stagnates >10x above the QR forward error there; iterative sketching and
+FOSSILS stay within 10x of QR.
+
+Part 3: forward-error vs condition-number curves, κ ∈ 1e2..1e12, for every
+solver the ``lstsq()`` driver dispatches to.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import (
+    fossils,
     generate_problem,
+    iterative_sketching,
     lsqr_dense,
+    lstsq,
     qr_solve,
     saa_sas,
     sap_sas,
@@ -23,9 +41,11 @@ def run(m=20000, n=100, cond=1e10, beta=1e-10, seed=0):
     def relerr(x):
         return float(jnp.linalg.norm(x - xt) / jnp.linalg.norm(xt))
 
+    # ---- Part 1: paper Fig. 4 ------------------------------------------
     # QR ground truth
     t = time_fn(qr_solve, A, b)
-    emit("fig4/qr_direct", t, f"relerr={relerr(qr_solve(A, b)):.3e}")
+    e_qr = relerr(qr_solve(A, b))
+    emit("fig4/qr_direct", t, f"relerr={e_qr:.3e}")
 
     # SAA-SAS (paper algorithm, CW sketch)
     key = jax.random.key(seed + 1)
@@ -42,12 +62,68 @@ def run(m=20000, n=100, cond=1e10, beta=1e-10, seed=0):
     rl = lsqr_dense(A, b, iter_lim=4 * n)
     emit("fig4/lsqr", t, f"relerr={relerr(rl.x):.3e};itn={int(rl.itn)};istop={int(rl.istop)}")
 
-    # SAP baseline (paper's negative result)
+    # SAP baseline (now warm-started through the shared factor)
     rs = sap_sas(A, b, jax.random.key(seed + 2))
     t = time_fn(lambda: sap_sas(A, b, jax.random.key(seed + 2)))
     emit("fig4/sap_sas", t, f"relerr={relerr(rs.x):.3e};itn={int(rs.itn)}")
+
+    # Forward-stable solvers (Epperly 2024 / EMN 2024)
+    ri = iterative_sketching(A, b, key)
+    t = time_fn(lambda: iterative_sketching(A, b, key))
+    emit("fig4/iterative_sketching", t, f"relerr={relerr(ri.x):.3e};itn={int(ri.itn)}")
+    rf = fossils(A, b, key)
+    t = time_fn(lambda: fossils(A, b, key))
+    emit("fig4/fossils", t, f"relerr={relerr(rf.x):.3e};itn={int(rf.itn)}")
 
     # Sketch-size sensitivity of SAA error (paper §2.3 discussion)
     for mult in (2, 4, 8):
         r = saa_sas(A, b, key, sketch_size=mult * n)
         emit(f"fig4/saa_s{mult}n", 0.0, f"relerr={relerr(r.x):.3e};itn={int(r.itn)}")
+
+    # ---- Part 2: forward-stability demo (operator form, β=1e-6) --------
+    # Pinned to the benchmark shape where the stagnation is unambiguous.
+    forward_stability(cond=cond, seed=seed)
+
+    # ---- Part 3: forward error vs condition number ---------------------
+    cond_curves(m=min(m, 8000), n=min(n, 64), beta=beta, seed=seed)
+
+
+def forward_stability(m=20000, n=100, cond=1e10, beta=1e-6, seed=0):
+    """Plain SAA-SAS (operator form) stagnates; iterative/FOSSILS do not."""
+    prob = generate_problem(jax.random.key(seed), m, n, cond=cond, beta=beta)
+    A, b, xt = prob.A, prob.b, prob.x_true
+
+    def relerr(x):
+        return float(jnp.linalg.norm(x - xt) / jnp.linalg.norm(xt))
+
+    e_qr = relerr(qr_solve(A, b))
+    key = jax.random.key(seed + 1)
+    rows = [
+        ("saa_sas_opform", saa_sas(A, b, key, materialize_y=False)),
+        ("iterative_sketching", iterative_sketching(A, b, key)),
+        ("fossils", fossils(A, b, key)),
+    ]
+    emit("stability/qr_direct", 0.0, f"relerr={e_qr:.3e};beta={beta:.0e}")
+    for name, r in rows:
+        e = relerr(r.x)
+        emit(
+            f"stability/{name}",
+            0.0,
+            f"relerr={e:.3e};vs_qr={e / e_qr:.1f}x;itn={int(r.itn)}",
+        )
+
+
+def cond_curves(m=8000, n=64, beta=1e-10, seed=0):
+    """Forward error vs κ for every method ``lstsq()`` can dispatch to."""
+    methods = ("direct", "lsqr", "saa", "sap", "iterative", "fossils")
+    for cond in (1e2, 1e4, 1e6, 1e8, 1e10, 1e12):
+        prob = generate_problem(jax.random.key(seed), m, n, cond=cond, beta=beta)
+        A, b, xt = prob.A, prob.b, prob.x_true
+        for method in methods:
+            res = lstsq(A, b, jax.random.key(seed + 1), method=method)
+            e = float(jnp.linalg.norm(res.x - xt) / jnp.linalg.norm(xt))
+            emit(
+                f"cond_curve/{method}/k{cond:.0e}",
+                0.0,
+                f"relerr={e:.3e};itn={int(res.itn)};istop={int(res.istop)}",
+            )

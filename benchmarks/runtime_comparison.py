@@ -1,4 +1,6 @@
-"""Paper Figure 3: runtime vs m for SAA-SAS vs LSQR — per backend.
+"""Paper Figure 3: runtime vs m for SAA-SAS vs LSQR — per backend, plus the
+forward-stable solvers (iterative sketching, FOSSILS) on the reference
+backend so their overhead relative to SAA-SAS is visible per size.
 
 Paper sweep: m equally log-spaced in [2^12, 2^20], n=1000.  Default here is
 capped at 2^17 with n=256 (single CPU core, see DESIGN.md §7 deviations);
@@ -16,7 +18,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import generate_problem, lsqr_dense, resolve_backend, saa_sas
+from repro.core import (
+    fossils,
+    generate_problem,
+    iterative_sketching,
+    lsqr_dense,
+    resolve_backend,
+    saa_sas,
+)
 
 from .common import emit, time_fn
 
@@ -58,4 +67,24 @@ def run(full=False, seed=0):
             f"fig3/lsqr/m{m}",
             t_lsqr,
             f"n={n};itn={int(rl.itn)};speedup={t_lsqr / t_saa:.2f}x",
+        )
+
+        # Forward-stable solvers, pinned to the reference backend so the
+        # vs_saa ratio against the reference-backend SAA time isolates
+        # algorithmic overhead (not backend differences).
+        t_it = time_fn(
+            lambda: iterative_sketching(A, b, key, backend="reference"), repeats=3
+        )
+        ri = iterative_sketching(A, b, key, backend="reference")
+        emit(
+            f"fig3/iterative_sketching/m{m}",
+            t_it,
+            f"n={n};itn={int(ri.itn)};vs_saa={t_it / t_saa:.2f}x",
+        )
+        t_fo = time_fn(lambda: fossils(A, b, key, backend="reference"), repeats=3)
+        rf = fossils(A, b, key, backend="reference")
+        emit(
+            f"fig3/fossils/m{m}",
+            t_fo,
+            f"n={n};itn={int(rf.itn)};vs_saa={t_fo / t_saa:.2f}x",
         )

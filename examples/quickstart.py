@@ -1,8 +1,14 @@
 """Quickstart: solve an ill-conditioned overdetermined least-squares problem
-with Sketch-and-Apply (SAA-SAS, paper Algorithm 1).
+through the unified ``lstsq()`` driver.
 
     PYTHONPATH=src python examples/quickstart.py [--m 20000] [--n 100]
                                                  [--backend auto]
+
+``lstsq(A, b, key)`` auto-selects a solver from the problem shape, the
+sketch-size regime and the requested accuracy ("fast" → SAA-SAS,
+"balanced" → iterative sketching, "high" → FOSSILS; small or near-square
+problems → direct QR; no key → LSQR).  ``method=`` forces a specific
+solver; every method returns the same ``SolveResult``.
 
 The ``--backend`` knob selects the sketch-apply implementation (see
 ``repro.core.backend``):
@@ -13,8 +19,8 @@ The ``--backend`` knob selects the sketch-apply implementation (see
   run in interpret mode (exact kernel semantics, much slower — useful for
   validation, not speed)
 
-The same knob threads through ``saa_sas``, ``sap_sas``, ``saa_sas_batch``
-and the distributed ``sketched_lstsq``.
+The same knob threads through every sketched solver, the batched front-end
+``saa_sas_batch`` and the distributed ``sketched_lstsq``.
 """
 import argparse
 import time
@@ -24,7 +30,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
-from repro.core import generate_problem, lsqr_dense, qr_solve, saa_sas, saa_sas_batch
+from repro.core import generate_problem, lstsq, saa_sas_batch, select_method
 
 
 def main():
@@ -49,21 +55,23 @@ def main():
     def relerr(x):
         return float(jnp.linalg.norm(x - prob.x_true) / jnp.linalg.norm(prob.x_true))
 
-    for name, solve in [
-        (
-            f"saa_sas (backend={args.backend})",
-            lambda: saa_sas(
-                prob.A, prob.b, jax.random.key(1), backend=args.backend
-            ).x,
-        ),
-        ("qr direct", lambda: qr_solve(prob.A, prob.b)),
-        ("lsqr baseline", lambda: lsqr_dense(prob.A, prob.b, iter_lim=2 * args.n).x),
-    ]:
-        x = jax.block_until_ready(solve())  # warm
+    auto = select_method(args.m, args.n)
+    print(f"lstsq auto-selection for this shape: {auto!r}\n")
+
+    key = jax.random.key(1)
+    for method in ("auto", "saa", "iterative", "fossils", "direct", "lsqr"):
+        solve = lambda: lstsq(
+            prob.A, prob.b, key, method=method, backend=args.backend
+        )
+        res = jax.block_until_ready(solve())  # warm
         t0 = time.perf_counter()
-        x = jax.block_until_ready(solve())
+        res = jax.block_until_ready(solve())
         dt = time.perf_counter() - t0
-        print(f"{name:30s} {dt*1e3:8.1f} ms   relative error {relerr(x):.3e}")
+        label = f"lstsq[{method}] -> {res.method}"
+        print(
+            f"{label:32s} {dt*1e3:8.1f} ms   relative error {relerr(res.x):.3e}"
+            f"   itn={int(res.itn):3d}"
+        )
 
     # Serving-style multi-query: many right-hand sides against one design
     # matrix share a single sketch + QR factor via saa_sas_batch.  Column 0
@@ -86,7 +94,7 @@ def main():
     X = jax.block_until_ready(batch())
     dt = time.perf_counter() - t0
     print(
-        f"{'saa_sas_batch (k=%d rhs)' % k:30s} {dt*1e3:8.1f} ms   "
+        f"{'saa_sas_batch (k=%d rhs)' % k:32s} {dt*1e3:8.1f} ms   "
         f"relative error {relerr(X[:, 0]):.3e}  ({dt/k*1e3:.1f} ms/query)"
     )
 

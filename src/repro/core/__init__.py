@@ -2,31 +2,44 @@
 
 - ``sketch``      — the six sketching operators (paper §2)
 - ``backend``     — sketch-apply backend policy (reference jnp vs Pallas)
+- ``precond``     — the shared sketched-QR factor (preconditioner/whitener)
+- ``result``      — the unified ``SolveResult`` every solver returns
 - ``lsqr``        — operator-form LSQR baseline/inner solver (paper §3.1)
 - ``saa``         — SAA-SAS, Algorithm 1 (paper §4) + batched front-end
-- ``sap``         — sketch-and-precondition baseline (paper §4, negative result)
+- ``sap``         — sketch-and-precondition baseline (paper §4)
+- ``iterative``   — forward-stable iterative sketching + FOSSILS
 - ``direct``      — deterministic QR/SVD ground truth
+- ``lstsq``       — one-call driver that auto-selects among all of the above
 - ``problems``    — §5.1 ill-conditioned problem generator
 - ``distributed`` — multi-pod row-sharded SAA-SAS (shard_map + psum)
 """
-from . import backend, direct, distributed, lsqr, problems, sap, sketch
+from . import backend, direct, distributed, iterative, lsqr, precond, problems, sap, sketch
 from .backend import BACKENDS, ResolvedBackend, resolve as resolve_backend
 from .direct import normal_equations, qr_solve, svd_solve
 from .distributed import DistributedLSQResult, sketched_lstsq
+from .iterative import damping_momentum, fossils, iterative_sketching
 from .lsqr import LSQRResult, lsqr as lsqr_solve, lsqr_dense
+from .lstsq import ACCURACIES, METHODS, lstsq, select_method
+from .precond import SketchedFactor, default_sketch_size, distortion
 from .problems import Problem, generate as generate_problem
-from .saa import SAAResult, default_sketch_size, saa_sas, saa_sas_batch
+from .result import SolveResult
+from .saa import SAAResult, saa_sas, saa_sas_batch
 from .sap import sap_sas
 from .sketch import SKETCH_KINDS, fwht, sample as sample_sketch
 
 __all__ = [
-    "backend", "direct", "distributed", "lsqr", "problems", "sap", "sketch",
+    "backend", "direct", "distributed", "iterative", "lsqr", "precond",
+    "problems", "sap", "sketch",
     "BACKENDS", "ResolvedBackend", "resolve_backend",
     "normal_equations", "qr_solve", "svd_solve",
     "DistributedLSQResult", "sketched_lstsq",
+    "damping_momentum", "fossils", "iterative_sketching",
     "LSQRResult", "lsqr_solve", "lsqr_dense",
+    "ACCURACIES", "METHODS", "lstsq", "select_method",
+    "SketchedFactor", "default_sketch_size", "distortion",
     "Problem", "generate_problem",
-    "SAAResult", "default_sketch_size", "saa_sas", "saa_sas_batch",
+    "SolveResult",
+    "SAAResult", "saa_sas", "saa_sas_batch",
     "sap_sas",
     "SKETCH_KINDS", "fwht", "sample_sketch",
 ]

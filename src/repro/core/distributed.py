@@ -22,29 +22,24 @@ collective term is O(s·n) per solve + O(n) per LSQR iteration.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.scipy.linalg import solve_triangular
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..sharding import shard_map_compat
 from . import backend as backend_lib
 from . import sketch as sketch_lib
 from .lsqr import lsqr
-from .saa import default_sketch_size
+from .precond import SketchedFactor, default_sketch_size
+from .result import SolveResult
 
 __all__ = ["sketched_lstsq", "DistributedLSQResult", "shard_rows"]
 
-
-class DistributedLSQResult(NamedTuple):
-    x: jax.Array
-    istop: jax.Array
-    itn: jax.Array
-    rnorm: jax.Array
+# Superseded by the unified result type.  The alias keeps attribute access
+# working; field order/arity changed (arnorm, used_fallback... added), so
+# positional unpacking of the old 4-tuple is not preserved.
+DistributedLSQResult = SolveResult
 
 
 def shard_rows(mesh, axes, A, b):
@@ -67,7 +62,7 @@ def sketched_lstsq(
     steptol: float | None = None,
     iter_lim: int = 100,
     backend: str = "auto",
-) -> DistributedLSQResult:
+) -> SolveResult:
     """Distributed SAA-SAS.  ``A``/``b`` must be row-sharded over ``axes``.
 
     Jit-compatible; lowers to one psum of the s×(n+1) sketch + one psum per
@@ -96,17 +91,18 @@ def sketched_lstsq(
         Sb = lax.psum(local_op.apply(b_i, backend=backend), axes)
 
         # --- replicated small factorization -------------------------------
-        Q, R = jnp.linalg.qr(SA, mode="reduced")
-        z0 = Q.T @ Sb
+        factor = SketchedFactor.from_sketch(SA)
+        z0 = factor.warm_start(Sb)
 
         # --- distributed LSQR on Y = A R⁻¹ (operator form) ----------------
+        # mv touches only local rows; rmv psums the shard contributions
+        # (R is replicated and the triangular solve is linear, so solving
+        # per-shard then psumming equals solving the psummed gradient).
         def mv(z):
-            return A_i @ solve_triangular(R, z, lower=False)
+            return factor.whiten_mv(A_i, z)
 
         def rmv(u):
-            return lax.psum(
-                solve_triangular(R, A_i.T @ u, trans=1, lower=False), axes
-            )
+            return lax.psum(factor.whiten_rmv(A_i, u), axes)
 
         def udot(u, w):
             return lax.psum(jnp.vdot(u, w), axes)
@@ -115,15 +111,18 @@ def sketched_lstsq(
             mv, rmv, b_i, x0=z0, n=n, atol=atol, btol=btol,
             steptol=steptol, iter_lim=iter_lim, udot=udot,
         )
-        x = solve_triangular(R, res.x, lower=False)
-        return x, res.istop, res.itn, res.rnorm
+        x = factor.precondition(res.x)
+        return x, res.istop, res.itn, res.rnorm, res.arnorm
 
     row = P(axes)
     fn = shard_map_compat(
         local_solve,
         mesh=mesh,
         in_specs=(P(axes, None), row, row, row),
-        out_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
     )
-    x, istop, itn, rnorm = fn(A, b, op.buckets, op.signs)
-    return DistributedLSQResult(x=x, istop=istop, itn=itn, rnorm=rnorm)
+    x, istop, itn, rnorm, arnorm = fn(A, b, op.buckets, op.signs)
+    return SolveResult(
+        x=x, istop=istop, itn=itn, rnorm=rnorm, arnorm=arnorm,
+        used_fallback=jnp.asarray(False),
+    )

@@ -8,6 +8,10 @@ injectable ``dot``/norm so the distributed driver can psum them).
 Supports a warm start ``x0`` (used by SAA-SAS with ``z₀ = Qᵀc``) by solving
 for the correction ``dx`` against the residual ``b − A x₀``.
 
+Returns the unified :class:`repro.core.result.SolveResult`; ``history=True``
+additionally records the per-iteration residual norms into a fixed-length
+``(iter_lim,)`` array (nan-padded past the final iteration).
+
 istop codes follow SciPy's convention:
   0 x=0 is the exact solution;  1 residual-level convergence (btol/atol);
   2 least-squares convergence (AᵀR small);  7 iteration limit;
@@ -20,29 +24,20 @@ istop codes follow SciPy's convention:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .result import SolveResult
+
 __all__ = ["lsqr", "lsqr_dense", "LSQRResult"]
 
-
-class LSQRResult(NamedTuple):
-    x: jax.Array
-    istop: jax.Array  # int32
-    itn: jax.Array  # int32
-    rnorm: jax.Array  # ‖b − Ax‖
-    arnorm: jax.Array  # ‖Aᵀ(b − Ax)‖
-    anorm: jax.Array  # Frobenius-ish estimate of ‖A‖
-    acond: jax.Array  # condition estimate
-    xnorm: jax.Array
-
-    @property
-    def converged(self):
-        return (self.istop > 0) & (self.istop != 7)
+# Superseded by the unified result type.  The alias keeps attribute access
+# for the shared fields working; the old anorm/acond/xnorm diagnostics and
+# the old positional field order are gone.
+LSQRResult = SolveResult
 
 
 class _State(NamedTuple):
@@ -61,6 +56,7 @@ class _State(NamedTuple):
     xnorm: jax.Array
     arnorm: jax.Array
     n_small_steps: jax.Array  # consecutive relative steps below steptol
+    rhist: jax.Array  # (iter_lim,) residual history, or (0,) when disabled
 
 
 def _sym_ortho(a, b):
@@ -86,12 +82,14 @@ def lsqr(
     steptol: float = 0.0,
     vdot: Callable = jnp.vdot,
     udot: Callable = jnp.vdot,
-) -> LSQRResult:
+    history: bool = False,
+) -> SolveResult:
     """Minimize ‖Ax − b‖₂.
 
     ``udot`` is the inner product for m-space vectors (u, b) and ``vdot`` for
     n-space vectors — the distributed driver overrides ``udot`` with a
-    psum-reducing dot when u/b are sharded across devices.
+    psum-reducing dot when u/b are sharded across devices.  ``history=True``
+    records per-iteration residual norms (fixed ``(iter_lim,)`` shape).
     """
     dtype = b.dtype
 
@@ -143,6 +141,7 @@ def lsqr(
         xnorm=jnp.asarray(0.0, dtype),
         arnorm=alfa * beta,
         n_small_steps=jnp.asarray(0, jnp.int32),
+        rhist=jnp.full((iter_lim if history else 0,), jnp.nan, dtype),
     )
     ctol = 0.0 if conlim <= 0 else 1.0 / conlim
 
@@ -206,6 +205,8 @@ def lsqr(
         istop = jnp.where(test2 <= atol, 2, istop)
         istop = jnp.where(test1 <= rtol, 1, istop)
 
+        rhist = s.rhist.at[itn - 1].set(rnorm) if history else s.rhist
+
         return _State(
             itn=itn,
             istop=istop.astype(jnp.int32),
@@ -222,23 +223,23 @@ def lsqr(
             xnorm=xnorm,
             arnorm=arnorm,
             n_small_steps=n_small,
+            rhist=rhist,
         )
 
     final = lax.while_loop(cond, body, init)
     istop = jnp.where((bnorm == 0) | (init.arnorm == 0), 0, final.istop)
     x_out = final.x if x_base is None else final.x + x_base
-    return LSQRResult(
+    return SolveResult(
         x=x_out,
         istop=istop,
         itn=final.itn,
         rnorm=final.phibar,
         arnorm=final.arnorm,
-        anorm=jnp.sqrt(final.anorm2),
-        acond=final.acond,
-        xnorm=final.xnorm,
+        used_fallback=jnp.asarray(False),
+        history=final.rhist if history else None,
     )
 
 
-def lsqr_dense(A: jax.Array, b: jax.Array, **kw) -> LSQRResult:
+def lsqr_dense(A: jax.Array, b: jax.Array, **kw) -> SolveResult:
     """LSQR with an explicit dense A (the paper's baseline configuration)."""
     return lsqr(lambda x: A @ x, lambda u: A.T @ u, b, n=A.shape[1], **kw)

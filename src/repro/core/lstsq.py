@@ -1,0 +1,150 @@
+"""``lstsq`` — the one-call driver over every least-squares solver.
+
+``lstsq(A, b, key)`` auto-selects among the package's solvers by shape,
+sketch-size regime and requested accuracy, and always returns the unified
+:class:`repro.core.result.SolveResult` (with ``.method`` naming the solver
+that ran).  ``method=`` forces a specific solver:
+
+=============  ============================================================
+method         solver
+=============  ============================================================
+``direct``     Householder-QR ``qr_solve`` (ground truth; small problems)
+``lsqr``       plain LSQR on A (no sketching; works without a key)
+``saa``        SAA-SAS, paper Algorithm 1 (fastest sketched path)
+``sap``        sketch-and-precondition baseline (paper §4)
+``iterative``  iterative sketching with damping + momentum (forward stable)
+``fossils``    sketch-and-precondition + iterative refinement (forward
+               stable, direct-method accuracy)
+=============  ============================================================
+
+Auto-selection (``method="auto"``):
+
+- problems too small or too square for sketching to pay off → ``direct``;
+- large and strongly overdetermined with a PRNG key → a sketched solver by
+  ``accuracy``: ``"fast"`` → ``saa``, ``"balanced"`` (default) →
+  ``iterative``, ``"high"`` → ``fossils``;
+- large but no key supplied → ``lsqr`` (the only deterministic iterative
+  path).
+
+The driver is a thin Python-level dispatch — every method underneath is its
+own jitted, backend-dispatched solver, so there is no extra trace or
+runtime cost over calling the solver directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .direct import qr_solve
+from .iterative import fossils, iterative_sketching
+from .lsqr import lsqr_dense
+from .precond import default_sketch_size
+from .result import SolveResult
+from .saa import saa_sas
+from .sap import sap_sas
+
+__all__ = ["lstsq", "select_method", "METHODS", "ACCURACIES"]
+
+METHODS = ("direct", "lsqr", "saa", "sap", "iterative", "fossils")
+ACCURACIES = ("fast", "balanced", "high")
+_ALIASES = {"iterative_sketching": "iterative", "qr": "direct"}
+
+# m·n² flops below which Householder QR is effectively free and sketching
+# overhead (operator draw + sketch + small QR) cannot pay for itself.
+DIRECT_FLOP_CUTOFF = 1 << 26
+
+
+def select_method(
+    m: int,
+    n: int,
+    *,
+    has_key: bool = True,
+    accuracy: str = "balanced",
+    sketch_size: int | None = None,
+) -> str:
+    """Pick a solver from shape, sketch-size regime and requested accuracy."""
+    if accuracy not in ACCURACIES:
+        raise ValueError(f"unknown accuracy {accuracy!r}; have {ACCURACIES}")
+    s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
+    # The sketched solvers need the embedding to actually shrink the row
+    # space: s rows must both dominate n and be a small fraction of m.
+    regime_ok = (s >= n + 1) and (m >= 2 * s) and (m >= 4 * n)
+    big = m * n * n > DIRECT_FLOP_CUTOFF
+    if big and regime_ok and has_key:
+        return {"fast": "saa", "balanced": "iterative", "high": "fossils"}[accuracy]
+    if big and not has_key:
+        return "lsqr"
+    return "direct"
+
+
+@jax.jit
+def _direct_result(A, b):
+    x = qr_solve(A, b)
+    r = b - A @ x
+    return SolveResult(
+        x=x,
+        istop=jnp.asarray(1, jnp.int32),
+        itn=jnp.asarray(0, jnp.int32),
+        rnorm=jnp.linalg.norm(r),
+        arnorm=jnp.linalg.norm(A.T @ r),
+        used_fallback=jnp.asarray(False),
+    )
+
+
+def lstsq(
+    A: jax.Array,
+    b: jax.Array,
+    key: jax.Array | None = None,
+    *,
+    method: str = "auto",
+    accuracy: str = "balanced",
+    sketch: str = "clarkson_woodruff",
+    sketch_size: int | None = None,
+    atol: float | None = None,
+    btol: float | None = None,
+    steptol: float | None = None,
+    iter_lim: int | None = None,
+    backend: str = "auto",
+    history: bool = False,
+) -> SolveResult:
+    """Solve min‖Ax − b‖₂ with an auto-selected (or forced) solver.
+
+    ``atol``/``btol``/``steptol``/``iter_lim`` left as ``None`` use each
+    solver's own defaults; values are forwarded only to solvers that accept
+    them (``fossils`` controls its budget via refinement/inner-loop
+    parameters, so ``atol``/``btol``/``iter_lim`` do not apply there).
+    """
+    m, n = A.shape
+    method = _ALIASES.get(method, method)
+    if method == "auto":
+        method = select_method(
+            m, n, has_key=key is not None, accuracy=accuracy,
+            sketch_size=sketch_size,
+        )
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; have {('auto',) + METHODS}")
+    if method in ("saa", "sap", "iterative", "fossils") and key is None:
+        raise ValueError(f"method {method!r} needs a PRNG key")
+
+    tol = {
+        k: v
+        for k, v in dict(atol=atol, btol=btol, steptol=steptol,
+                         iter_lim=iter_lim).items()
+        if v is not None
+    }
+    sk = dict(sketch=sketch, sketch_size=sketch_size, backend=backend)
+
+    if method == "direct":
+        res = _direct_result(A, b)
+    elif method == "lsqr":
+        res = lsqr_dense(A, b, history=history, **tol)
+    elif method == "saa":
+        res = saa_sas(A, b, key, history=history, **sk, **tol)
+    elif method == "sap":
+        res = sap_sas(A, b, key, history=history, **sk, **tol)
+    elif method == "iterative":
+        res = iterative_sketching(A, b, key, history=history, **sk, **tol)
+    else:  # fossils
+        fkw = {"steptol": steptol} if steptol is not None else {}
+        res = fossils(A, b, key, history=history, **sk, **fkw)
+    return res._replace(method=method)

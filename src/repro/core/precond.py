@@ -1,0 +1,153 @@
+"""The sketched QR factor — the one reusable object behind every solver.
+
+The paper's speed/accuracy claims all rest on the same construction: draw a
+subspace embedding S (s×m, s ≪ m), sketch B = SA, and take the (reduced,
+Householder) QR factor B = QR.  The triangular R is then simultaneously
+
+- a **right preconditioner**: A R⁻¹ has all singular values in
+  [1/(1+ε), 1/(1−ε)] w.h.p., where ε is the embedding distortion — so any
+  Krylov or gradient iteration on the *whitened* operator Y = A R⁻¹
+  converges at a κ-independent rate; and
+- a **coordinate change** back to x-space: x = R⁻¹ z.
+
+Before this module the sketch → QR → triangular-solve plumbing was copied
+near-identically into ``saa.py`` (twice), ``sap.py`` and ``distributed.py``.
+:class:`SketchedFactor` names it once; SAA-SAS, SAP-SAS, the batched and
+distributed drivers, and the forward-stable solvers in
+``repro.core.iterative`` are all built on it.
+
+``SketchedFactor`` is a NamedTuple of arrays, hence a JAX pytree: it can be
+carried through ``jit``, ``vmap`` (the batched solver), ``lax.cond`` (the
+SAA fallback) and ``shard_map`` (the distributed driver, which assembles the
+sketch with a psum and then builds the factor replicated).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+from . import sketch as sketch_lib
+
+__all__ = ["SketchedFactor", "default_sketch_size", "distortion"]
+
+
+def default_sketch_size(n: int, m: int) -> int:
+    """Paper regime: m ≫ s > n.  s = 4n is the usual CW sweet spot."""
+    return int(min(max(4 * n, n + 16), max(m // 2, n + 1)))
+
+
+def distortion(sketch_size: int, n: int) -> float:
+    """A-priori embedding distortion estimate ε ≈ √(n/s).
+
+    For the dense and CountSketch-style embeddings at s = Θ(n) this is the
+    right order for the subspace distortion w.h.p.; it is what the damping
+    and momentum coefficients of ``repro.core.iterative`` are derived from
+    (Epperly 2024).  Clipped away from 1 so downstream rate formulas stay
+    finite even for aggressive (s ≈ n) sketches.
+    """
+    return min((n / float(sketch_size)) ** 0.5, 0.99)
+
+
+class SketchedFactor(NamedTuple):
+    """QR factor of a sketch SA: preconditioner, whitener and warm-starter.
+
+    ``Q`` is (s, n) with orthonormal columns, ``R`` is (n, n) upper
+    triangular with B = SA = QR.  All methods are linear-algebra one-liners;
+    they exist so every solver spells the same operation the same way.
+    """
+
+    Q: jax.Array  # (s, n) orthonormal columns of the sketched matrix
+    R: jax.Array  # (n, n) upper triangular
+
+    # ---------------------------------------------------------------- build
+    @classmethod
+    def from_sketch(cls, B: jax.Array) -> "SketchedFactor":
+        """Factor an already-assembled sketch B = SA (HHQR)."""
+        Q, R = jnp.linalg.qr(B, mode="reduced")
+        return cls(Q=Q, R=R)
+
+    @classmethod
+    def build(
+        cls,
+        A: jax.Array,
+        key: jax.Array,
+        *,
+        sketch: str = "clarkson_woodruff",
+        sketch_size: int | None = None,
+        backend: str = "auto",
+    ):
+        """Draw S, sketch A and factor: returns ``(factor, op)``.
+
+        The sketch operator ``op`` is returned so callers can sketch the
+        right-hand side (``op.apply(b)`` → warm start) or re-sketch a
+        perturbed matrix (the SAA fallback) with the SAME S.
+        """
+        m, n = A.shape
+        s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
+        op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
+        B = op.apply(A, backend=backend)
+        return cls.from_sketch(B), op
+
+    # ------------------------------------------------------------ shape info
+    @property
+    def n(self) -> int:
+        return self.R.shape[-1]
+
+    @property
+    def sketch_size(self) -> int:
+        return self.Q.shape[-2]
+
+    # ------------------------------------------------- triangular primitives
+    def precondition(self, z: jax.Array) -> jax.Array:
+        """x = R⁻¹ z — z-space (whitened) back to x-space (back substitution)."""
+        return solve_triangular(self.R, z, lower=False)
+
+    def rt_solve(self, v: jax.Array) -> jax.Array:
+        """R⁻ᵀ v (forward substitution on the lower-triangular Rᵀ)."""
+        return solve_triangular(self.R, v, trans=1, lower=False)
+
+    # --------------------------------------------------- whitened operator Y
+    def whiten_mv(self, A: jax.Array, z: jax.Array) -> jax.Array:
+        """Y z = A (R⁻¹ z) — operator-form matvec of the whitened system."""
+        return A @ self.precondition(z)
+
+    def whiten_rmv(self, A: jax.Array, u: jax.Array) -> jax.Array:
+        """Yᵀ u = R⁻ᵀ (Aᵀ u) — operator-form rmatvec of the whitened system."""
+        return self.rt_solve(A.T @ u)
+
+    def materialize_whitened(self, A: jax.Array) -> jax.Array:
+        """Y = A R⁻¹ explicitly (one n×n triangular solve against Aᵀ).
+
+        O(mn) extra memory; trades the two triangular solves per iteration
+        of the operator form for plain matmuls (the fast path when Y fits).
+        """
+        return self.rt_solve(A.T).T
+
+    # ------------------------------------------------------------ warm start
+    def warm_start(self, c: jax.Array) -> jax.Array:
+        """z₀ = Qᵀ c with c = Sb — the sketch-and-solve solution in z-space.
+
+        This is the minimizer of the *sketched* problem min‖B z − c‖, an
+        O(ε)-accurate starting point for any iteration on the whitened
+        system; using it is what makes the preconditioned solve start a
+        constant factor from optimal rather than from zero.
+        """
+        return self.Q.T @ c
+
+    def sketch_and_solve(self, c: jax.Array) -> jax.Array:
+        """x̂ = R⁻¹ Qᵀ c — the plain sketch-and-solve estimate in x-space."""
+        return self.precondition(self.warm_start(c))
+
+    # ------------------------------------------------------- normal equations
+    def normal_solve(self, g: jax.Array) -> jax.Array:
+        """(RᵀR)⁻¹ g = (SA)ᵀ(SA) \\ g — the sketched-normal-equations solve.
+
+        One forward + one back substitution; this is the per-iteration step
+        of iterative sketching (``repro.core.iterative``), where
+        g = Aᵀ(b − Ax) is the true gradient and RᵀR ≈ AᵀA its sketched
+        Hessian.
+        """
+        return self.precondition(self.rt_solve(g))

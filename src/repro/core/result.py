@@ -1,0 +1,54 @@
+"""Unified solver result type.
+
+Every least-squares solver in ``repro.core`` — direct, LSQR, SAA-SAS,
+SAP-SAS, iterative sketching, FOSSILS, and the distributed driver — returns
+this one :class:`SolveResult`, superseding the old ``SAAResult`` /
+``LSQRResult`` duality so callers (and the ``lstsq()`` driver) can switch
+methods without touching downstream code.
+
+Fields that a method does not track are filled with neutral values
+(``arnorm = nan`` where no AᵀR estimate exists, ``used_fallback = False``
+where there is no fallback path).  ``history``, when requested via the
+solvers' ``history=True`` static flag, is a fixed-length ``(iter_lim,)``
+array of per-iteration residual norms padded with ``nan`` past the final
+iteration — fixed-shape so it is jit/while_loop/vmap-native.  ``method`` is
+filled in by :func:`repro.core.lstsq` *outside* jit (strings are not valid
+jit outputs) and is ``None`` when a solver is called directly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+
+__all__ = ["SolveResult", "ISTOP_MEANING"]
+
+# istop follows SciPy's LSQR convention, extended with our step-floor code.
+ISTOP_MEANING = {
+    0: "x = 0 is the exact solution",
+    1: "residual-level convergence (btol/atol)",
+    2: "least-squares convergence (Aᵀr small)",
+    3: "condition-number limit reached",
+    4: "residual-level convergence at machine precision",
+    5: "least-squares convergence at machine precision",
+    6: "condition-number limit at machine precision",
+    7: "iteration limit",
+    8: "step-size floor (converged to the numerical floor)",
+}
+
+
+class SolveResult(NamedTuple):
+    """What every ``repro.core`` least-squares solver returns."""
+
+    x: jax.Array
+    istop: jax.Array  # int32, see ISTOP_MEANING
+    itn: jax.Array  # int32, iterations taken (0 for direct methods)
+    rnorm: jax.Array  # ‖b − Ax‖
+    arnorm: jax.Array  # ‖Aᵀ(b − Ax)‖ estimate (nan if untracked)
+    used_fallback: jax.Array  # bool; only SAA-SAS's perturbation path sets it
+    history: jax.Array | None = None  # (iter_lim,) residual norms, nan-padded
+    method: str | None = None  # set by lstsq() outside jit
+
+    @property
+    def converged(self):
+        return (self.istop > 0) & (self.istop != 7)

@@ -12,6 +12,10 @@
      "B = SA"; we sketch the perturbed Ã, which is the mathematically
      consistent reading — noted in DESIGN.md.)
 
+Steps 2–5 and 7 are the shared :class:`repro.core.precond.SketchedFactor`:
+``build`` (sketch + QR), ``warm_start`` (z₀ = Qᵀc), ``whiten_mv/rmv`` or
+``materialize_whitened`` (the apply step), ``precondition`` (x = R⁻¹z).
+
 The sketch apply (step 2) is the compute hot path and dispatches through
 ``repro.core.backend``: ``backend="reference"`` runs the pure-jnp operator
 paths, ``backend="pallas"`` the TPU Pallas kernels in ``repro.kernels``
@@ -30,35 +34,23 @@ across a batch of equally-shaped problems (A (batch,m,n), b (batch,m)).
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.scipy.linalg import solve_triangular
 
 from . import sketch as sketch_lib
 from .backend import resolve_backend_arg
-from .lsqr import LSQRResult, lsqr
+from .lsqr import lsqr
+from .precond import SketchedFactor, default_sketch_size
+from .result import SolveResult
 
 __all__ = ["saa_sas", "saa_sas_batch", "SAAResult", "default_sketch_size"]
 
-
-class SAAResult(NamedTuple):
-    x: jax.Array
-    istop: jax.Array
-    itn: jax.Array
-    rnorm: jax.Array
-    used_fallback: jax.Array  # bool
-
-    @property
-    def converged(self):
-        return (self.istop > 0) & (self.istop != 7)
-
-
-def default_sketch_size(n: int, m: int) -> int:
-    """Paper regime: m ≫ s > n.  s = 4n is the usual CW sweet spot."""
-    return int(min(max(4 * n, n + 16), max(m // 2, n + 1)))
+# Superseded by the unified result type.  The alias keeps attribute access
+# (res.x, res.itn, ...) working; field ORDER changed (arnorm inserted), so
+# positional unpacking of the old 5-tuple is not preserved.
+SAAResult = SolveResult
 
 
 def _estimate_2norm(A, key, iters: int = 25):
@@ -74,33 +66,23 @@ def _estimate_2norm(A, key, iters: int = 25):
     return jnp.linalg.norm(A @ v)
 
 
-def _solve_with_factor(A, b, B, c, *, materialize_y, atol, btol, iter_lim, steptol):
-    """Steps 3–6 of Algorithm 1 given the sketched pair (B, c)."""
-    Q, R = jnp.linalg.qr(B, mode="reduced")  # HHQR
-    z0 = Q.T @ c
+def _solve_with_factor(
+    A, b, factor: SketchedFactor, c, *,
+    materialize_y, atol, btol, iter_lim, steptol, history=False,
+):
+    """Steps 4–7 of Algorithm 1 given the sketched factor and c = Sb."""
+    z0 = factor.warm_start(c)
     if materialize_y:
-        # Y = A R⁻¹  ⇔  Rᵀ Yᵀ = Aᵀ (forward substitution on lower-tri Rᵀ).
-        Y = solve_triangular(R, A.T, trans=1, lower=False).T
-        res = lsqr(
-            lambda z: Y @ z,
-            lambda u: Y.T @ u,
-            b,
-            x0=z0,
-            atol=atol,
-            btol=btol,
-            iter_lim=iter_lim,
-            steptol=steptol,
-        )
+        Y = factor.materialize_whitened(A)
+        mv, rmv = (lambda z: Y @ z), (lambda u: Y.T @ u)
     else:
-        # Operator form: Yz = A(R⁻¹z); Yᵀu = R⁻ᵀ(Aᵀu).
-        def mv(z):
-            return A @ solve_triangular(R, z, lower=False)
-
-        def rmv(u):
-            return solve_triangular(R, A.T @ u, trans=1, lower=False)
-
-        res = lsqr(mv, rmv, b, x0=z0, atol=atol, btol=btol, iter_lim=iter_lim, steptol=steptol)
-    x = solve_triangular(R, res.x, lower=False)  # back substitution
+        mv = partial(factor.whiten_mv, A)
+        rmv = partial(factor.whiten_rmv, A)
+    res = lsqr(
+        mv, rmv, b, x0=z0, atol=atol, btol=btol, iter_lim=iter_lim,
+        steptol=steptol, history=history,
+    )
+    x = factor.precondition(res.x)  # back substitution
     return x, res
 
 
@@ -117,6 +99,7 @@ def _solve_with_factor(A, b, B, c, *, materialize_y, atol, btol, iter_lim, stept
         "atol",
         "btol",
         "backend",
+        "history",
     ),
 )
 def saa_sas(
@@ -133,41 +116,31 @@ def saa_sas(
     materialize_y: bool = True,
     use_fallback: bool = True,
     backend: str = "auto",
-) -> SAAResult:
+    history: bool = False,
+) -> SolveResult:
     """Solve min‖Ax − b‖ by Sketch-and-Apply (paper Algorithm 1)."""
     m, n = A.shape
-    s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
     if steptol is None:
         # z-space numerical floor of the whitened system (see lsqr docstring)
         steptol = 32 * float(jnp.finfo(A.dtype).eps)
     k_sketch, k_pert, k_norm = jax.random.split(key, 3)
-
-    op = sketch_lib.sample(sketch, k_sketch, s, m, dtype=A.dtype)
-    B = op.apply(A, backend=backend)
-    c = op.apply(b, backend=backend)
-    x, res = _solve_with_factor(
-        A, b, B, c, materialize_y=materialize_y, atol=atol, btol=btol,
-        iter_lim=iter_lim, steptol=steptol,
+    kw = dict(
+        materialize_y=materialize_y, atol=atol, btol=btol,
+        iter_lim=iter_lim, steptol=steptol, history=history,
     )
+
+    factor, op = SketchedFactor.build(
+        A, k_sketch, sketch=sketch, sketch_size=sketch_size, backend=backend
+    )
+    c = op.apply(b, backend=backend)
+    x, res = _solve_with_factor(A, b, factor, c, **kw)
     converged = (res.istop > 0) & (res.istop != 7)
 
     if not use_fallback:
-        return SAAResult(
-            x=x,
-            istop=res.istop,
-            itn=res.itn,
-            rnorm=res.rnorm,
-            used_fallback=jnp.asarray(False),
-        )
+        return res._replace(x=x, used_fallback=jnp.asarray(False))
 
     def ok_branch(_):
-        return SAAResult(
-            x=x,
-            istop=res.istop,
-            itn=res.itn,
-            rnorm=res.rnorm,
-            used_fallback=jnp.asarray(False),
-        )
+        return res._replace(x=x, used_fallback=jnp.asarray(False))
 
     def fallback_branch(_):
         # Lines 10–17: Ã = A + σ G/√m, σ = 10‖A‖₂u.
@@ -175,25 +148,9 @@ def saa_sas(
         sigma = 10.0 * _estimate_2norm(A, k_norm) * u_round
         G = jax.random.normal(k_pert, A.shape, A.dtype)
         A_t = A + sigma * G / jnp.sqrt(jnp.asarray(m, A.dtype))
-        B2 = op.apply(A_t, backend=backend)
-        x2, res2 = _solve_with_factor(
-            A_t,
-            b,
-            B2,
-            c,
-            materialize_y=materialize_y,
-            atol=atol,
-            btol=btol,
-            iter_lim=iter_lim,
-            steptol=steptol,
-        )
-        return SAAResult(
-            x=x2,
-            istop=res2.istop,
-            itn=res2.itn,
-            rnorm=res2.rnorm,
-            used_fallback=jnp.asarray(True),
-        )
+        factor2 = SketchedFactor.from_sketch(op.apply(A_t, backend=backend))
+        x2, res2 = _solve_with_factor(A_t, b, factor2, c, **kw)
+        return res2._replace(x=x2, used_fallback=jnp.asarray(True))
 
     return lax.cond(converged, ok_branch, fallback_branch, operand=None)
 
@@ -225,7 +182,7 @@ def saa_sas_batch(
     iter_lim: int = 100,
     materialize_y: bool = True,
     backend: str = "auto",
-) -> SAAResult:
+) -> SolveResult:
     """Batched SAA-SAS: one operator draw amortized over many solves.
 
     Two layouts (the serving-style multi-query front-ends):
@@ -237,7 +194,8 @@ def saa_sas_batch(
       per-column istop/itn/rnorm.
     - ``A (batch, m, n), b (batch, m)`` — a batch of equally-shaped
       problems sharing ONE operator draw S.  The whole factor+solve is
-      vmapped over the batch.  Returns x of shape (batch, n).
+      vmapped over the batch (``SketchedFactor`` is a pytree, so the factor
+      itself vmaps).  Returns x of shape (batch, n).
 
     The perturbation fallback of ``saa_sas`` is a per-problem control-flow
     feature and is not taken here (``used_fallback`` is always False);
@@ -255,43 +213,25 @@ def saa_sas_batch(
             raise ValueError(
                 f"multi-RHS mode needs b of shape ({A.shape[0]}, k), got {b.shape}"
             )
-        m, n = A.shape
-        s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
-        op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
-        B = op.apply(A, backend=backend)
+        factor, op = SketchedFactor.build(
+            A, key, sketch=sketch, sketch_size=sketch_size, backend=backend
+        )
         C = op.apply(b, backend=backend)  # (s, k)
-        Q, R = jnp.linalg.qr(B, mode="reduced")
-        Z0 = Q.T @ C  # (n, k) warm starts
+        Z0 = factor.warm_start(C)  # (n, k) warm starts
 
         if materialize_y:
-            Y = solve_triangular(R, A.T, trans=1, lower=False).T
-
-            def mv(z):
-                return Y @ z
-
-            def rmv(u):
-                return Y.T @ u
-
+            Y = factor.materialize_whitened(A)
+            mv, rmv = (lambda z: Y @ z), (lambda u: Y.T @ u)
         else:
-
-            def mv(z):
-                return A @ solve_triangular(R, z, lower=False)
-
-            def rmv(u):
-                return solve_triangular(R, A.T @ u, trans=1, lower=False)
+            mv = partial(factor.whiten_mv, A)
+            rmv = partial(factor.whiten_rmv, A)
 
         def solve_one(b_i, z0_i):
             return lsqr(mv, rmv, b_i, x0=z0_i, **kw)
 
         res = jax.vmap(solve_one, in_axes=(1, 1))(b, Z0)
-        X = solve_triangular(R, res.x.T, lower=False)  # (n, k)
-        return SAAResult(
-            x=X,
-            istop=res.istop,
-            itn=res.itn,
-            rnorm=res.rnorm,
-            used_fallback=jnp.zeros(b.shape[1], bool),
-        )
+        X = factor.precondition(res.x.T)  # (n, k)
+        return res._replace(x=X, used_fallback=jnp.zeros(b.shape[1], bool))
 
     if A.ndim == 3:
         if b.ndim != 2 or b.shape[0] != A.shape[0] or b.shape[1] != A.shape[1]:
@@ -303,20 +243,14 @@ def saa_sas_batch(
         op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
 
         def solve_one(A_i, b_i):
-            B = op.apply(A_i, backend=backend)
+            factor = SketchedFactor.from_sketch(op.apply(A_i, backend=backend))
             c = op.apply(b_i, backend=backend)
             x, res = _solve_with_factor(
-                A_i, b_i, B, c, materialize_y=materialize_y, **kw
+                A_i, b_i, factor, c, materialize_y=materialize_y, **kw
             )
-            return x, res.istop, res.itn, res.rnorm
+            return res._replace(x=x)
 
-        x, istop, itn, rnorm = jax.vmap(solve_one)(A, b)
-        return SAAResult(
-            x=x,
-            istop=istop,
-            itn=itn,
-            rnorm=rnorm,
-            used_fallback=jnp.zeros(batch, bool),
-        )
+        res = jax.vmap(solve_one)(A, b)
+        return res._replace(used_fallback=jnp.zeros(batch, bool))
 
     raise ValueError(f"A must be (m, n) or (batch, m, n), got shape {A.shape}")

@@ -1,0 +1,82 @@
+"""The unified lstsq() driver: auto-selection + one SolveResult for all."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import METHODS, SolveResult, generate_problem, lstsq, select_method
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return generate_problem(jax.random.key(0), 4000, 64, cond=1e10, beta=1e-10)
+
+
+def relerr(x, xt):
+    return float(jnp.linalg.norm(x - xt) / jnp.linalg.norm(xt))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_every_method_returns_solveresult(prob, method):
+    res = lstsq(prob.A, prob.b, jax.random.key(1), method=method)
+    assert isinstance(res, SolveResult)
+    assert res.method == method
+    for field in ("istop", "itn", "rnorm", "arnorm", "used_fallback"):
+        assert getattr(res, field).shape == ()
+    if method != "lsqr":  # plain LSQR legitimately stalls at cond=1e10
+        assert relerr(res.x, prob.x_true) < 1e-4
+
+
+def test_auto_small_problem_is_direct(prob):
+    res = lstsq(prob.A, prob.b, jax.random.key(1))  # 4000x64: QR is free
+    assert res.method == "direct"
+    assert relerr(res.x, prob.x_true) < 1e-5
+
+
+def test_auto_selection_rules():
+    # Large strongly-overdetermined + key: accuracy tier picks the solver.
+    assert select_method(200000, 100) == "iterative"
+    assert select_method(200000, 100, accuracy="fast") == "saa"
+    assert select_method(200000, 100, accuracy="high") == "fossils"
+    # No key: deterministic paths only.
+    assert select_method(200000, 100, has_key=False) == "lsqr"
+    assert select_method(500, 100, has_key=False) == "direct"
+    # Not overdetermined enough for the sketch to shrink anything.
+    assert select_method(3000, 1000) == "direct"
+    with pytest.raises(ValueError):
+        select_method(1000, 10, accuracy="wat")
+
+
+def test_sketched_methods_need_key(prob):
+    with pytest.raises(ValueError, match="needs a PRNG key"):
+        lstsq(prob.A, prob.b, method="saa")
+
+
+def test_unknown_method_raises(prob):
+    with pytest.raises(ValueError, match="unknown method"):
+        lstsq(prob.A, prob.b, jax.random.key(1), method="cholesky")
+
+
+def test_method_alias(prob):
+    res = lstsq(prob.A, prob.b, jax.random.key(1), method="iterative_sketching")
+    assert res.method == "iterative"
+
+
+def test_history_passthrough(prob):
+    res = lstsq(prob.A, prob.b, jax.random.key(1), method="saa", history=True)
+    assert res.history is not None
+    assert bool(jnp.isfinite(res.history[0]))
+
+
+def test_tolerance_passthrough(prob):
+    res = lstsq(prob.A, prob.b, jax.random.key(1), method="saa", iter_lim=3,
+                atol=0.0, btol=0.0)
+    assert int(res.itn) <= 3
+
+
+def test_direct_result_is_exact(prob):
+    res = lstsq(prob.A, prob.b, method="direct")
+    assert int(res.itn) == 0
+    assert res.converged
+    # rnorm/arnorm are the true residual quantities.
+    r = prob.b - prob.A @ res.x
+    assert float(res.rnorm) == pytest.approx(float(jnp.linalg.norm(r)))
