@@ -1,6 +1,9 @@
 """Paper Figure 3: runtime vs m for SAA-SAS vs LSQR — per backend, plus the
 forward-stable solvers (iterative sketching, FOSSILS) on the reference
-backend so their overhead relative to SAA-SAS is visible per size.
+backend so their overhead relative to SAA-SAS is visible per size, and the
+``SketchedSolver`` serving row: one session (sketch+QR built once) serving
+k right-hand sides vs k independent ``lstsq()`` calls — the amortized
+multi-RHS speedup.
 
 Paper sweep: m equally log-spaced in [2^12, 2^20], n=1000.  Default here is
 capped at 2^17 with n=256 (single CPU core, see DESIGN.md §7 deviations);
@@ -19,10 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
+    SketchedSolver,
     fossils,
     generate_problem,
     iterative_sketching,
     lsqr_dense,
+    lstsq,
     resolve_backend,
     saa_sas,
 )
@@ -31,6 +36,9 @@ from .common import emit, time_fn
 
 # interpret-mode pallas is O(grid) python; keep its sweep bounded off-TPU
 PALLAS_INTERP_MAX_M = 2**14
+
+# right-hand sides per design matrix for the serving-amortization row
+MULTI_RHS_K = 8
 
 
 def run(full=False, seed=0):
@@ -87,4 +95,34 @@ def run(full=False, seed=0):
             f"fig3/fossils/m{m}",
             t_fo,
             f"n={n};itn={int(rf.itn)};vs_saa={t_fo / t_saa:.2f}x",
+        )
+
+        # Serving amortization: ONE SketchedSolver session (build + k
+        # solves via solve_many) vs k independent lstsq() calls, each of
+        # which redraws, re-sketches and re-factors.  The session time
+        # INCLUDES the sketch+QR build, so the ratio is the honest
+        # amortized multi-RHS speedup.
+        k = MULTI_RHS_K
+        rhs = b[:, None] + 0.01 * jax.random.normal(
+            jax.random.key(seed + 1), (m, k)
+        )
+
+        def session_run():
+            solver = SketchedSolver(A, key, backend="reference")
+            return solver.solve_many(rhs).x
+
+        def independent_run():
+            return [
+                lstsq(A, rhs[:, i], key, method="saa", backend="reference").x
+                for i in range(k)
+            ]
+
+        t_sess = time_fn(session_run, repeats=3)
+        t_indep = time_fn(independent_run, repeats=3)
+        emit(
+            f"fig3/multi_rhs_session/m{m}",
+            t_sess,
+            f"n={n};k={k};per_rhs_us={t_sess / k * 1e6:.1f};"
+            f"indep_us={t_indep * 1e6:.1f};"
+            f"amortized_speedup={t_indep / t_sess:.2f}x",
         )

@@ -1,0 +1,87 @@
+"""Sparse least squares end-to-end: a BCOO data matrix through ``lstsq``.
+
+    PYTHONPATH=src python examples/sparse_lstsq.py [--m 50000] [--n 64]
+                                                   [--density 0.01]
+
+Sparse and implicitly-defined problems are where sketching wins biggest:
+the CountSketch apply costs O(nnz(A)), the sketched QR factor is tiny
+(s×n), and the iterative solvers only ever take products with A — so A is
+NEVER densified anywhere in the pipeline.  This script
+
+1. builds a random sparse A (``jax.experimental.sparse`` BCOO) with a
+   known solution,
+2. solves it with ``lstsq(A_bcoo, b, key)`` — auto-selection routes
+   sparse inputs to the matrix-free sketched solvers (never ``direct``,
+   which would densify), and
+3. cross-checks forced methods (iterative / fossils / saa / lsqr) against
+   the dense ground truth.
+
+The same BCOO matrix can be handed to ``SketchedSolver`` for repeated
+right-hand sides, or wrapped in ``repro.core.linop.SparseOperator``
+explicitly — ``lstsq`` coerces either form.
+"""
+import argparse
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from jax.experimental.sparse import BCOO
+
+from repro.core import lstsq, qr_solve
+
+
+def random_sparse_problem(key, m, n, density):
+    """Sparse A (BCOO), b = A x* + small noise, with x* known."""
+    k_mask, k_val, k_x, k_noise = jax.random.split(key, 4)
+    mask = jax.random.uniform(k_mask, (m, n)) < density
+    dense = jnp.where(mask, jax.random.normal(k_val, (m, n)), 0.0)
+    # guard against empty rows making the problem rank-deficient in n
+    dense = dense.at[jnp.arange(n), jnp.arange(n)].add(1.0)
+    A = BCOO.fromdense(dense)
+    x_true = jax.random.normal(k_x, (n,))
+    b = A @ x_true + 1e-8 * jax.random.normal(k_noise, (m,))
+    return A, b, x_true, dense
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=50000)
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--density", type=float, default=0.01)
+    args = ap.parse_args()
+
+    A, b, x_true, dense = random_sparse_problem(
+        jax.random.key(0), args.m, args.n, args.density
+    )
+    frac = A.nse / (args.m * args.n)
+    print(
+        f"A: {args.m}x{args.n} BCOO, nnz={A.nse} "
+        f"({100 * frac:.2f}% dense, {A.nse / args.m:.1f} nnz/row)"
+    )
+
+    x_qr = qr_solve(dense, b)  # dense ground truth (reference only)
+
+    def relerr(x):
+        return float(jnp.linalg.norm(x - x_qr) / jnp.linalg.norm(x_qr))
+
+    key = jax.random.key(1)
+    auto = lstsq(A, b, key)
+    print(f"lstsq(auto) on BCOO selected {auto.method!r}: "
+          f"relative error {relerr(auto.x):.3e}, itn={int(auto.itn)}\n")
+
+    for method in ("iterative", "fossils", "saa", "lsqr"):
+        solve = lambda: lstsq(A, b, key, method=method)
+        res = jax.block_until_ready(solve())  # warm (compile)
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(solve())
+        dt = time.perf_counter() - t0
+        print(
+            f"lstsq[{method}] (sparse)  {dt * 1e3:9.1f} ms   "
+            f"relative error {relerr(res.x):.3e}   itn={int(res.itn):4d}"
+        )
+
+
+if __name__ == "__main__":
+    main()

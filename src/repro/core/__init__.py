@@ -2,6 +2,8 @@
 
 - ``sketch``      — the six sketching operators (paper §2)
 - ``backend``     — sketch-apply backend policy (reference jnp vs Pallas)
+- ``linop``       — matrix-free ``LinearOperator`` input protocol
+                    (dense / BCOO-sparse / Tikhonov / custom)
 - ``precond``     — the shared sketched-QR factor (preconditioner/whitener)
 - ``result``      — the unified ``SolveResult`` every solver returns
 - ``lsqr``        — operator-form LSQR baseline/inner solver (paper §3.1)
@@ -10,36 +12,63 @@
 - ``iterative``   — forward-stable iterative sketching + FOSSILS
 - ``direct``      — deterministic QR/SVD ground truth
 - ``lstsq``       — one-call driver that auto-selects among all of the above
+- ``session``     — ``SketchedSolver``: one sketch+QR amortized over many
+                    right-hand sides (serving front-end)
 - ``problems``    — §5.1 ill-conditioned problem generator
 - ``distributed`` — multi-pod row-sharded SAA-SAS (shard_map + psum)
 """
-from . import backend, direct, distributed, iterative, lsqr, precond, problems, sap, sketch
+from . import (
+    backend,
+    direct,
+    distributed,
+    iterative,
+    linop,
+    lsqr,
+    precond,
+    problems,
+    sap,
+    session,
+    sketch,
+)
 from .backend import BACKENDS, ResolvedBackend, resolve as resolve_backend
 from .direct import normal_equations, qr_solve, svd_solve
 from .distributed import DistributedLSQResult, sketched_lstsq
 from .iterative import damping_momentum, fossils, iterative_sketching
-from .lsqr import LSQRResult, lsqr as lsqr_solve, lsqr_dense
+from .linop import (
+    CustomOperator,
+    DenseOperator,
+    LinearOperator,
+    SparseOperator,
+    TikhonovAugmented,
+    as_operator,
+    estimate_2norm,
+)
+from .lsqr import LSQRResult, lsqr as lsqr_solve, lsqr_dense, lsqr_operator
 from .lstsq import ACCURACIES, METHODS, lstsq, select_method
 from .precond import SketchedFactor, default_sketch_size, distortion
 from .problems import Problem, generate as generate_problem
 from .result import SolveResult
 from .saa import SAAResult, saa_sas, saa_sas_batch
 from .sap import sap_sas
-from .sketch import SKETCH_KINDS, fwht, sample as sample_sketch
+from .session import SketchedSolver
+from .sketch import AugmentedSketch, SKETCH_KINDS, fwht, sample as sample_sketch
 
 __all__ = [
-    "backend", "direct", "distributed", "iterative", "lsqr", "precond",
-    "problems", "sap", "sketch",
+    "backend", "direct", "distributed", "iterative", "linop", "lsqr",
+    "precond", "problems", "sap", "session", "sketch",
     "BACKENDS", "ResolvedBackend", "resolve_backend",
     "normal_equations", "qr_solve", "svd_solve",
     "DistributedLSQResult", "sketched_lstsq",
     "damping_momentum", "fossils", "iterative_sketching",
-    "LSQRResult", "lsqr_solve", "lsqr_dense",
+    "LinearOperator", "DenseOperator", "SparseOperator",
+    "TikhonovAugmented", "CustomOperator", "as_operator", "estimate_2norm",
+    "LSQRResult", "lsqr_solve", "lsqr_dense", "lsqr_operator",
     "ACCURACIES", "METHODS", "lstsq", "select_method",
     "SketchedFactor", "default_sketch_size", "distortion",
     "Problem", "generate_problem",
     "SolveResult",
     "SAAResult", "saa_sas", "saa_sas_batch",
     "sap_sas",
-    "SKETCH_KINDS", "fwht", "sample_sketch",
+    "SketchedSolver",
+    "AugmentedSketch", "SKETCH_KINDS", "fwht", "sample_sketch",
 ]

@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..sharding import shard_map_compat
 from . import backend as backend_lib
+from . import linop
 from . import sketch as sketch_lib
 from .lsqr import lsqr
 from .precond import SketchedFactor, default_sketch_size
@@ -50,7 +51,7 @@ def shard_rows(mesh, axes, A, b):
 
 
 def sketched_lstsq(
-    A: jax.Array,
+    A,
     b: jax.Array,
     key: jax.Array,
     *,
@@ -68,7 +69,14 @@ def sketched_lstsq(
     Jit-compatible; lowers to one psum of the s×(n+1) sketch + one psum per
     LSQR iteration (n-vector + 3 scalars).  ``backend`` selects the local
     sketch-apply implementation (see ``repro.core.backend``).
+
+    The row-sharded shard_map layout needs A's entries on-device, so
+    non-dense inputs (BCOO, materializable operators) are densified here;
+    dense arrays pass through untouched, preserving their placement.
+    Non-materializable operators are rejected — use the single-host
+    matrix-free solvers for those.
     """
+    A = linop.ensure_dense(A, who="the distributed row-sharded driver")
     backend = backend_lib.resolve(backend).name
     if isinstance(axes, str):
         axes = (axes,)

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import linop
 from .backend import resolve_backend_arg
 from .precond import SketchedFactor, default_sketch_size, distortion
 from .result import SolveResult
@@ -118,7 +119,7 @@ class _IterState(NamedTuple):
     ),
 )
 def iterative_sketching(
-    A: jax.Array,
+    A,
     b: jax.Array,
     key: jax.Array,
     *,
@@ -144,7 +145,12 @@ def iterative_sketching(
     the TRUE residual each iteration, so stagnation means the numerical
     floor, not sketch bias) — on residual tolerances (istop=1/2, SciPy
     semantics), or at ``iter_lim`` (istop=7).
+
+    ``A`` may be a dense array, a BCOO sparse matrix or a
+    ``repro.core.linop`` operator — only products with A are ever taken,
+    so the solve is fully matrix-free.
     """
+    A = linop.as_operator(A)
     m, n = A.shape
     s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
     if steptol is None:
@@ -180,9 +186,9 @@ def iterative_sketching(
 
     def body(st: _IterState):
         itn = st.itn + 1
-        r = b - A @ st.x
+        r = b - A.matvec(st.x)
         rnorm = jnp.linalg.norm(r)
-        g = A.T @ r  # true gradient (up to sign)
+        g = A.rmatvec(r)  # true gradient (up to sign)
         arnorm = jnp.linalg.norm(g)
         d = factor.normal_solve(g)  # sketched-Hessian solve
         dx = alpha * d + beta * (st.x - st.x_prev)
@@ -219,8 +225,8 @@ def iterative_sketching(
     final = lax.while_loop(cond, body, init)
     # Report the residual of the RETURNED iterate (the loop's rnorm/arnorm
     # lag one update behind final.x).
-    r = b - A @ final.x
-    g = A.T @ r
+    r = b - A.matvec(final.x)
+    g = A.rmatvec(r)
     return SolveResult(
         x=final.x,
         istop=jnp.where(bnorm == 0, 0, final.istop),
@@ -291,7 +297,7 @@ def _whitened_heavy_ball(
     ),
 )
 def fossils(
-    A: jax.Array,
+    A,
     b: jax.Array,
     key: jax.Array,
     *,
@@ -316,7 +322,11 @@ def fossils(
     ``history=True`` records the outer residual norms — a
     ``(refine_steps + 1,)`` array, entry 0 being the sketch-and-solve
     residual.  ``itn`` counts total inner iterations.
+
+    Accepts dense arrays, BCOO matrices and ``repro.core.linop`` operators
+    (matrix-free: only products with A are taken).
     """
+    A = linop.as_operator(A)
     m, n = A.shape
     s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
     if steptol is None:
@@ -344,7 +354,7 @@ def fossils(
     hit_floor = jnp.asarray(refine_steps > 0)
     rhist = []
     for _ in range(refine_steps):  # static unroll (refine_steps is tiny)
-        r = b - A @ x
+        r = b - A.matvec(x)
         rhist.append(jnp.linalg.norm(r))
         z0 = factor.warm_start(op.apply(r, backend=backend))
         z, itn, done = _whitened_heavy_ball(
@@ -355,10 +365,10 @@ def fossils(
         itn_total = itn_total + itn
         hit_floor = hit_floor & done
 
-    r = b - A @ x
+    r = b - A.matvec(x)
     rnorm = jnp.linalg.norm(r)
     rhist.append(rnorm)
-    g = A.T @ r
+    g = A.rmatvec(r)
 
     istop = jnp.where(hit_floor, 8, 7).astype(jnp.int32)
     istop = jnp.where(jnp.linalg.norm(b) == 0, 0, istop)

@@ -1,0 +1,362 @@
+"""Matrix-free linear operators — the input protocol of every solver.
+
+The solvers in ``repro.core`` only ever touch the data matrix A through
+products: ``A @ x`` (matvec), ``Aᵀ @ u`` (rmatvec) and their blocked
+variants.  Nothing in the sketch-and-solve analysis requires A to be a
+materialized dense array — sparse and implicitly-defined problems are
+exactly where sketching wins biggest.  This module names that contract:
+
+- :class:`LinearOperator` — the protocol: ``shape``, ``dtype``,
+  ``matvec``/``rmatvec`` (vectors), ``matmat``/``rmatmat`` (blocks),
+  ``materialize`` (dense A, when possible).
+- :class:`DenseOperator` — wraps a ``jax.Array`` (the classical path; all
+  solvers route dense inputs through it unchanged).
+- :class:`SparseOperator` — wraps a ``jax.experimental.sparse`` BCOO
+  matrix; products cost O(nnz) and A is never densified by the iterative
+  solvers.
+- :class:`TikhonovAugmented` — the ridge operator [A; √λ·Iₙ] behind
+  ``lstsq(..., reg=λ)``: min‖Ax − b‖² + λ‖x‖² as a pure least-squares
+  problem on the augmented system, no new solver code.
+- :class:`CustomOperator` — adapts any (matvec, rmatvec) pair, including
+  SciPy-style duck-typed operators.
+
+``as_operator`` coerces ``jax.Array | BCOO | LinearOperator | duck-typed``
+into the protocol; it is idempotent and is called at the top of every
+solver, so user code can pass any of the three forms anywhere.
+
+All concrete operators are registered JAX pytrees (array payloads are
+leaves, shapes/dtypes/callables are static), so they pass through ``jit``,
+``vmap``, ``lax.cond`` and ``shard_map`` exactly like plain arrays do.
+
+``estimate_2norm`` is the shared power-iteration σ_max estimator (formerly
+private copies in the solver modules); it works on anything
+``as_operator`` accepts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.sparse import BCOO
+
+__all__ = [
+    "LinearOperator",
+    "DenseOperator",
+    "SparseOperator",
+    "TikhonovAugmented",
+    "CustomOperator",
+    "as_operator",
+    "ensure_dense",
+    "estimate_2norm",
+]
+
+
+def _static(default=dataclasses.MISSING):
+    return dataclasses.field(metadata=dict(static=True), default=default)
+
+
+class LinearOperator:
+    """Protocol base: a linear map R^n → R^m known only through products.
+
+    Subclasses define ``shape``/``dtype``/``matvec``/``rmatvec``; the
+    blocked ``matmat``/``rmatmat`` default to vmapping the vector products
+    (override when a faster blocked form exists).  ``materialize`` returns
+    the dense A for operators that can afford it (``materializable`` says
+    which) — the direct solver and the distributed driver need it, the
+    iterative solvers never call it.
+    """
+
+    # -- shape info ---------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        raise NotImplementedError
+
+    @property
+    def dtype(self):
+        raise NotImplementedError
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    # -- products -----------------------------------------------------------
+    def matvec(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def rmatvec(self, u: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def matmat(self, X: jax.Array) -> jax.Array:
+        return jax.vmap(self.matvec, in_axes=1, out_axes=1)(X)
+
+    def rmatmat(self, U: jax.Array) -> jax.Array:
+        return jax.vmap(self.rmatvec, in_axes=1, out_axes=1)(U)
+
+    def __matmul__(self, other):
+        other = jnp.asarray(other)
+        if other.ndim == 1:
+            return self.matvec(other)
+        if other.ndim == 2:
+            return self.matmat(other)
+        raise ValueError(f"operand must be 1- or 2-D, got ndim={other.ndim}")
+
+    # -- materialization ----------------------------------------------------
+    @property
+    def materializable(self) -> bool:
+        return False
+
+    def materialize(self) -> jax.Array:
+        raise TypeError(
+            f"{type(self).__name__} cannot be materialized to a dense array; "
+            "use a matrix-free solver (lstsq picks one automatically)"
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseOperator(LinearOperator):
+    """A dense ``jax.Array`` seen through the operator protocol."""
+
+    A: jax.Array
+
+    @property
+    def shape(self):
+        return self.A.shape
+
+    @property
+    def dtype(self):
+        return self.A.dtype
+
+    def matvec(self, x):
+        return self.A @ x
+
+    def rmatvec(self, u):
+        return self.A.T @ u
+
+    def matmat(self, X):
+        return self.A @ X
+
+    def rmatmat(self, U):
+        return self.A.T @ U
+
+    @property
+    def materializable(self):
+        return True
+
+    def materialize(self):
+        return self.A
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseOperator(LinearOperator):
+    """A ``jax.experimental.sparse`` BCOO matrix: O(nnz) products.
+
+    The sparse sketches (CountSketch, sparse-sign, uniform-sparse) sketch a
+    ``SparseOperator`` sparse-to-sparse, so A is never densified anywhere
+    in the sketched-solver pipeline.
+    """
+
+    M: BCOO
+
+    @property
+    def shape(self):
+        return self.M.shape
+
+    @property
+    def dtype(self):
+        return self.M.dtype
+
+    @property
+    def nse(self) -> int:
+        return self.M.nse
+
+    def matvec(self, x):
+        return self.M @ x
+
+    def rmatvec(self, u):
+        return self.M.T @ u
+
+    def matmat(self, X):
+        return self.M @ X
+
+    def rmatmat(self, U):
+        return self.M.T @ U
+
+    @property
+    def materializable(self):
+        return True
+
+    def materialize(self):
+        return self.M.todense()
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TikhonovAugmented(LinearOperator):
+    """The ridge operator [A; √λ·Iₙ] of shape (m + n, n).
+
+    min‖Ax − b‖² + λ‖x‖²  ==  min‖[A; √λI] x − [b; 0]‖², so any
+    least-squares solver handles Tikhonov regularization through this
+    operator with zero new solver code.  ``reg`` (= λ ≥ 0) is a pytree
+    leaf, so re-solving with a different λ does not retrace.
+    """
+
+    op: LinearOperator
+    reg: jax.Array
+
+    @classmethod
+    def wrap(cls, A, reg) -> "TikhonovAugmented":
+        op = as_operator(A)
+        return cls(op=op, reg=jnp.asarray(reg, op.dtype))
+
+    @property
+    def shape(self):
+        m, n = self.op.shape
+        return (m + n, n)
+
+    @property
+    def dtype(self):
+        return self.op.dtype
+
+    @property
+    def _sqrt_reg(self):
+        return jnp.sqrt(self.reg.astype(self.dtype))
+
+    def matvec(self, x):
+        return jnp.concatenate([self.op.matvec(x), self._sqrt_reg * x])
+
+    def rmatvec(self, u):
+        m, n = self.op.shape
+        return self.op.rmatvec(u[:m]) + self._sqrt_reg * u[m:]
+
+    def matmat(self, X):
+        return jnp.concatenate([self.op.matmat(X), self._sqrt_reg * X], axis=0)
+
+    def rmatmat(self, U):
+        m, n = self.op.shape
+        return self.op.rmatmat(U[:m]) + self._sqrt_reg * U[m:]
+
+    def augment_rhs(self, b: jax.Array) -> jax.Array:
+        """[b; 0ₙ] — the right-hand side of the augmented system."""
+        n = self.op.shape[1]
+        return jnp.concatenate([b, jnp.zeros((n,), b.dtype)])
+
+    @property
+    def materializable(self):
+        return self.op.materializable
+
+    def materialize(self):
+        n = self.op.shape[1]
+        eye = jnp.eye(n, dtype=self.dtype)
+        return jnp.concatenate([self.op.materialize(), self._sqrt_reg * eye], axis=0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CustomOperator(LinearOperator):
+    """Adapter for an arbitrary (matvec, rmatvec) pair.
+
+    The callables are static pytree metadata: arrays they close over are
+    baked into the jit trace as constants, so prefer
+    :class:`DenseOperator`/:class:`SparseOperator` when the operator is
+    just a stored matrix.  ``materialize_fn`` is optional; without it the
+    operator is non-materializable and ``lstsq`` routes it to the
+    matrix-free solvers.
+    """
+
+    matvec_fn: Callable = _static()
+    rmatvec_fn: Callable = _static()
+    op_shape: tuple[int, int] = _static()
+    op_dtype: Any = _static()
+    materialize_fn: Callable | None = _static(default=None)
+
+    @property
+    def shape(self):
+        return self.op_shape
+
+    @property
+    def dtype(self):
+        return self.op_dtype
+
+    def matvec(self, x):
+        return self.matvec_fn(x)
+
+    def rmatvec(self, u):
+        return self.rmatvec_fn(u)
+
+    @property
+    def materializable(self):
+        return self.materialize_fn is not None
+
+    def materialize(self):
+        if self.materialize_fn is None:
+            return super().materialize()
+        return self.materialize_fn()
+
+
+def as_operator(A) -> LinearOperator:
+    """Coerce ``jax.Array | BCOO | LinearOperator | duck-typed`` to the
+    protocol.  Idempotent; every solver calls it on its data-matrix input,
+    so the whole stack accepts all three public forms interchangeably."""
+    if isinstance(A, LinearOperator):
+        return A
+    if isinstance(A, BCOO):
+        if A.ndim != 2:
+            raise ValueError(f"need a 2-D matrix, got shape {A.shape}")
+        return SparseOperator(A)
+    if hasattr(A, "matvec") and hasattr(A, "rmatvec") and hasattr(A, "shape"):
+        # SciPy-style duck-typed operator.
+        dtype = getattr(A, "dtype", None)
+        if dtype is None:
+            raise TypeError(f"duck-typed operator {A!r} must expose .dtype")
+        mat = getattr(A, "materialize", None)
+        return CustomOperator(
+            matvec_fn=A.matvec,
+            rmatvec_fn=A.rmatvec,
+            op_shape=tuple(A.shape),
+            op_dtype=dtype,
+            materialize_fn=mat,
+        )
+    A = jnp.asarray(A)
+    if A.ndim != 2:
+        raise ValueError(f"need a 2-D matrix, got shape {A.shape}")
+    return DenseOperator(A)
+
+
+def ensure_dense(A, *, who: str = "this solver") -> jax.Array:
+    """Materialize ``A`` to a dense array or raise with a pointer to the
+    matrix-free paths.  Used by the direct solver and the row-sharded
+    distributed driver, whose algorithms genuinely need the entries."""
+    op = as_operator(A)
+    if isinstance(op, DenseOperator):
+        return op.A  # no copy — preserves sharding/placement
+    if not op.materializable:
+        raise TypeError(
+            f"{who} needs a materializable matrix, got {type(op).__name__}; "
+            "use lstsq(method='iterative'/'fossils'/'saa'/'lsqr') for "
+            "matrix-free inputs"
+        )
+    return op.materialize()
+
+
+def estimate_2norm(A, key: jax.Array, iters: int = 25) -> jax.Array:
+    """σ_max(A) by power iteration on AᵀA — the one shared 2-norm estimator.
+
+    Accepts anything :func:`as_operator` does; only products with A are
+    used.  (Supersedes the private per-solver copies: SAA-SAS's fallback σ
+    and any future spectral-norm need route through here.)
+    """
+    A = as_operator(A)
+    v = jax.random.normal(key, (A.shape[1],), A.dtype)
+    v = v / jnp.linalg.norm(v)
+
+    def body(_, v):
+        w = A.rmatvec(A.matvec(v))
+        return w / jnp.maximum(jnp.linalg.norm(w), jnp.finfo(A.dtype).tiny)
+
+    v = lax.fori_loop(0, iters, body, v)
+    return jnp.linalg.norm(A.matvec(v))

@@ -32,7 +32,7 @@ from jax import lax
 
 from .result import SolveResult
 
-__all__ = ["lsqr", "lsqr_dense", "LSQRResult"]
+__all__ = ["lsqr", "lsqr_dense", "lsqr_operator", "LSQRResult"]
 
 # Superseded by the unified result type.  The alias keeps attribute access
 # for the shared fields working; the old anorm/acond/xnorm diagnostics and
@@ -240,6 +240,21 @@ def lsqr(
     )
 
 
-def lsqr_dense(A: jax.Array, b: jax.Array, **kw) -> SolveResult:
-    """LSQR with an explicit dense A (the paper's baseline configuration)."""
-    return lsqr(lambda x: A @ x, lambda u: A.T @ u, b, n=A.shape[1], **kw)
+def lsqr_operator(A, b: jax.Array, **kw) -> SolveResult:
+    """LSQR on ``jax.Array | BCOO | linop.LinearOperator`` inputs.
+
+    The Golub–Kahan recurrence only takes products with A, so this is the
+    natural entry point for sparse and matrix-free problems (and the only
+    sketch-free iterative path, hence ``lstsq``'s keyless fallback).
+    """
+    from . import linop  # local import: linop is dependency-free, lsqr is hot
+
+    A = linop.as_operator(A)
+    return lsqr(A.matvec, A.rmatvec, b, n=A.shape[1], **kw)
+
+
+def lsqr_dense(A, b: jax.Array, **kw) -> SolveResult:
+    """LSQR with an explicit A (the paper's baseline configuration).
+
+    Historical name — accepts everything :func:`lsqr_operator` does."""
+    return lsqr_operator(A, b, **kw)

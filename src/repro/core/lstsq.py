@@ -17,6 +17,14 @@ method         solver
                stable, direct-method accuracy)
 =============  ============================================================
 
+``A`` may be a dense ``jax.Array``, a ``jax.experimental.sparse`` BCOO
+matrix, or any ``repro.core.linop`` operator (the matrix-free protocol) —
+every solver above accepts all three.  ``reg=λ`` solves the Tikhonov/ridge
+problem min‖Ax − b‖² + λ‖x‖² through the augmented operator [A; √λ·I]
+(``linop.TikhonovAugmented``) with zero solver-specific code; the returned
+``rnorm``/``arnorm`` are recomputed for the ORIGINAL system (``arnorm`` is
+the ridge gradient norm ‖Aᵀ(b − Ax) − λx‖).
+
 Auto-selection (``method="auto"``):
 
 - problems too small or too square for sketching to pay off → ``direct``;
@@ -24,7 +32,10 @@ Auto-selection (``method="auto"``):
   ``accuracy``: ``"fast"`` → ``saa``, ``"balanced"`` (default) →
   ``iterative``, ``"high"`` → ``fossils``;
 - large but no key supplied → ``lsqr`` (the only deterministic iterative
-  path).
+  path);
+- sparse / matrix-free inputs never select ``direct`` (it would densify
+  A): with a key they go to the sketched iterative solvers, without one to
+  ``lsqr``.
 
 The driver is a thin Python-level dispatch — every method underneath is its
 own jitted, backend-dispatched solver, so there is no extra trace or
@@ -35,9 +46,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import linop
 from .direct import qr_solve
 from .iterative import fossils, iterative_sketching
-from .lsqr import lsqr_dense
+from .lsqr import lsqr_operator
 from .precond import default_sketch_size
 from .result import SolveResult
 from .saa import saa_sas
@@ -53,6 +65,8 @@ _ALIASES = {"iterative_sketching": "iterative", "qr": "direct"}
 # overhead (operator draw + sketch + small QR) cannot pay for itself.
 DIRECT_FLOP_CUTOFF = 1 << 26
 
+_SKETCHED_BY_ACCURACY = {"fast": "saa", "balanced": "iterative", "high": "fossils"}
+
 
 def select_method(
     m: int,
@@ -61,17 +75,27 @@ def select_method(
     has_key: bool = True,
     accuracy: str = "balanced",
     sketch_size: int | None = None,
+    matrix_free: bool = False,
 ) -> str:
-    """Pick a solver from shape, sketch-size regime and requested accuracy."""
+    """Pick a solver from shape, sketch-size regime and requested accuracy.
+
+    ``matrix_free=True`` (sparse / operator inputs) rules out ``direct``:
+    the iterative sketched solvers only take products with A, which is the
+    whole point of those inputs.
+    """
     if accuracy not in ACCURACIES:
         raise ValueError(f"unknown accuracy {accuracy!r}; have {ACCURACIES}")
     s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
     # The sketched solvers need the embedding to actually shrink the row
     # space: s rows must both dominate n and be a small fraction of m.
     regime_ok = (s >= n + 1) and (m >= 2 * s) and (m >= 4 * n)
+    if matrix_free:
+        if has_key and regime_ok:
+            return _SKETCHED_BY_ACCURACY[accuracy]
+        return "lsqr"
     big = m * n * n > DIRECT_FLOP_CUTOFF
     if big and regime_ok and has_key:
-        return {"fast": "saa", "balanced": "iterative", "high": "fossils"}[accuracy]
+        return _SKETCHED_BY_ACCURACY[accuracy]
     if big and not has_key:
         return "lsqr"
     return "direct"
@@ -91,8 +115,16 @@ def _direct_result(A, b):
     )
 
 
+@jax.jit
+def _ridge_diagnostics(A, b, x, reg):
+    """(rnorm, arnorm) of the ORIGINAL ridge problem at x."""
+    r = b - A.matvec(x)
+    g = A.rmatvec(r) - reg * x
+    return jnp.linalg.norm(r), jnp.linalg.norm(g)
+
+
 def lstsq(
-    A: jax.Array,
+    A,
     b: jax.Array,
     key: jax.Array | None = None,
     *,
@@ -100,6 +132,7 @@ def lstsq(
     accuracy: str = "balanced",
     sketch: str = "clarkson_woodruff",
     sketch_size: int | None = None,
+    reg: float | jax.Array | None = None,
     atol: float | None = None,
     btol: float | None = None,
     steptol: float | None = None,
@@ -107,19 +140,29 @@ def lstsq(
     backend: str = "auto",
     history: bool = False,
 ) -> SolveResult:
-    """Solve min‖Ax − b‖₂ with an auto-selected (or forced) solver.
+    """Solve min‖Ax − b‖₂ (+ λ‖x‖₂² with ``reg=λ``) with an auto-selected
+    (or forced) solver.
 
+    ``A``: dense array, BCOO sparse matrix, or ``linop.LinearOperator``.
     ``atol``/``btol``/``steptol``/``iter_lim`` left as ``None`` use each
     solver's own defaults; values are forwarded only to solvers that accept
     them (``fossils`` controls its budget via refinement/inner-loop
     parameters, so ``atol``/``btol``/``iter_lim`` do not apply there).
     """
-    m, n = A.shape
+    A_in = linop.as_operator(A)
+    if reg is not None:
+        A_op = linop.TikhonovAugmented.wrap(A_in, reg)
+        b_solve = A_op.augment_rhs(b)
+    else:
+        A_op, b_solve = A_in, b
+    matrix_free = not isinstance(A_in, linop.DenseOperator)
+
+    m, n = A_op.shape
     method = _ALIASES.get(method, method)
     if method == "auto":
         method = select_method(
             m, n, has_key=key is not None, accuracy=accuracy,
-            sketch_size=sketch_size,
+            sketch_size=sketch_size, matrix_free=matrix_free,
         )
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; have {('auto',) + METHODS}")
@@ -135,16 +178,24 @@ def lstsq(
     sk = dict(sketch=sketch, sketch_size=sketch_size, backend=backend)
 
     if method == "direct":
-        res = _direct_result(A, b)
+        res = _direct_result(linop.ensure_dense(A_op, who="method='direct'"),
+                             b_solve)
     elif method == "lsqr":
-        res = lsqr_dense(A, b, history=history, **tol)
+        res = lsqr_operator(A_op, b_solve, history=history, **tol)
     elif method == "saa":
-        res = saa_sas(A, b, key, history=history, **sk, **tol)
+        res = saa_sas(A_op, b_solve, key, history=history, **sk, **tol)
     elif method == "sap":
-        res = sap_sas(A, b, key, history=history, **sk, **tol)
+        res = sap_sas(A_op, b_solve, key, history=history, **sk, **tol)
     elif method == "iterative":
-        res = iterative_sketching(A, b, key, history=history, **sk, **tol)
+        res = iterative_sketching(A_op, b_solve, key, history=history, **sk, **tol)
     else:  # fossils
         fkw = {"steptol": steptol} if steptol is not None else {}
-        res = fossils(A, b, key, history=history, **sk, **fkw)
+        res = fossils(A_op, b_solve, key, history=history, **sk, **fkw)
+
+    if reg is not None:
+        # Report diagnostics of the ORIGINAL problem, not the augmented one.
+        rnorm, arnorm = _ridge_diagnostics(
+            A_in, b, res.x, jnp.asarray(reg, A_in.dtype)
+        )
+        res = res._replace(rnorm=rnorm, arnorm=arnorm)
     return res._replace(method=method)

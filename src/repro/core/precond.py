@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from . import linop
 from . import sketch as sketch_lib
 
 __all__ = ["SketchedFactor", "default_sketch_size", "distortion"]
@@ -72,7 +73,7 @@ class SketchedFactor(NamedTuple):
     @classmethod
     def build(
         cls,
-        A: jax.Array,
+        A,
         key: jax.Array,
         *,
         sketch: str = "clarkson_woodruff",
@@ -81,14 +82,36 @@ class SketchedFactor(NamedTuple):
     ):
         """Draw S, sketch A and factor: returns ``(factor, op)``.
 
+        ``A`` may be a dense array, a BCOO matrix or any
+        ``repro.core.linop`` operator — the sketch applies through
+        ``op.apply_op`` (sparse inputs are sketched without densifying).
         The sketch operator ``op`` is returned so callers can sketch the
         right-hand side (``op.apply(b)`` → warm start) or re-sketch a
         perturbed matrix (the SAA fallback) with the SAME S.
         """
-        m, n = A.shape
-        s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
-        op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
-        B = op.apply(A, backend=backend)
+        A = linop.as_operator(A)
+        if isinstance(A, linop.TikhonovAugmented):
+            # Structured embedding blockdiag(S, I): sketch the data rows,
+            # keep the (maximally coherent) regularization rows exact —
+            # see sketch.AugmentedSketch for why random bucketing of the
+            # identity block destroys the embedding.
+            m_in, n = A.op.shape
+            s = (
+                sketch_size
+                if sketch_size is not None
+                else default_sketch_size(n, m_in)
+            )
+            inner = sketch_lib.sample(sketch, key, s, m_in, dtype=A.dtype)
+            op = sketch_lib.AugmentedSketch(inner=inner, tail=n)
+        else:
+            m, n = A.shape
+            s = (
+                sketch_size
+                if sketch_size is not None
+                else default_sketch_size(n, m)
+            )
+            op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
+        B = op.apply_op(A, backend=backend)
         return cls.from_sketch(B), op
 
     # ------------------------------------------------------------ shape info
@@ -110,21 +133,32 @@ class SketchedFactor(NamedTuple):
         return solve_triangular(self.R, v, trans=1, lower=False)
 
     # --------------------------------------------------- whitened operator Y
-    def whiten_mv(self, A: jax.Array, z: jax.Array) -> jax.Array:
-        """Y z = A (R⁻¹ z) — operator-form matvec of the whitened system."""
-        return A @ self.precondition(z)
+    def whiten_mv(self, A, z: jax.Array) -> jax.Array:
+        """Y z = A (R⁻¹ z) — operator-form matvec of the whitened system.
 
-    def whiten_rmv(self, A: jax.Array, u: jax.Array) -> jax.Array:
+        ``A`` may be an array, a BCOO matrix or a linop operator (so the
+        whitened system is matrix-free whenever A is)."""
+        return linop.as_operator(A).matvec(self.precondition(z))
+
+    def whiten_rmv(self, A, u: jax.Array) -> jax.Array:
         """Yᵀ u = R⁻ᵀ (Aᵀ u) — operator-form rmatvec of the whitened system."""
-        return self.rt_solve(A.T @ u)
+        return self.rt_solve(linop.as_operator(A).rmatvec(u))
 
-    def materialize_whitened(self, A: jax.Array) -> jax.Array:
+    def materialize_whitened(self, A) -> jax.Array:
         """Y = A R⁻¹ explicitly (one n×n triangular solve against Aᵀ).
 
         O(mn) extra memory; trades the two triangular solves per iteration
         of the operator form for plain matmuls (the fast path when Y fits).
+        For non-dense operators Y is assembled as A·R⁻¹ (n matvecs' worth
+        of work, e.g. one O(nnz·n) product for BCOO inputs).
         """
-        return self.rt_solve(A.T).T
+        A = linop.as_operator(A)
+        if isinstance(A, linop.DenseOperator):
+            return self.rt_solve(A.A.T).T
+        r_inv = solve_triangular(
+            self.R, jnp.eye(self.n, dtype=self.R.dtype), lower=False
+        )
+        return A.matmat(r_inv)
 
     # ------------------------------------------------------------ warm start
     def warm_start(self, c: jax.Array) -> jax.Array:

@@ -39,8 +39,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import linop
 from . import sketch as sketch_lib
 from .backend import resolve_backend_arg
+from .linop import estimate_2norm
 from .lsqr import lsqr
 from .precond import SketchedFactor, default_sketch_size
 from .result import SolveResult
@@ -51,19 +53,6 @@ __all__ = ["saa_sas", "saa_sas_batch", "SAAResult", "default_sketch_size"]
 # (res.x, res.itn, ...) working; field ORDER changed (arnorm inserted), so
 # positional unpacking of the old 5-tuple is not preserved.
 SAAResult = SolveResult
-
-
-def _estimate_2norm(A, key, iters: int = 25):
-    """Power iteration on AᵀA for σ_max(A) (used by the fallback's σ)."""
-    v = jax.random.normal(key, (A.shape[1],), A.dtype)
-    v = v / jnp.linalg.norm(v)
-
-    def body(_, v):
-        w = A.T @ (A @ v)
-        return w / jnp.maximum(jnp.linalg.norm(w), jnp.finfo(A.dtype).tiny)
-
-    v = lax.fori_loop(0, iters, body, v)
-    return jnp.linalg.norm(A @ v)
 
 
 def _solve_with_factor(
@@ -103,7 +92,7 @@ def _solve_with_factor(
     ),
 )
 def saa_sas(
-    A: jax.Array,
+    A,
     b: jax.Array,
     key: jax.Array,
     *,
@@ -113,12 +102,24 @@ def saa_sas(
     btol: float = 0.0,
     steptol: float | None = None,
     iter_lim: int = 100,
-    materialize_y: bool = True,
+    materialize_y: bool | None = None,
     use_fallback: bool = True,
     backend: str = "auto",
     history: bool = False,
 ) -> SolveResult:
-    """Solve min‖Ax − b‖ by Sketch-and-Apply (paper Algorithm 1)."""
+    """Solve min‖Ax − b‖ by Sketch-and-Apply (paper Algorithm 1).
+
+    ``A`` may be a dense array, a BCOO sparse matrix or a
+    ``repro.core.linop`` operator.  ``materialize_y=None`` resolves to True
+    for dense inputs and False otherwise (the operator-form path never
+    densifies A or Y).  The perturbation fallback (paper lines 10–17) adds
+    dense Gaussian noise to A, so it only exists on the dense path; for
+    matrix-free inputs the first solve's result is returned as-is.
+    """
+    A = linop.as_operator(A)
+    dense_input = isinstance(A, linop.DenseOperator)
+    if materialize_y is None:
+        materialize_y = dense_input
     m, n = A.shape
     if steptol is None:
         # z-space numerical floor of the whitened system (see lsqr docstring)
@@ -136,7 +137,7 @@ def saa_sas(
     x, res = _solve_with_factor(A, b, factor, c, **kw)
     converged = (res.istop > 0) & (res.istop != 7)
 
-    if not use_fallback:
+    if not (use_fallback and dense_input):
         return res._replace(x=x, used_fallback=jnp.asarray(False))
 
     def ok_branch(_):
@@ -145,9 +146,9 @@ def saa_sas(
     def fallback_branch(_):
         # Lines 10–17: Ã = A + σ G/√m, σ = 10‖A‖₂u.
         u_round = jnp.asarray(jnp.finfo(A.dtype).eps / 2, A.dtype)
-        sigma = 10.0 * _estimate_2norm(A, k_norm) * u_round
+        sigma = 10.0 * estimate_2norm(A, k_norm) * u_round
         G = jax.random.normal(k_pert, A.shape, A.dtype)
-        A_t = A + sigma * G / jnp.sqrt(jnp.asarray(m, A.dtype))
+        A_t = A.A + sigma * G / jnp.sqrt(jnp.asarray(m, A.dtype))
         factor2 = SketchedFactor.from_sketch(op.apply(A_t, backend=backend))
         x2, res2 = _solve_with_factor(A_t, b, factor2, c, **kw)
         return res2._replace(x=x2, used_fallback=jnp.asarray(True))
@@ -170,7 +171,7 @@ def saa_sas(
     ),
 )
 def saa_sas_batch(
-    A: jax.Array,
+    A,
     b: jax.Array,
     key: jax.Array,
     *,
@@ -180,7 +181,7 @@ def saa_sas_batch(
     btol: float = 0.0,
     steptol: float | None = None,
     iter_lim: int = 100,
-    materialize_y: bool = True,
+    materialize_y: bool | None = None,
     backend: str = "auto",
 ) -> SolveResult:
     """Batched SAA-SAS: one operator draw amortized over many solves.
@@ -208,7 +209,12 @@ def saa_sas_batch(
         steptol = 32 * float(jnp.finfo(A.dtype).eps)
     kw = dict(atol=atol, btol=btol, iter_lim=iter_lim, steptol=steptol)
 
-    if A.ndim == 2:
+    if getattr(A, "ndim", 2) == 2:
+        # Multi-RHS mode accepts dense, BCOO or linop-operator design
+        # matrices (the problem-batch mode below stays array-only).
+        A = linop.as_operator(A)
+        if materialize_y is None:
+            materialize_y = isinstance(A, linop.DenseOperator)
         if b.ndim != 2 or b.shape[0] != A.shape[0]:
             raise ValueError(
                 f"multi-RHS mode needs b of shape ({A.shape[0]}, k), got {b.shape}"
@@ -234,6 +240,8 @@ def saa_sas_batch(
         return res._replace(x=X, used_fallback=jnp.zeros(b.shape[1], bool))
 
     if A.ndim == 3:
+        if materialize_y is None:
+            materialize_y = True
         if b.ndim != 2 or b.shape[0] != A.shape[0] or b.shape[1] != A.shape[1]:
             raise ValueError(
                 f"problem-batch mode needs b of shape {A.shape[:2]}, got {b.shape}"

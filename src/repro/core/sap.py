@@ -21,6 +21,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import linop
 from .backend import resolve_backend_arg
 from .lsqr import lsqr
 from .precond import SketchedFactor
@@ -38,7 +39,7 @@ __all__ = ["sap_sas"]
     ),
 )
 def sap_sas(
-    A: jax.Array,
+    A,
     b: jax.Array,
     key: jax.Array,
     *,
@@ -56,7 +57,12 @@ def sap_sas(
 
     ``warm_start=False`` restores the zero-initialized historical variant
     (kept for reproducing the paper's original negative result).
+
+    ``A`` may be a dense array, a BCOO sparse matrix or a
+    ``repro.core.linop`` operator (the preconditioned LSQR iteration only
+    takes products with A).
     """
+    A = linop.as_operator(A)
     if steptol is None:
         steptol = 32 * float(jnp.finfo(A.dtype).eps)
     factor, op = SketchedFactor.build(

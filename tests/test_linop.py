@@ -1,0 +1,230 @@
+"""The matrix-free operator protocol (repro.core.linop) and its threading
+through the sketches and every solver reachable from lstsq()."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental.sparse import BCOO
+
+from repro.core import (
+    SKETCH_KINDS,
+    estimate_2norm,
+    linop,
+    lstsq,
+    qr_solve,
+    sample_sketch,
+    select_method,
+)
+
+M_ROWS, N_COLS = 2000, 32
+
+
+@pytest.fixture(scope="module")
+def prob():
+    """A sparse-patterned (but exactly representable densely) test problem,
+    so dense / BCOO / custom inputs are the SAME matrix."""
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    mask = jax.random.uniform(k1, (M_ROWS, N_COLS)) < 0.05
+    A = jnp.where(mask, jax.random.normal(k2, (M_ROWS, N_COLS)), 0.0)
+    A = A.at[jnp.arange(N_COLS), jnp.arange(N_COLS)].add(1.0)  # full rank
+    x_true = jnp.arange(1.0, N_COLS + 1.0)
+    b = A @ x_true + 1e-9 * jax.random.normal(k3, (M_ROWS,))
+    return A, b, qr_solve(A, b)
+
+
+def _custom(A):
+    return linop.CustomOperator(
+        matvec_fn=lambda v: A @ v,
+        rmatvec_fn=lambda u: A.T @ u,
+        op_shape=tuple(A.shape),
+        op_dtype=A.dtype,
+    )
+
+
+def _variants(A):
+    return {
+        "dense": linop.as_operator(A),
+        "bcoo": linop.as_operator(BCOO.fromdense(A)),
+        "custom": _custom(A),
+    }
+
+
+# ---------------------------------------------------------------- protocol
+
+
+def test_operator_products_match_dense(prob):
+    A, _, _ = prob
+    x = jax.random.normal(jax.random.key(1), (N_COLS,))
+    u = jax.random.normal(jax.random.key(2), (M_ROWS,))
+    X = jax.random.normal(jax.random.key(3), (N_COLS, 3))
+    U = jax.random.normal(jax.random.key(4), (M_ROWS, 2))
+    for name, op in _variants(A).items():
+        assert op.shape == (M_ROWS, N_COLS), name
+        assert op.dtype == A.dtype, name
+        assert jnp.allclose(op.matvec(x), A @ x, atol=1e-10), name
+        assert jnp.allclose(op.rmatvec(u), A.T @ u, atol=1e-10), name
+        assert jnp.allclose(op.matmat(X), A @ X, atol=1e-10), name
+        assert jnp.allclose(op.rmatmat(U), A.T @ U, atol=1e-10), name
+        assert jnp.allclose(op @ x, A @ x, atol=1e-10), name
+
+
+def test_operators_are_pytrees(prob):
+    """Operators must pass through jit as arguments (solvers are jitted)."""
+    A, _, _ = prob
+    x = jax.random.normal(jax.random.key(1), (N_COLS,))
+
+    @jax.jit
+    def f(op, v):
+        return op.matvec(v)
+
+    for name, op in _variants(A).items():
+        assert jnp.allclose(f(op, x), A @ x, atol=1e-10), name
+
+
+def test_materialize(prob):
+    A, _, _ = prob
+    assert linop.as_operator(A).materialize() is A  # no copy
+    assert jnp.allclose(linop.as_operator(BCOO.fromdense(A)).materialize(), A)
+    op = _custom(A)
+    assert not op.materializable
+    with pytest.raises(TypeError, match="materialized"):
+        op.materialize()
+
+
+def test_as_operator_coercion(prob):
+    A, _, _ = prob
+    op = linop.as_operator(A)
+    assert isinstance(op, linop.DenseOperator)
+    assert linop.as_operator(op) is op  # idempotent
+    assert isinstance(linop.as_operator(BCOO.fromdense(A)), linop.SparseOperator)
+    # SciPy-style duck typing
+    duck = linop.as_operator(_custom(A))
+    assert isinstance(duck, linop.CustomOperator)
+    with pytest.raises(ValueError, match="2-D"):
+        linop.as_operator(jnp.ones(5))
+
+
+def test_tikhonov_augmented(prob):
+    A, b, _ = prob
+    lam = 0.3
+    t = linop.TikhonovAugmented.wrap(A, lam)
+    assert t.shape == (M_ROWS + N_COLS, N_COLS)
+    Ad = t.materialize()
+    assert Ad.shape == t.shape
+    x = jax.random.normal(jax.random.key(5), (N_COLS,))
+    u = jax.random.normal(jax.random.key(6), (M_ROWS + N_COLS,))
+    assert jnp.allclose(t.matvec(x), Ad @ x, atol=1e-10)
+    assert jnp.allclose(t.rmatvec(u), Ad.T @ u, atol=1e-10)
+    assert jnp.allclose(t.augment_rhs(b), jnp.concatenate([b, jnp.zeros(N_COLS)]))
+    # over a non-materializable core, the augmentation isn't either
+    t2 = linop.TikhonovAugmented.wrap(_custom(A), lam)
+    assert not t2.materializable
+
+
+def test_ensure_dense(prob):
+    A, _, _ = prob
+    assert linop.ensure_dense(A) is A
+    assert jnp.allclose(linop.ensure_dense(BCOO.fromdense(A)), A)
+    with pytest.raises(TypeError, match="materializable"):
+        linop.ensure_dense(_custom(A), who="test")
+
+
+def test_estimate_2norm_accepts_all_forms(prob):
+    A, _, _ = prob
+    true = float(jnp.linalg.norm(A, 2))
+    for name, op in _variants(A).items():
+        est = float(estimate_2norm(op, jax.random.key(7)))
+        assert est == pytest.approx(true, rel=1e-2), name
+    # raw array too (the coercing entry point)
+    assert float(estimate_2norm(A, jax.random.key(7))) == pytest.approx(
+        true, rel=1e-2
+    )
+
+
+# ------------------------------------------------------- sketch × operator
+
+SKETCH_TEST_KINDS = sorted(set(SKETCH_KINDS) - {"clarkson_woodruff"})
+
+
+@pytest.mark.parametrize("kind", SKETCH_TEST_KINDS)
+def test_apply_op_matches_dense_sketch(kind):
+    """op.apply_op must realize S·A for dense, BCOO and matrix-free A."""
+    m, n, d = 300, 9, 64
+    key = jax.random.key(10)
+    A = jnp.where(
+        jax.random.uniform(key, (m, n)) < 0.2,
+        jax.random.normal(jax.random.key(11), (m, n)),
+        0.0,
+    )
+    op = sample_sketch(kind, jax.random.key(12), d, m)
+    want = op.as_dense() @ A
+    for name, Aop in _variants(A).items():
+        got = op.apply_op(Aop)
+        assert got.shape == (d, n), (kind, name)
+        assert jnp.allclose(got, want, atol=1e-9), (kind, name)
+
+
+@pytest.mark.parametrize("kind", SKETCH_TEST_KINDS)
+def test_as_dense_t_matches_transpose(kind):
+    op = sample_sketch(kind, jax.random.key(13), 48, 200)
+    assert jnp.allclose(op.as_dense_t(), op.as_dense().T, atol=1e-10)
+
+
+def test_apply_op_tikhonov():
+    m, n, d, lam = 220, 7, 40, 0.5
+    A = jax.random.normal(jax.random.key(14), (m, n))
+    t = linop.TikhonovAugmented.wrap(A, lam)
+    op = sample_sketch("countsketch", jax.random.key(15), d, m + n)
+    want = op.as_dense() @ t.materialize()
+    assert jnp.allclose(op.apply_op(t), want, atol=1e-9)
+    # matrix-free core takes the generic rmatmat path
+    t2 = linop.TikhonovAugmented.wrap(_custom(A), lam)
+    assert jnp.allclose(op.apply_op(t2), want, atol=1e-9)
+
+
+# ----------------------------------------------------- solvers × operator
+
+
+@pytest.mark.parametrize("method", ("saa", "sap", "iterative", "fossils", "lsqr"))
+@pytest.mark.parametrize("form", ("bcoo", "custom"))
+def test_every_solver_accepts_every_input_form(prob, method, form):
+    """Acceptance: every solver reachable from lstsq() takes dense, BCOO and
+    custom operators and agrees with the dense path to solver tolerance."""
+    A, b, x_qr = prob
+    key = jax.random.key(20)
+    Ain = _variants(A)[form]
+    res = lstsq(Ain, b, key, method=method)
+    res_dense = lstsq(A, b, key, method=method)
+    norm = jnp.linalg.norm(x_qr)
+    assert float(jnp.linalg.norm(res.x - x_qr) / norm) < 1e-6, (method, form)
+    # same sketch draw ⇒ operator and dense paths agree much tighter than
+    # the solver tolerance (identical math, different product order)
+    assert float(jnp.linalg.norm(res.x - res_dense.x) / norm) < 1e-8
+
+
+def test_direct_materializes_bcoo_but_rejects_custom(prob):
+    A, b, x_qr = prob
+    res = lstsq(BCOO.fromdense(A), b, method="direct")
+    assert jnp.allclose(res.x, x_qr, atol=1e-8)
+    with pytest.raises(TypeError, match="materializable"):
+        lstsq(_custom(A), b, method="direct")
+
+
+def test_auto_selection_matrix_free(prob):
+    A, b, _ = prob
+    # sparse input, key: sketched solver; never 'direct' even when small
+    assert select_method(2000, 32, matrix_free=True) == "iterative"
+    assert select_method(2000, 32, matrix_free=True, accuracy="fast") == "saa"
+    assert select_method(2000, 32, matrix_free=True, has_key=False) == "lsqr"
+    # outside the sketching regime matrix-free falls back to lsqr
+    assert select_method(100, 60, matrix_free=True) == "lsqr"
+    res = lstsq(BCOO.fromdense(A), b, jax.random.key(21))
+    assert res.method == "iterative"
+    res = lstsq(_custom(A), b)
+    assert res.method == "lsqr"
+
+
+def test_saa_operator_form_disables_fallback(prob):
+    """Matrix-free SAA cannot take the dense perturbation fallback."""
+    A, b, _ = prob
+    res = lstsq(BCOO.fromdense(A), b, jax.random.key(22), method="saa")
+    assert not bool(res.used_fallback)

@@ -80,3 +80,33 @@ def test_direct_result_is_exact(prob):
     # rnorm/arnorm are the true residual quantities.
     r = prob.b - prob.A @ res.x
     assert float(res.rnorm) == pytest.approx(float(jnp.linalg.norm(r)))
+
+
+@pytest.mark.parametrize("method", ("direct", "iterative", "lsqr"))
+def test_ridge_matches_normal_equations(method):
+    """lstsq(reg=λ) must reproduce the closed-form ridge solution
+    (AᵀA + λI)⁻¹Aᵀb on a small well-conditioned problem."""
+    m, n, lam = 600, 12, 0.7
+    k1, k2, key = jax.random.split(jax.random.key(3), 3)
+    A = jax.random.normal(k1, (m, n))
+    b = jax.random.normal(k2, (m,))
+    x_ridge = jnp.linalg.solve(A.T @ A + lam * jnp.eye(n), A.T @ b)
+    res = lstsq(A, b, key, method=method, reg=lam)
+    assert float(jnp.linalg.norm(res.x - x_ridge) / jnp.linalg.norm(x_ridge)) < 1e-8
+    # diagnostics are reported for the ORIGINAL system: the ridge gradient
+    # Aᵀ(b − Ax) − λx vanishes at the ridge optimum, unlike Aᵀr itself.
+    r = b - A @ res.x
+    assert float(res.rnorm) == pytest.approx(float(jnp.linalg.norm(r)), rel=1e-9)
+    assert float(res.arnorm) < 1e-8 * float(jnp.linalg.norm(b))
+    assert float(jnp.linalg.norm(A.T @ r)) > 1e-3  # plain lstsq gradient ≠ 0
+
+
+def test_ridge_increases_with_lambda(prob):
+    """Sanity: larger λ shrinks ‖x‖ monotonically."""
+    key = jax.random.key(4)
+    norms = [
+        float(jnp.linalg.norm(lstsq(prob.A, prob.b, key, method="direct",
+                                    reg=lam).x))
+        for lam in (0.0, 1.0, 100.0)
+    ]
+    assert norms[0] > norms[1] > norms[2]

@@ -12,7 +12,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import sample_sketch
+from repro.core import SKETCH_KINDS, sample_sketch
 from repro.core.lsqr import lsqr_dense
 from repro.kernels import countsketch_apply, countsketch_ref
 
@@ -21,6 +21,33 @@ dims = st.tuples(
     st.integers(min_value=1, max_value=9),    # n
     st.integers(min_value=2, max_value=50),   # d
 )
+
+ALL_KINDS = sorted(set(SKETCH_KINDS) - {"clarkson_woodruff"})
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(ALL_KINDS), dims, st.integers(0, 2**30))
+def test_sketch_adjoint_consistency(kind, mnd, seed):
+    """⟨S x, y⟩ == ⟨x, Sᵀ y⟩ for every operator kind — the apply and the
+    materialized S/Sᵀ must realize the same linear map and its adjoint.
+    (sparse_sign and uniform_sparse previously had no such coverage.)"""
+    m, _, d = mnd
+    op = sample_sketch(kind, jax.random.key(seed), d, m)
+    x = jax.random.normal(jax.random.key(seed + 1), (m,))
+    y = jax.random.normal(jax.random.key(seed + 2), (d,))
+    lhs = jnp.vdot(op.apply(x), y)
+    rhs = jnp.vdot(x, op.as_dense_t() @ y)
+    assert jnp.allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(ALL_KINDS), dims, st.integers(0, 2**30))
+def test_sketch_apply_matches_dense_property(kind, mnd, seed):
+    """apply(A) == as_dense() @ A on random shapes for every kind."""
+    m, n, d = mnd
+    op = sample_sketch(kind, jax.random.key(seed), d, m)
+    A = jax.random.normal(jax.random.key(seed + 3), (m, n))
+    assert jnp.allclose(op.apply(A), op.as_dense() @ A, atol=1e-9)
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,163 @@
+"""SketchedSolver: one sketch + QR amortized over many right-hand sides."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental.sparse import BCOO
+
+from repro.core import (
+    SketchedSolver,
+    SolveResult,
+    linop,
+    qr_solve,
+)
+from repro.core import precond as precond_lib
+from repro.core import sketch as sketch_lib
+
+M_ROWS, N_COLS = 1500, 24
+
+
+@pytest.fixture(scope="module")
+def prob():
+    k1, k2 = jax.random.split(jax.random.key(0))
+    A = jax.random.normal(k1, (M_ROWS, N_COLS))
+    b = jax.random.normal(k2, (M_ROWS,))
+    return A, b, qr_solve(A, b)
+
+
+def relerr(x, ref):
+    return float(jnp.linalg.norm(x - ref) / jnp.linalg.norm(ref))
+
+
+def test_k_solves_one_sketch_one_qr(prob, monkeypatch):
+    """Acceptance: serving k right-hand sides performs EXACTLY one
+    sketch of A and one QR factorization — counted at the call sites, not
+    via the session's own bookkeeping."""
+    A, b, _ = prob
+    counts = {"sample": 0, "qr": 0}
+    real_sample = sketch_lib.sample
+    real_from_sketch = precond_lib.SketchedFactor.from_sketch.__func__
+
+    def counting_sample(*a, **kw):
+        counts["sample"] += 1
+        return real_sample(*a, **kw)
+
+    def counting_from_sketch(cls, B):
+        counts["qr"] += 1
+        return real_from_sketch(cls, B)
+
+    monkeypatch.setattr(sketch_lib, "sample", counting_sample)
+    monkeypatch.setattr(
+        precond_lib.SketchedFactor,
+        "from_sketch",
+        classmethod(counting_from_sketch),
+    )
+
+    solver = SketchedSolver(A, jax.random.key(1))
+    assert counts == {"sample": 1, "qr": 1}
+    k = 6
+    for i in range(k):
+        solver.solve(b + 0.01 * i)
+    solver.solve_many(jnp.stack([b, -b], axis=1))
+    assert counts == {"sample": 1, "qr": 1}  # nothing rebuilt per solve
+    assert solver.stats["sketches"] == 1
+    assert solver.stats["qr_factorizations"] == 1
+    assert solver.stats["solves"] == k + 2
+
+
+def test_solve_matches_direct(prob):
+    A, b, x_qr = prob
+    solver = SketchedSolver(A, jax.random.key(2))
+    res = solver.solve(b)
+    assert isinstance(res, SolveResult)
+    assert res.method == "session"
+    assert relerr(res.x, x_qr) < 1e-8
+
+
+def test_solve_many_matches_columnwise(prob):
+    A, b, _ = prob
+    solver = SketchedSolver(A, jax.random.key(3))
+    B = jnp.stack([b, 0.5 * b + 0.1, -2.0 * b], axis=1)
+    res = solver.solve_many(B)
+    assert res.x.shape == (N_COLS, 3)
+    for j in range(3):
+        x_ref = qr_solve(A, B[:, j])
+        assert relerr(res.x[:, j], x_ref) < 1e-8, j
+    with pytest.raises(ValueError, match="solve_many needs B"):
+        solver.solve_many(b)
+
+
+def test_accepts_sparse_and_operator_inputs(prob):
+    A, b, x_qr = prob
+    sp = SketchedSolver(BCOO.fromdense(A), jax.random.key(4))
+    assert relerr(sp.solve(b).x, x_qr) < 1e-8
+    custom = linop.CustomOperator(
+        matvec_fn=lambda v: A @ v,
+        rmatvec_fn=lambda u: A.T @ u,
+        op_shape=tuple(A.shape),
+        op_dtype=A.dtype,
+    )
+    cu = SketchedSolver(custom, jax.random.key(4))
+    assert relerr(cu.solve(b).x, x_qr) < 1e-8
+
+
+def test_update_rows_delta_sketch(prob):
+    """Row updates refresh the factor WITHOUT a second full sketch, and the
+    updated sketch equals re-sketching the new A with the same S."""
+    A, b, _ = prob
+    solver = SketchedSolver(A, jax.random.key(5))
+    idx = jnp.array([0, 17, 900, M_ROWS - 1])
+    rows = jax.random.normal(jax.random.key(6), (4, N_COLS))
+    solver.update_rows(idx, rows)
+    assert solver.stats["sketches"] == 1  # delta path, no re-sketch
+    assert solver.stats["qr_factorizations"] == 2
+
+    A_new = A.at[idx].set(rows)
+    B_fresh = solver._sketch_op.apply(A_new)
+    assert jnp.allclose(solver._B, B_fresh, atol=1e-9)
+    assert relerr(solver.solve(b).x, qr_solve(A_new, b)) < 1e-8
+
+
+def test_update_rows_srht_resketches_with_same_s(prob):
+    """SRHT columns couple through the Hadamard transform — no cheap
+    restriction, so update_rows re-sketches (same S, no new draw)."""
+    A, b, _ = prob
+    solver = SketchedSolver(A, jax.random.key(7), sketch="srht")
+    idx = jnp.array([1, 2])
+    rows = jax.random.normal(jax.random.key(8), (2, N_COLS))
+    solver.update_rows(idx, rows)
+    assert solver.stats["sketches"] == 2  # full re-sketch, still one draw
+    A_new = A.at[idx].set(rows)
+    assert relerr(solver.solve(b).x, qr_solve(A_new, b)) < 1e-8
+
+
+def test_update_rows_validation(prob):
+    A, b, _ = prob
+    solver = SketchedSolver(A, jax.random.key(9))
+    with pytest.raises(ValueError, match="rows must have shape"):
+        solver.update_rows(jnp.array([0]), jnp.zeros((2, N_COLS)))
+    with pytest.raises(ValueError, match="unique row indices"):
+        # duplicates would double-count in the delta-sketch (last-write-wins
+        # row rewrite vs additive sketch update)
+        solver.update_rows(jnp.array([3, 3]), jnp.zeros((2, N_COLS)))
+    sp = SketchedSolver(BCOO.fromdense(A), jax.random.key(9))
+    with pytest.raises(TypeError, match="dense A"):
+        sp.update_rows(jnp.array([0]), jnp.zeros((1, N_COLS)))
+
+
+def test_session_ridge(prob):
+    A, b, _ = prob
+    lam = 0.8
+    x_ridge = jnp.linalg.solve(
+        A.T @ A + lam * jnp.eye(N_COLS), A.T @ b
+    )
+    solver = SketchedSolver(A, jax.random.key(10), reg=lam)
+    res1 = solver.solve(b)
+    assert relerr(res1.x, x_ridge) < 1e-8
+    # diagnostics are for the ORIGINAL system (like lstsq(reg=...)), not
+    # the augmented one whose residual is inflated by the λ‖x‖² penalty
+    r = b - A @ res1.x
+    assert float(res1.rnorm) == pytest.approx(float(jnp.linalg.norm(r)), rel=1e-9)
+    assert float(res1.arnorm) < 1e-8 * float(jnp.linalg.norm(b))
+    res = solver.solve_many(jnp.stack([b, -b], axis=1))
+    assert relerr(res.x[:, 0], x_ridge) < 1e-8
+    assert float(res.rnorm[0]) == pytest.approx(float(jnp.linalg.norm(r)), rel=1e-9)
