@@ -5,6 +5,7 @@
   sketch    paper §2: operator quality/cost comparison
   kernels   Pallas kernel micro-benches (interpret mode + derived TPU terms)
   dist      distributed sketched LSQ (shard_map) + comm accounting
+  stream    streaming engine: tiles/sec + peak-memory proxy vs monolithic
   roofline  per-cell roofline terms from the dry-run JSONs
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
@@ -21,7 +22,8 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,sketch,kernels,dist,roofline")
+                    help="comma list: fig3,fig4,sketch,kernels,dist,stream,"
+                         "roofline")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -46,6 +48,9 @@ def main() -> None:
     if want("dist"):
         from . import distributed_bench
         distributed_bench.run()
+    if want("stream"):
+        from . import streaming_bench
+        streaming_bench.run(m=65536 if args.full else 16384)
     if want("roofline"):
         from . import roofline
         roofline.run()

@@ -1,0 +1,76 @@
+"""Streaming sketch engine: streamed build throughput vs the monolithic
+apply, plus the two-pass solve.
+
+Each ``stream/<kind>/build`` row times one full accumulator pass (pass 1
+of the streaming drivers) and derives ``tiles_per_s`` and the
+peak-memory proxy ``peak_tile_frac`` = tile bytes / (m·n·8) — the
+fraction of A resident at any point on the streamed path (the monolithic
+rows hold all of it, ``peak_tile_frac=1``).  ``stream/solve/*`` compares
+the two-pass ``stream_lstsq`` against the in-memory ``lstsq`` with the
+same key (bit-identical S, so the numerics match; the delta is pure
+streaming overhead).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import lstsq, sample_sketch
+from repro.streaming import ArraySource, accumulate_source, stream_lstsq
+
+from .common import emit, time_fn
+
+OPERATORS = (
+    "countsketch",
+    "sparse_sign",
+    "uniform_sparse",
+    "srht",
+    "gaussian",
+    "uniform_dense",
+)
+
+
+def run(m=16384, n=64, d_mult=4, tile_rows=2048, seed=0):
+    d = d_mult * n
+    A = jax.random.normal(jax.random.key(seed), (m, n))
+    b = jax.random.normal(jax.random.key(seed + 1), (m,))
+    src = ArraySource(A, tile_rows=tile_rows)
+    n_tiles = src.num_tiles
+    tile_frac = tile_rows / m
+
+    for kind in OPERATORS:
+        op = sample_sketch(kind, jax.random.key(seed + 2), d, m)
+
+        def build():
+            return accumulate_source(op, src).finalize()
+
+        t_stream = time_fn(build)
+        t_mono = time_fn(lambda: op.apply(A))
+        emit(
+            f"stream/{kind}/build",
+            t_stream,
+            f"tiles_per_s={n_tiles / t_stream:.1f};tile_rows={tile_rows};"
+            f"peak_tile_frac={tile_frac:.4f};d={d};m={m}",
+        )
+        emit(
+            f"stream/{kind}/monolithic",
+            t_mono,
+            f"peak_tile_frac=1.0;stream_overhead_x={t_stream / t_mono:.2f};"
+            f"d={d};m={m}",
+        )
+
+    key = jax.random.key(seed + 3)
+    for method in ("sketch_and_solve", "iterative", "saa"):
+        t_solve = time_fn(
+            lambda: stream_lstsq(src, b, key, method=method).x
+        )
+        emit(
+            f"stream/solve/{method}",
+            t_solve,
+            f"tile_rows={tile_rows};peak_tile_frac={tile_frac:.4f};m={m};n={n}",
+        )
+    t_dense = time_fn(lambda: lstsq(A, b, key, method="iterative").x)
+    emit(
+        f"stream/solve/dense_iterative",
+        t_dense,
+        f"peak_tile_frac=1.0;m={m};n={n}",
+    )

@@ -1,0 +1,150 @@
+"""Out-of-core least squares: solve a memory-mapped problem bigger than
+the tile budget, without ever holding A.
+
+    PYTHONPATH=src python examples/streaming_lstsq.py [--m 40000] [--n 64]
+                                                      [--cond 1e10]
+
+This is the workload the in-memory solvers cannot touch: A lives in a
+``.npy`` file on disk and is GENERATED tile-by-tile (each tile from its
+own fold of the PRNG key), so the full matrix is never resident at any
+point — not during generation, not during the solve.  The streaming
+drivers read it back through ``numpy.memmap`` one tile at a time:
+
+1. pass 1 streams the tiles once and assembles the sketch B = S·A
+   (b rides along as an extra column),
+2. pass 2 re-streams the tiles for the blocked ``A@v`` / ``Aᵀ@u``
+   products inside the forward-stable iterative-sketching solver.
+
+Peak data-matrix memory is ONE tile — the default tile budget here is
+m/8 rows, well under 25% of m·n — yet on the κ=1e10 problem the streamed
+forward error matches the dense in-memory path (same key ⇒ bit-identical
+sketch operator).  The dense solve at the end is for validation only and
+is the one place this script materializes A.
+
+The generated fixture is cached (``--cache-dir``, default
+``.cache/streaming``) keyed by its parameters, so repeated runs — and the
+CI smoke job — skip the generation pass.
+"""
+import argparse
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lstsq, qr_solve
+from repro.streaming import MemmapSource, stream_lstsq
+
+
+def generate_memmapped_problem(path, key, m, n, cond, beta, tile_rows):
+    """Write A (m, n) with cond(A) ≈ ``cond`` to ``path`` tile-by-tile.
+
+    A = (G/√m)·diag(σ)·Vᵀ with iid Gaussian G generated per-tile from
+    fold_in(key, tile index), σ log-equispaced in [1, 1/κ], Haar V — the
+    'fast' variant of the paper's §5.1 generator (repro.core.problems),
+    restructured so no more than one tile of A ever exists in memory.
+    Returns (x_true, b); b = A x_true + β·noise accumulates per tile.
+    """
+    k_v, k_w, k_tiles, k_noise = jax.random.split(key, 4)
+    V, _ = jnp.linalg.qr(jax.random.normal(k_v, (n, n)), mode="reduced")
+    sigma = jnp.logspace(0.0, -jnp.log10(cond), n)
+    w = jax.random.normal(k_w, (n,))
+    x_true = w / jnp.linalg.norm(w)
+    coeff = (sigma[:, None] * V.T) @ x_true  # diag(σ)Vᵀ x_true, (n,)
+
+    mm = np.lib.format.open_memmap(path, mode="w+", dtype=np.float64,
+                                   shape=(m, n))
+    b = np.empty((m,), np.float64)
+    scale = 1.0 / np.sqrt(m)
+    for i, o in enumerate(range(0, m, tile_rows)):
+        t = min(tile_rows, m - o)
+        G = jax.random.normal(jax.random.fold_in(k_tiles, i), (t, n))
+        tile = (scale * G * sigma[None, :]) @ V.T
+        noise = beta * jax.random.normal(jax.random.fold_in(k_noise, i), (t,))
+        mm[o : o + t] = np.asarray(tile)
+        b[o : o + t] = np.asarray(scale * (G @ coeff) + noise)
+    mm.flush()
+    del mm
+    return np.asarray(x_true), b
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=40000)
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--cond", type=float, default=1e10)
+    ap.add_argument("--beta", type=float, default=1e-6)
+    ap.add_argument("--tile-rows", type=int, default=None,
+                    help="tile budget in rows (default m//8, i.e. 12.5%% "
+                         "of A resident at peak)")
+    ap.add_argument("--cache-dir", default=os.path.join(".cache", "streaming"))
+    args = ap.parse_args()
+    m, n = args.m, args.n
+    tile_rows = args.tile_rows or max(m // 8, 1)
+    if tile_rows * 4 > m:
+        raise SystemExit("--tile-rows must keep the tile budget under 25% "
+                         "of A (tile_rows <= m/4)")
+
+    os.makedirs(args.cache_dir, exist_ok=True)
+    stem = f"lsq_m{m}_n{n}_c{args.cond:.0e}_b{args.beta:.0e}_t{tile_rows}"
+    a_path = os.path.join(args.cache_dir, stem + "_A.npy")
+    b_path = os.path.join(args.cache_dir, stem + "_bx.npz")
+    if os.path.exists(a_path) and os.path.exists(b_path):
+        dat = np.load(b_path)
+        x_true, b = dat["x_true"], dat["b"]
+        print(f"fixture cache hit: {a_path}")
+    else:
+        t0 = time.perf_counter()
+        x_true, b = generate_memmapped_problem(
+            a_path, jax.random.key(0), m, n, args.cond, args.beta, tile_rows
+        )
+        np.savez(b_path, x_true=x_true, b=b)
+        print(f"generated fixture in {time.perf_counter() - t0:.1f}s: {a_path}")
+
+    tile_mb = tile_rows * n * 8 / 1e6
+    full_mb = m * n * 8 / 1e6
+    print(f"A: {m}x{n} float64 on disk ({full_mb:.1f} MB); tile budget "
+          f"{tile_rows} rows = {tile_mb:.1f} MB "
+          f"({100 * tile_rows / m:.1f}% of A resident at peak)")
+
+    source = MemmapSource(a_path, tile_rows=tile_rows)
+    b = jnp.asarray(b)
+    key = jax.random.key(1)
+
+    t0 = time.perf_counter()
+    res = stream_lstsq(source, b, key, method="iterative")
+    dt_stream = time.perf_counter() - t0
+
+    # ---- validation only: the dense path materializes A ----------------
+    # Forward error is measured against the Householder-QR minimizer (on a
+    # κ=1e10 problem the generator's x_true is itself O(κ·β) away from the
+    # true argmin, so x_qr is the reference that isolates SOLVER error).
+    A = jnp.asarray(np.load(a_path))
+    x_qr = qr_solve(A, b)
+    xnorm = float(jnp.linalg.norm(x_qr))
+    err_stream = float(jnp.linalg.norm(res.x - x_qr)) / xnorm
+    print(f"\nstream_lstsq[iterative]  {dt_stream * 1e3:9.1f} ms   "
+          f"forward error {err_stream:.3e}   itn={int(res.itn)}")
+    t0 = time.perf_counter()
+    res_dense = lstsq(A, b, key, method="iterative")
+    dt_dense = time.perf_counter() - t0
+    err_dense = float(jnp.linalg.norm(res_dense.x - x_qr)) / xnorm
+    print(f"lstsq[iterative] (dense) {dt_dense * 1e3:9.1f} ms   "
+          f"forward error {err_dense:.3e}   itn={int(res_dense.itn)}")
+
+    # the acceptance bar: streaming costs no accuracy on the κ=1e10
+    # problem (floor term: both paths can sit at the rounding floor)
+    floor = 64 * float(jnp.finfo(jnp.float64).eps)
+    assert err_stream <= 10 * err_dense + floor, (
+        f"streamed forward error {err_stream:.3e} more than 10x the dense "
+        f"path ({err_dense:.3e})"
+    )
+    print("\nOK: streamed forward error within 10x of the dense path, "
+          f"with at most {100 * tile_rows / m:.1f}% of A ever resident.")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,11 @@
                     right-hand sides (serving front-end)
 - ``problems``    — §5.1 ill-conditioned problem generator
 - ``distributed`` — multi-pod row-sharded SAA-SAS (shard_map + psum)
+
+Out-of-core inputs live in the sibling ``repro.streaming`` package
+(``RowSource`` tiles, mergeable sketch accumulators, two-pass solvers);
+``stream_lstsq`` and ``StreamingSolver`` are re-exported here lazily, and
+``lstsq`` itself accepts a ``RowSource`` in place of A.
 """
 from . import (
     backend,
@@ -71,4 +76,15 @@ __all__ = [
     "sap_sas",
     "SketchedSolver",
     "AugmentedSketch", "SKETCH_KINDS", "fwht", "sample_sketch",
+    "stream_lstsq", "StreamingSolver",
 ]
+
+
+def __getattr__(name):
+    # repro.streaming imports repro.core at module scope; these re-exports
+    # must therefore resolve lazily (PEP 562) to avoid the import cycle.
+    if name in ("stream_lstsq", "StreamingSolver"):
+        from ..streaming import solve as _streaming_solve
+
+        return getattr(_streaming_solve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,25 +2,30 @@
 
 The tall matrix A (m × n, m ≫ n) is **row-sharded** across a mesh axis (or a
 tuple of axes, e.g. ``('pod', 'data')`` on the multi-pod production mesh).
-CountSketch is a linear row-bucketing map, so each shard sketches its local
+Every scatter-family sketch (CountSketch, sparse-sign, uniform-sparse) is a
+linear row map with per-row parameters, so each shard sketches its local
 rows into the *global* s-bucket space and one ``psum`` reconstructs
 ``SA = Σᵢ S A_i`` **exactly** — communication is a single s×(n+1) all-reduce,
-independent of m.  The small QR runs replicated; LSQR then runs distributed
-with row-sharded u-space vectors and psum-reduced inner products (injected
-via ``lsqr(udot=...)``).
+independent of m.  (That psum is the collective form of the associative
+partial-sketch merge in ``repro.streaming.accumulate``.)  The small QR runs
+replicated; LSQR then runs distributed with row-sharded u-space vectors and
+psum-reduced inner products (injected via ``lsqr(udot=...)``).
 
-The sketch itself is the shared ``repro.core.sketch.CountSketch`` operator:
-sampled ONCE at global size from ``key``, then row-sharded with A — each
-shard wraps its slice of (buckets, signs) back into a local ``CountSketch``
-and calls the same backend-dispatched ``apply`` (reference segment_sum or
-the Pallas one-hot-matmul kernel, per ``backend=``).  Note the draw is NOT
-bit-identical to ``saa_sas(key)``'s: that solver derives its sketch key via
-``split(key, 3)`` (it also needs perturbation/norm keys for the fallback).
+The sketch is the shared ``repro.core.sketch`` operator of the requested
+kind: sampled ONCE at global size from ``key``, then its per-row parameter
+arrays row-shard with A — each shard rewraps its slice into a local
+operator of the same kind and calls the same backend-dispatched ``apply``
+(reference segment_sum or the Pallas one-hot-matmul kernel, per
+``backend=``).  Note the draw is NOT bit-identical to ``saa_sas(key)``'s:
+that solver derives its sketch key via ``split(key, 3)`` (it also needs
+perturbation/norm keys for the fallback).
 
 This is the native multi-pod form of SAA-SAS: compute scales 1/P, the
 collective term is O(s·n) per solve + O(n) per LSQR iteration.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +55,15 @@ def shard_rows(mesh, axes, A, b):
     return A, b
 
 
+# Scatter-family kinds: per-row parameter arrays (field names) and the axis
+# along which those arrays index rows of A — the axis that shards with A.
+_ROW_PARAM_FIELDS = {
+    sketch_lib.CountSketch: (("buckets", "signs"), 0),
+    sketch_lib.UniformSparseSketch: (("buckets", "values"), 0),
+    sketch_lib.SparseSignSketch: (("buckets", "signs"), 1),
+}
+
+
 def sketched_lstsq(
     A,
     b: jax.Array,
@@ -57,6 +71,7 @@ def sketched_lstsq(
     *,
     mesh,
     axes=("data",),
+    sketch: str = "clarkson_woodruff",
     sketch_size: int | None = None,
     atol: float = 0.0,
     btol: float = 0.0,
@@ -69,6 +84,13 @@ def sketched_lstsq(
     Jit-compatible; lowers to one psum of the s×(n+1) sketch + one psum per
     LSQR iteration (n-vector + 3 scalars).  ``backend`` selects the local
     sketch-apply implementation (see ``repro.core.backend``).
+
+    ``sketch`` may be any scatter-family kind (``clarkson_woodruff`` /
+    ``countsketch``, ``sparse_sign``, ``uniform_sparse``) — their per-row
+    parameter arrays shard with A, so each shard's slice is itself a valid
+    operator into the global bucket space.  The dense-S kinds and SRHT have
+    no row-local parameters (S columns or the Hadamard coupling would have
+    to replicate); use the single-host or streaming drivers for those.
 
     The row-sharded shard_map layout needs A's entries on-device, so
     non-dense inputs (BCOO, materializable operators) are densified here;
@@ -84,16 +106,34 @@ def sketched_lstsq(
     s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
     if steptol is None:
         steptol = 32 * float(jnp.finfo(A.dtype).eps)
-    # One global operator draw, shared by every shard; its (buckets, signs)
-    # arrays row-shard with A.
-    op = sketch_lib.CountSketch.sample(key, s, m, dtype=A.dtype)
+    cls = sketch_lib.SKETCH_KINDS.get(sketch)
+    if cls is None:
+        raise ValueError(
+            f"unknown sketch kind {sketch!r}; have "
+            f"{sorted(sketch_lib.SKETCH_KINDS)}"
+        )
+    if cls not in _ROW_PARAM_FIELDS:
+        raise ValueError(
+            f"sketch {sketch!r} has no per-row parameters to shard; the "
+            "distributed driver supports the scatter kinds "
+            "(clarkson_woodruff/countsketch, sparse_sign, uniform_sparse)"
+        )
+    # One global operator draw, shared by every shard; its per-row
+    # parameter arrays row-shard with A.
+    op = cls.sample(key, s, m, dtype=A.dtype)
+    fields, row_axis = _ROW_PARAM_FIELDS[cls]
+    params = tuple(getattr(op, f) for f in fields)
+    param_spec = P(axes) if row_axis == 0 else P(None, axes)
 
-    def local_solve(A_i, b_i, h_i, s_i):
+    def local_solve(A_i, b_i, *params_i):
         # --- sketch locally into global bucket space, psum to assemble ----
-        # Each shard's rows form a valid CountSketch into the SAME s-bucket
-        # space: rewrap the local slice and reuse the operator's apply.
-        local_op = sketch_lib.CountSketch(
-            buckets=h_i, signs=s_i, d=s, m=A_i.shape[0]
+        # Each shard's rows form a valid scatter sketch into the SAME
+        # s-bucket space: rewrap the local parameter slices and reuse the
+        # operator's backend-dispatched apply.  (Only the static d/k
+        # metadata is read off the global op — its arrays are all replaced,
+        # so nothing m-sized is captured replicated.)
+        local_op = dataclasses.replace(
+            op, m=A_i.shape[0], **dict(zip(fields, params_i))
         )
         SA = lax.psum(local_op.apply(A_i, backend=backend), axes)
         Sb = lax.psum(local_op.apply(b_i, backend=backend), axes)
@@ -126,10 +166,10 @@ def sketched_lstsq(
     fn = shard_map_compat(
         local_solve,
         mesh=mesh,
-        in_specs=(P(axes, None), row, row, row),
+        in_specs=(P(axes, None), row) + (param_spec,) * len(params),
         out_specs=(P(), P(), P(), P(), P()),
     )
-    x, istop, itn, rnorm, arnorm = fn(A, b, op.buckets, op.signs)
+    x, istop, itn, rnorm, arnorm = fn(A, b, *params)
     return SolveResult(
         x=x, istop=istop, itn=itn, rnorm=rnorm, arnorm=arnorm,
         used_fallback=jnp.asarray(False),

@@ -25,6 +25,13 @@ problem min‖Ax − b‖² + λ‖x‖² through the augmented operator [A; √
 ``rnorm``/``arnorm`` are recomputed for the ORIGINAL system (``arnorm`` is
 the ridge gradient norm ‖Aᵀ(b − Ax) − λx‖).
 
+``A`` may ALSO be a ``repro.streaming`` row source (a ``RowSource``
+instance) — an out-of-core matrix streamed one row tile at a time.  Those
+inputs delegate to :func:`repro.streaming.solve.stream_lstsq` (also
+re-exported here as ``stream_lstsq``), whose two-pass solvers never hold
+A; ``method`` must then be one of its streaming methods (``"auto"``,
+``"saa"``, ``"iterative"``, ``"sketch_and_solve"``).
+
 Auto-selection (``method="auto"``):
 
 - problems too small or too square for sketching to pay off → ``direct``;
@@ -55,7 +62,17 @@ from .result import SolveResult
 from .saa import saa_sas
 from .sap import sap_sas
 
-__all__ = ["lstsq", "select_method", "METHODS", "ACCURACIES"]
+__all__ = ["lstsq", "select_method", "stream_lstsq", "METHODS", "ACCURACIES"]
+
+
+def __getattr__(name):
+    # Lazy re-export: repro.streaming imports repro.core at module scope,
+    # so the streaming driver can only be pulled in on first access.
+    if name == "stream_lstsq":
+        from ..streaming.solve import stream_lstsq
+
+        return stream_lstsq
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 METHODS = ("direct", "lsqr", "saa", "sap", "iterative", "fossils")
 ACCURACIES = ("fast", "balanced", "high")
@@ -149,6 +166,23 @@ def lstsq(
     them (``fossils`` controls its budget via refinement/inner-loop
     parameters, so ``atol``/``btol``/``iter_lim`` do not apply there).
     """
+    if callable(getattr(A, "tiles", None)):
+        # Row-streamed (out-of-core) input: delegate to the two-pass
+        # streaming drivers.  Lazy import — repro.streaming imports this
+        # package, so a top-level import would be circular.
+        from ..streaming.solve import stream_lstsq as _stream_lstsq
+
+        tol = {
+            k: v
+            for k, v in dict(atol=atol, btol=btol, steptol=steptol,
+                             iter_lim=iter_lim).items()
+            if v is not None
+        }
+        return _stream_lstsq(
+            A, b, key, method=method, sketch=sketch,
+            sketch_size=sketch_size, reg=reg, backend=backend,
+            history=history, **tol,
+        )
     A_in = linop.as_operator(A)
     if reg is not None:
         A_op = linop.TikhonovAugmented.wrap(A_in, reg)

@@ -114,6 +114,33 @@ class SketchedFactor(NamedTuple):
         B = op.apply_op(A, backend=backend)
         return cls.from_sketch(B), op
 
+    @classmethod
+    def build_streaming(
+        cls,
+        source,
+        key: jax.Array,
+        *,
+        sketch: str = "clarkson_woodruff",
+        sketch_size: int | None = None,
+        backend: str = "auto",
+    ):
+        """Build the factor from a row-streamed A: returns ``(factor, op)``.
+
+        ``source`` is anything ``repro.streaming.sources.as_source``
+        accepts (RowSource, array, ``.npy`` path).  One pass over the
+        tiles assembles B = SA through the mergeable accumulators of
+        ``repro.streaming.accumulate`` — A is never resident; with the
+        same ``key`` the operator draw is bit-identical to :meth:`build`
+        on the materialized matrix.
+        """
+        from ..streaming.solve import stream_sketch  # streaming imports us
+
+        B, op, _ = stream_sketch(
+            source, key, sketch=sketch, sketch_size=sketch_size,
+            backend=backend,
+        )
+        return cls.from_sketch(B), op
+
     # ------------------------------------------------------------ shape info
     @property
     def n(self) -> int:

@@ -96,30 +96,6 @@ def _solve_many(
     return res._replace(x=X, used_fallback=jnp.zeros(B.shape[1], bool))
 
 
-def _restrict_cols(op, idx: jax.Array):
-    """The sub-sketch S[:, idx] as a same-protocol operator, for the
-    delta-sketch of a row update.  Returns None for kinds without a cheap
-    column restriction (SRHT — its columns couple through the Hadamard
-    transform), in which case the caller re-sketches with the same S."""
-    if isinstance(op, sketch_lib.CountSketch):
-        return sketch_lib.CountSketch(
-            buckets=op.buckets[idx], signs=op.signs[idx], d=op.d, m=len(idx)
-        )
-    if isinstance(op, sketch_lib.UniformSparseSketch):
-        return sketch_lib.UniformSparseSketch(
-            buckets=op.buckets[idx], values=op.values[idx], d=op.d, m=len(idx)
-        )
-    if isinstance(op, sketch_lib.SparseSignSketch):
-        return sketch_lib.SparseSignSketch(
-            buckets=op.buckets[:, idx], signs=op.signs[:, idx],
-            d=op.d, m=len(idx), k=op.k,
-        )
-    S = getattr(op, "S", None)
-    if S is not None:  # gaussian / uniform-dense: slice the stored S
-        return sketch_lib.UniformDenseSketch(S=S[:, idx], d=op.d, m=len(idx))
-    return None
-
-
 class SketchedSolver:
     """One sketch + QR, amortized over arbitrarily many solves.
 
@@ -295,7 +271,9 @@ class SketchedSolver:
         tail = 0
         if isinstance(sk_op, sketch_lib.AugmentedSketch):
             sk_op, tail = sk_op.inner, sk_op.tail
-        sub = _restrict_cols(sk_op, idx)
+        # The sub-sketch S[:, idx] (shared with the streaming accumulators
+        # and the distributed per-shard assembly); None for SRHT.
+        sub = sk_op.restrict_cols(idx)
         if sub is None:
             # SRHT: no column restriction — re-sketch with the SAME S.
             self._set_matrix(A_new)

@@ -24,6 +24,13 @@ kernels' counter-based threefry + Box–Muller stream so the fused kernel
 regenerates it bit-for-bit), so backends agree to accumulation-order
 rounding and can be swapped under any solver. Kinds without a kernel
 (sparse-sign, uniform-sparse) fall back to the reference path.
+
+Row streaming: every kind also exposes ``apply_rows(tile, row_offset)`` —
+the restriction of S to a contiguous row tile of A — and (except SRHT)
+``restrict_cols(idx)``, the sub-operator S[:, idx].  These are the
+primitives behind the out-of-core accumulators of ``repro.streaming``, the
+session's delta-sketch row updates and the distributed per-shard sketch;
+see the streaming contract on ``_OperatorApply``.
 """
 from __future__ import annotations
 
@@ -155,6 +162,36 @@ class _OperatorApply:
         feeds these columns to the operator's rmatmat."""
         return self.as_dense().T
 
+    # ------------------------------------------------------ row streaming
+    # S is linear in the rows of A, so SA decomposes over any row tiling:
+    # SA = Σ_t S[:, o_t:o_t+len(t)] · A[o_t:o_t+len(t)].  ``apply_rows``
+    # is that per-tile restriction — the primitive behind the out-of-core
+    # accumulators in ``repro.streaming.accumulate``.  ``row_offset`` is a
+    # static Python int (the tile boundaries are host-side loop state).
+    #
+    # Contract per kind (see ``stream_semantics``):
+    # - "add"   (five kinds): returns the (d, ncols) additive contribution;
+    #   summing the tiles in any order reconstructs SA.
+    # - "place" (SRHT only): the Hadamard transform couples every row, so
+    #   the restriction returns the D-signed tile (t, ncols) instead; the
+    #   accumulator places it at rows [offset, offset+t) of the padded
+    #   buffer and applies H, P and the 1/√d scale ONCE at finalize.
+
+    stream_semantics: str = "add"
+
+    def apply_rows(self, tile, row_offset: int, *, backend: str = "auto"):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support row streaming"
+        )
+
+    def restrict_cols(self, idx):
+        """S[:, idx] as a same-protocol operator over ``len(idx)`` rows, or
+        ``None`` for kinds without an independent column restriction (SRHT —
+        its columns couple through the Hadamard transform).  Powers the
+        session's O(|idx|·n) delta-sketch row updates and the per-shard
+        restriction of the distributed/streaming sketch assembly."""
+        return None
+
 
 # --------------------------------------------------------------------------
 # Dense operators
@@ -171,20 +208,37 @@ class GaussianSketch(_OperatorApply):
     so the ``"pallas"`` backend's ``fused_gaussian_sketch`` regenerates the
     SAME matrix inside the kernel from ``key`` alone — the materialized S
     never has to leave HBM on that path.
+
+    ``sample(..., materialize=False)`` skips storing S entirely (S=None):
+    every column block is regenerated on demand from ``key`` via the same
+    counters, bitwise identical to slicing the stored matrix.  This is the
+    streaming configuration — for out-of-core m the (d, m) matrix S is as
+    unstorable as A itself, and ``apply_rows`` only ever needs the (d, t)
+    block of the current tile.
     """
 
-    S: jax.Array
+    S: jax.Array | None
     key: jax.Array  # PRNG key the fused kernel regenerates S from
     d: int = _static()
     m: int = _static()
 
     @classmethod
-    def sample(cls, key, d, m, dtype=jnp.float64):
-        from ..kernels.sketch_matmul import gaussian_matrix_ref
+    def sample(cls, key, d, m, dtype=jnp.float64, materialize=True):
+        S = cls._gen_cols(key, d, jnp.arange(m), dtype) if materialize else None
+        return cls(S=S, key=key, d=d, m=m)
+
+    @staticmethod
+    def _gen_cols(key, d, cols, dtype):
+        """Columns S[:, cols] from the kernel's counter stream (exact)."""
+        from ..kernels.sketch_matmul import gaussian_cols_ref
 
         scale = jnp.float32(1.0 / float(d) ** 0.5)
-        S = (gaussian_matrix_ref(key, d, m, jnp.float32) * scale).astype(dtype)
-        return cls(S=S, key=key, d=d, m=m)
+        return (gaussian_cols_ref(key, d, cols, jnp.float32) * scale).astype(dtype)
+
+    def _cols(self, cols, dtype):
+        if self.S is not None:
+            return self.S[:, cols]
+        return self._gen_cols(self.key, self.d, cols, dtype)
 
     def apply(self, A, *, backend: str = "auto"):
         rb = backend_lib.resolve(backend)
@@ -193,10 +247,29 @@ class GaussianSketch(_OperatorApply):
                 A, self.key, self.d, interpret=rb.interpret
             )
         A2, vec = _as_2d(A)
-        return _maybe_squeeze(self.S @ A2, vec)
+        S = self.S if self.S is not None else self.as_dense().astype(A2.dtype)
+        return _maybe_squeeze(S @ A2, vec)
+
+    def apply_rows(self, tile, row_offset: int, *, backend: str = "auto"):
+        del backend  # one (d, t) × (t, n) block product either way
+        tile2, _ = _as_2d(tile)
+        t = tile2.shape[0]
+        if self.S is not None:
+            St = self.S[:, row_offset : row_offset + t]
+        else:
+            St = self._gen_cols(
+                self.key, self.d, row_offset + jnp.arange(t), tile2.dtype
+            )
+        return St.astype(tile2.dtype) @ tile2
+
+    def restrict_cols(self, idx):
+        S = self._cols(idx, jnp.float64)
+        return UniformDenseSketch(S=S, d=self.d, m=S.shape[1])
 
     def as_dense(self):
-        return self.S
+        if self.S is not None:
+            return self.S
+        return self._gen_cols(self.key, self.d, jnp.arange(self.m), jnp.float64)
 
 
 @jax.tree_util.register_dataclass
@@ -220,6 +293,15 @@ class UniformDenseSketch(_OperatorApply):
             return _kernels().sketch_matmul(self.S, A, interpret=rb.interpret)
         A2, vec = _as_2d(A)
         return _maybe_squeeze(self.S @ A2, vec)
+
+    def apply_rows(self, tile, row_offset: int, *, backend: str = "auto"):
+        del backend
+        tile2, _ = _as_2d(tile)
+        St = self.S[:, row_offset : row_offset + tile2.shape[0]]
+        return St.astype(tile2.dtype) @ tile2
+
+    def restrict_cols(self, idx):
+        return UniformDenseSketch(S=self.S[:, idx], d=self.d, m=len(idx))
 
     def as_dense(self):
         return self.S
@@ -266,6 +348,25 @@ class SRHTSketch(_OperatorApply):
         HDx = fwht(self.signs[:, None].astype(dtype) * A2)
         B = HDx[self.rows] / jnp.sqrt(jnp.asarray(self.d, dtype))
         return _maybe_squeeze(B, vec)
+
+    # SRHT streams by placement, not addition: H mixes every row, so the
+    # per-tile restriction is the D-signed tile and the transform runs once
+    # at finalize (see ``_OperatorApply`` and ``repro.streaming.accumulate``).
+    stream_semantics = "place"
+
+    def apply_rows(self, tile, row_offset: int, *, backend: str = "auto"):
+        """The D-signed rows of the tile — NOT the (d, n) contribution.
+
+        The streaming accumulator writes these at rows
+        [row_offset, row_offset + t) of its (m_pad, n) buffer; the padded
+        FWHT, the row subsample P and the 1/√d scale are applied once at
+        ``finalize`` — bit-for-bit the reference ``apply``.
+        """
+        del backend
+        tile2, _ = _as_2d(tile)
+        t = tile2.shape[0]
+        signs = self.signs[row_offset : row_offset + t]
+        return signs[:, None].astype(tile2.dtype) * tile2
 
     def as_dense(self):
         eye = jnp.eye(self.m, dtype=self.signs.dtype)
@@ -320,6 +421,18 @@ class CountSketch(_OperatorApply):
         B = jax.ops.segment_sum(contrib, self.buckets, num_segments=self.d)
         return _maybe_squeeze(B, vec)
 
+    def apply_rows(self, tile, row_offset: int, *, backend: str = "auto"):
+        t = tile.shape[0]
+        return self.restrict_cols(
+            slice(row_offset, row_offset + t)
+        ).apply(tile, backend=backend)
+
+    def restrict_cols(self, idx):
+        buckets, signs = self.buckets[idx], self.signs[idx]
+        return CountSketch(
+            buckets=buckets, signs=signs, d=self.d, m=buckets.shape[0]
+        )
+
     def as_dense(self):
         S = jnp.zeros((self.d, self.m), self.signs.dtype)
         return S.at[self.buckets, jnp.arange(self.m)].set(self.signs)
@@ -372,6 +485,18 @@ class SparseSignSketch(_OperatorApply):
         B = B / jnp.sqrt(jnp.asarray(self.k, A2.dtype))
         return _maybe_squeeze(B, vec)
 
+    def apply_rows(self, tile, row_offset: int, *, backend: str = "auto"):
+        t = tile.shape[0]
+        return self.restrict_cols(
+            slice(row_offset, row_offset + t)
+        ).apply(tile, backend=backend)
+
+    def restrict_cols(self, idx):
+        buckets, signs = self.buckets[:, idx], self.signs[:, idx]
+        return SparseSignSketch(
+            buckets=buckets, signs=signs, d=self.d, m=buckets.shape[1], k=self.k
+        )
+
     def as_dense(self):
         S = jnp.zeros((self.d, self.m), self.signs.dtype)
         cols = jnp.broadcast_to(jnp.arange(self.m), (self.k, self.m))
@@ -420,6 +545,18 @@ class UniformSparseSketch(_OperatorApply):
         contrib = self.values[:, None].astype(A2.dtype) * A2
         B = jax.ops.segment_sum(contrib, self.buckets, num_segments=self.d)
         return _maybe_squeeze(B, vec)
+
+    def apply_rows(self, tile, row_offset: int, *, backend: str = "auto"):
+        t = tile.shape[0]
+        return self.restrict_cols(
+            slice(row_offset, row_offset + t)
+        ).apply(tile, backend=backend)
+
+    def restrict_cols(self, idx):
+        buckets, values = self.buckets[idx], self.values[idx]
+        return UniformSparseSketch(
+            buckets=buckets, values=values, d=self.d, m=buckets.shape[0]
+        )
 
     def as_dense(self):
         S = jnp.zeros((self.d, self.m), self.values.dtype)

@@ -20,6 +20,7 @@ from .countsketch import countsketch_apply, countsketch_ref
 from .sketch_matmul import (
     fused_gaussian_ref,
     fused_gaussian_sketch,
+    gaussian_cols_ref,
     gaussian_matrix_ref,
     sketch_matmul,
     sketch_matmul_ref,
@@ -31,6 +32,7 @@ __all__ = [
     "countsketch_ref",
     "fused_gaussian_ref",
     "fused_gaussian_sketch",
+    "gaussian_cols_ref",
     "gaussian_matrix_ref",
     "sketch_matmul",
     "sketch_matmul_ref",

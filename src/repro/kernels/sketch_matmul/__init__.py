@@ -1,10 +1,16 @@
 from .ops import fused_gaussian_sketch, sketch_matmul
-from .ref import fused_gaussian_ref, gaussian_matrix_ref, sketch_matmul_ref
+from .ref import (
+    fused_gaussian_ref,
+    gaussian_cols_ref,
+    gaussian_matrix_ref,
+    sketch_matmul_ref,
+)
 
 __all__ = [
     "fused_gaussian_sketch",
     "sketch_matmul",
     "fused_gaussian_ref",
+    "gaussian_cols_ref",
     "gaussian_matrix_ref",
     "sketch_matmul_ref",
 ]

@@ -1,0 +1,52 @@
+"""Streaming sketch engine: out-of-core least squares, one row tile at a time.
+
+The in-memory solvers in ``repro.core`` assume A fits on the device — the
+one regime sketching wins biggest (m·n beyond memory) was unreachable.
+This package removes that assumption:
+
+- ``sources``    — the :class:`RowSource` protocol: re-iterable
+  ``(row_offset, tile)`` streams over in-memory arrays, callbacks,
+  generators, memory-mapped ``.npy`` files and multi-host shard lists.
+- ``accumulate`` — mergeable per-kind :class:`SketchAccumulator` partial
+  sketches: scatter kinds fold tiles into the (s, n) state bit-for-bit
+  equal to the monolithic apply; SRHT buffers D-signed rows and runs the
+  Hadamard transform once at finalize; partial sketches from disjoint
+  tiles/hosts tree-reduce via ``merge`` (``sharded_sketch`` is the
+  shard_map + psum collective form).
+- ``solve``      — two-pass drivers: pass 1 streams the sketch (b rides
+  along as an extra column), pass 2 re-streams tiles for blocked
+  ``A@v`` / ``Aᵀ@u`` products inside preconditioned LSQR (``"saa"``) or
+  forward-stable iterative sketching (``"iterative"``), plus the true
+  single-pass ``"sketch_and_solve"``.  :func:`stream_lstsq` is the
+  driver; :class:`StreamingSolver` the amortizing session.
+
+Same key ⇒ bit-identical S to the in-memory solvers, so streamed results
+match ``repro.core.lstsq`` on the materialized A to machine precision.
+"""
+from . import accumulate, solve, sources
+from .accumulate import (
+    SketchAccumulator,
+    accumulate_source,
+    make_accumulator,
+    merge_all,
+    sharded_sketch,
+)
+from .solve import STREAM_METHODS, StreamingSolver, stream_lstsq, stream_sketch
+from .sources import (
+    ArraySource,
+    CallbackSource,
+    GeneratorSource,
+    MemmapSource,
+    RowSource,
+    ShardedSource,
+    as_source,
+)
+
+__all__ = [
+    "accumulate", "solve", "sources",
+    "SketchAccumulator", "accumulate_source", "make_accumulator",
+    "merge_all", "sharded_sketch",
+    "STREAM_METHODS", "StreamingSolver", "stream_lstsq", "stream_sketch",
+    "ArraySource", "CallbackSource", "GeneratorSource", "MemmapSource",
+    "RowSource", "ShardedSource", "as_source",
+]

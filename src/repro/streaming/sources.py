@@ -1,0 +1,292 @@
+"""Row sources — the input protocol of the streaming sketch engine.
+
+A :class:`RowSource` is a *re-iterable* stream of ``(row_offset, tile)``
+chunks that together cover the rows of a conceptually (m, n) data matrix A
+that is never materialized in one piece.  ``tiles()`` must yield the tiles
+in ascending, contiguous, non-overlapping row order (offset 0 first) and
+must be callable any number of times — the two-pass solvers in
+``repro.streaming.solve`` stream once to build the sketch and then
+re-stream per iteration for the tiled ``A@v`` / ``Aᵀ@u`` products.
+
+Concrete sources:
+
+- :class:`ArraySource`    — an in-memory array, sliced into row tiles
+  (the testing/benchmark source; also what plain arrays coerce to).
+- :class:`CallbackSource` — ``fn(offset, length) -> tile`` random-access
+  producer (a database range query, an object-store read, a feature
+  transformer applied on the fly).
+- :class:`GeneratorSource`— a zero-argument factory returning a fresh
+  iterable of row tiles (for producers that are naturally sequential);
+  the factory is re-invoked per pass, which is what makes a one-shot
+  generator protocol re-streamable.
+- :class:`MemmapSource`   — a memory-mapped ``.npy`` file; tiles are read
+  through ``numpy.memmap`` so at most ``tile_rows`` rows are resident.
+- :class:`ShardedSource`  — an ordered list of per-shard sources with
+  global row offsets (multi-host ingest); each shard can be accumulated
+  independently and the partial sketches merged associatively
+  (``repro.streaming.accumulate``).
+
+``as_source`` coerces ``RowSource | jax.Array | numpy array | .npy path``
+into the protocol and is called at the top of every streaming driver.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Iterable, Iterator, Sequence
+
+import jax
+import numpy as np
+
+__all__ = [
+    "RowSource",
+    "ArraySource",
+    "CallbackSource",
+    "GeneratorSource",
+    "MemmapSource",
+    "ShardedSource",
+    "as_source",
+    "DEFAULT_TILE_ROWS",
+]
+
+DEFAULT_TILE_ROWS = 8192
+
+
+class RowSource:
+    """Protocol base: a re-streamable row-tile view of an (m, n) matrix."""
+
+    shape: tuple[int, int]
+    dtype: np.dtype
+
+    def tiles(self) -> Iterator[tuple[int, jax.Array]]:
+        """Yield ``(row_offset, tile)`` in ascending contiguous order,
+        covering every row exactly once.  ``row_offset`` is a Python int
+        (tile boundaries are host-side loop state); ``tile`` is a
+        ``(t, n)`` array-like with 1 ≤ t ≤ ``tile_rows``."""
+        raise NotImplementedError
+
+    @property
+    def tile_rows(self) -> int:
+        return DEFAULT_TILE_ROWS
+
+    @property
+    def num_tiles(self) -> int:
+        return -(-self.shape[0] // self.tile_rows)
+
+    def __repr__(self):
+        m, n = self.shape
+        return (
+            f"{type(self).__name__}(shape=({m}, {n}), "
+            f"tile_rows={self.tile_rows})"
+        )
+
+
+def _check_tile_rows(tile_rows: int) -> int:
+    tile_rows = int(tile_rows)
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    return tile_rows
+
+
+class ArraySource(RowSource):
+    """Row tiles sliced from an in-memory (m, n) array.
+
+    The degenerate source: nothing is out-of-core, but it gives every
+    consumer one code path and is how the equivalence tests drive the
+    accumulators over arbitrary tilings (``boundaries=`` pins an explicit
+    uneven tiling).
+    """
+
+    def __init__(self, A, tile_rows: int = DEFAULT_TILE_ROWS, *,
+                 boundaries: Sequence[int] | None = None):
+        if A.ndim != 2:
+            raise ValueError(f"need a 2-D matrix, got shape {A.shape}")
+        self.A = A
+        self.shape = tuple(A.shape)
+        self.dtype = A.dtype
+        self._tile_rows = _check_tile_rows(tile_rows)
+        if boundaries is not None:
+            boundaries = sorted(set(int(b) for b in boundaries) | {0, A.shape[0]})
+            if boundaries[0] < 0 or boundaries[-1] > A.shape[0]:
+                raise ValueError(f"boundaries out of range: {boundaries}")
+            self._offsets = boundaries
+            self._tile_rows = max(
+                b - a for a, b in zip(boundaries[:-1], boundaries[1:])
+            )
+        else:
+            self._offsets = list(range(0, A.shape[0], self._tile_rows))
+            self._offsets.append(A.shape[0])
+
+    @property
+    def tile_rows(self) -> int:
+        return self._tile_rows
+
+    @property
+    def num_tiles(self) -> int:
+        return len(self._offsets) - 1
+
+    def tiles(self):
+        for a, b in zip(self._offsets[:-1], self._offsets[1:]):
+            yield a, self.A[a:b]
+
+
+class CallbackSource(RowSource):
+    """``fn(offset, length) -> (length, n) tile`` random-access producer."""
+
+    def __init__(self, fn: Callable, shape: tuple[int, int], dtype,
+                 tile_rows: int = DEFAULT_TILE_ROWS):
+        self.fn = fn
+        self.shape = (int(shape[0]), int(shape[1]))
+        self.dtype = np.dtype(dtype)
+        self._tile_rows = _check_tile_rows(tile_rows)
+
+    @property
+    def tile_rows(self) -> int:
+        return self._tile_rows
+
+    def tiles(self):
+        m, n = self.shape
+        for o in range(0, m, self._tile_rows):
+            t = min(self._tile_rows, m - o)
+            tile = self.fn(o, t)
+            if tuple(tile.shape) != (t, n):
+                raise ValueError(
+                    f"callback returned shape {tuple(tile.shape)} for "
+                    f"(offset={o}, length={t}); expected ({t}, {n})"
+                )
+            yield o, tile
+
+
+class GeneratorSource(RowSource):
+    """A zero-arg ``factory()`` returning a fresh iterable of row tiles.
+
+    The factory indirection is what makes sequential producers (file
+    readers, network streams) usable by the TWO-pass solvers: each pass
+    calls ``factory()`` again.  Offsets are assigned by running count and
+    validated against ``shape`` as the stream is consumed.
+    """
+
+    def __init__(self, factory: Callable[[], Iterable], shape: tuple[int, int],
+                 dtype, tile_rows: int = DEFAULT_TILE_ROWS):
+        self.factory = factory
+        self.shape = (int(shape[0]), int(shape[1]))
+        self.dtype = np.dtype(dtype)
+        self._tile_rows = _check_tile_rows(tile_rows)
+
+    @property
+    def tile_rows(self) -> int:
+        return self._tile_rows
+
+    def tiles(self):
+        m, n = self.shape
+        off = 0
+        for tile in self.factory():
+            if tile.ndim != 2 or tile.shape[1] != n:
+                raise ValueError(
+                    f"generator tile has shape {tuple(tile.shape)}; "
+                    f"expected (t, {n})"
+                )
+            if off + tile.shape[0] > m:
+                raise ValueError(
+                    f"generator produced more than m={m} rows"
+                )
+            yield off, tile
+            off += tile.shape[0]
+        if off != m:
+            raise ValueError(f"generator covered {off} of m={m} rows")
+
+
+class MemmapSource(RowSource):
+    """Row tiles read through a memory-mapped ``.npy`` file.
+
+    ``np.load(mmap_mode="r")`` keeps A on disk; each ``tiles()`` step
+    materializes only the current ``(tile_rows, n)`` window, so peak
+    data-matrix memory is the tile budget, not m·n.  This is the
+    out-of-core workhorse source (see ``examples/streaming_lstsq.py``).
+    """
+
+    def __init__(self, path, tile_rows: int = DEFAULT_TILE_ROWS):
+        self.path = os.fspath(path)
+        mm = np.load(self.path, mmap_mode="r")
+        if mm.ndim != 2:
+            raise ValueError(f"{self.path}: need a 2-D array, got {mm.shape}")
+        self.shape = tuple(mm.shape)
+        self.dtype = mm.dtype
+        self._tile_rows = _check_tile_rows(tile_rows)
+        del mm  # keep no live map between passes
+
+    @property
+    def tile_rows(self) -> int:
+        return self._tile_rows
+
+    def tiles(self):
+        mm = np.load(self.path, mmap_mode="r")
+        m, n = self.shape
+        for o in range(0, m, self._tile_rows):
+            t = min(self._tile_rows, m - o)
+            # np.array forces the read of exactly this window; the memmap
+            # pages can be dropped by the OS as soon as we move on.
+            yield o, np.array(mm[o : o + t])
+
+
+class ShardedSource(RowSource):
+    """Ordered concatenation of per-shard sources (multi-host ingest).
+
+    ``tiles()`` walks the shards in row order with globalized offsets, so
+    a ``ShardedSource`` drops into any single-host driver unchanged.  For
+    genuinely parallel ingest, accumulate each ``shards[i]`` independently
+    (offset by ``shard_offsets[i]`` — see ``accumulate.partial_sketch``)
+    and tree-merge the partial accumulators; the merge is associative.
+    """
+
+    def __init__(self, shards: Sequence[RowSource]):
+        shards = [as_source(s) for s in shards]
+        if not shards:
+            raise ValueError("need at least one shard")
+        n = shards[0].shape[1]
+        if any(s.shape[1] != n for s in shards):
+            raise ValueError(
+                f"all shards need {n} columns, got "
+                f"{[s.shape for s in shards]}"
+            )
+        self.shards = shards
+        self.shard_offsets = []
+        m = 0
+        for s in shards:
+            self.shard_offsets.append(m)
+            m += s.shape[0]
+        self.shape = (m, n)
+        self.dtype = shards[0].dtype
+
+    @property
+    def tile_rows(self) -> int:
+        return max(s.tile_rows for s in self.shards)
+
+    def tiles(self):
+        for base, shard in zip(self.shard_offsets, self.shards):
+            for o, tile in shard.tiles():
+                yield base + o, tile
+
+
+def as_source(A, tile_rows: int | None = None) -> RowSource:
+    """Coerce ``RowSource | array | .npy path`` into the protocol.
+
+    Idempotent on sources (``tile_rows`` must then be None — a source owns
+    its tiling).  Arrays (jax or numpy) become :class:`ArraySource`,
+    ``.npy`` paths become :class:`MemmapSource`.
+    """
+    if isinstance(A, RowSource):
+        if tile_rows is not None:
+            raise ValueError(
+                "tile_rows cannot override an existing RowSource's tiling; "
+                "construct the source with the tiling you want"
+            )
+        return A
+    tile_rows = DEFAULT_TILE_ROWS if tile_rows is None else tile_rows
+    if isinstance(A, (str, os.PathLike)):
+        return MemmapSource(A, tile_rows)
+    if isinstance(A, (jax.Array, np.ndarray)):
+        return ArraySource(A, tile_rows)
+    raise TypeError(
+        f"cannot make a RowSource from {type(A).__name__}; pass a RowSource, "
+        "a 2-D array, or a path to a .npy file"
+    )

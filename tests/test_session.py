@@ -130,6 +130,41 @@ def test_update_rows_srht_resketches_with_same_s(prob):
     assert relerr(solver.solve(b).x, qr_solve(A_new, b)) < 1e-8
 
 
+@pytest.mark.parametrize(
+    "kind,sketches_after_update",
+    [
+        ("countsketch", 1),
+        ("sparse_sign", 1),
+        ("uniform_sparse", 1),
+        ("gaussian", 1),
+        ("uniform_dense", 1),
+        ("srht", 2),  # the ONE kind without restrict_cols: full re-sketch
+    ],
+)
+def test_update_rows_stats_pinned_per_kind(prob, kind, sketches_after_update):
+    """Regression pin for the documented asymmetry: every kind with a
+    column restriction (``op.restrict_cols``) refreshes the factor via the
+    O(|idx|·n) delta-sketch (``sketches`` stays 1); SRHT — whose columns
+    couple through the Hadamard transform — is the only full re-sketch
+    (``sketches`` → 2, still no new operator draw).  If a kind silently
+    loses its restriction (or SRHT silently gains a wrong one), these
+    counters move."""
+    A, b, _ = prob
+    solver = SketchedSolver(A, jax.random.key(11), sketch=kind)
+    assert solver.stats == {"sketches": 1, "qr_factorizations": 1, "solves": 0}
+    idx = jnp.array([2, 71, M_ROWS - 3])
+    rows = jax.random.normal(jax.random.key(12), (3, N_COLS))
+    solver.update_rows(idx, rows)
+    assert solver.stats["sketches"] == sketches_after_update
+    assert solver.stats["qr_factorizations"] == 2  # always just the small QR
+    # either path must land on the sketch of the UPDATED matrix
+    A_new = A.at[idx].set(rows)
+    assert jnp.allclose(
+        solver._B, solver._sketch_op.apply(A_new), atol=1e-9
+    )
+    assert relerr(solver.solve(b).x, qr_solve(A_new, b)) < 1e-8
+
+
 def test_update_rows_validation(prob):
     A, b, _ = prob
     solver = SketchedSolver(A, jax.random.key(9))
