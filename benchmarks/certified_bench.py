@@ -1,0 +1,101 @@
+"""Certified-accuracy benchmark — the BENCH_5.json trajectory cell.
+
+Runs every ``lstsq`` method (plus the adaptive ``accuracy="certified"``
+tier) on the §5.1 ill-conditioned problem and records, per method:
+
+- wall time (median of 3, jit-warmed),
+- true forward error against QR ground truth,
+- the posterior certified error bound / distortion / cond estimate
+  (computed with ``repro.core.certify`` against a shared reference
+  factor, so the certified-error column exists for EVERY method, not
+  just the certified tier).
+
+Rows print in the scaffold's CSV contract and are returned as dicts for
+``benchmarks/run.py --json`` to dump machine-readably — the file this PR
+starts tracking the perf trajectory with.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SketchedFactor, generate_problem, lstsq, qr_solve
+from repro.core import certify as certify_lib
+
+from .common import emit, time_fn
+
+METHODS = ("direct", "lsqr", "saa", "sap", "iterative", "fossils")
+
+
+def run(m=8192, n=64, cond=1e10, beta=1e-10, seed=0):
+    """Returns the list of row dicts (also emitted as CSV)."""
+    prob = generate_problem(jax.random.key(seed), m, n, cond=cond, beta=beta)
+    A, b = prob.A, prob.b
+    x_qr = qr_solve(A, b)
+    xnorm = float(jnp.linalg.norm(x_qr))
+
+    # One reference factor certifies every method's answer identically
+    # (4n rows — the default regime the certificate's ε̂ is probed at).
+    factor, _ = SketchedFactor.build(A, jax.random.key(seed + 7))
+    probe_key = jax.random.key(seed + 8)
+    eps_hat = float(
+        certify_lib.probe_distortion(A, factor, probe_key, n_probes=8)
+    )
+    _, _, cond_R = certify_lib.factor_spectrum(factor)
+
+    rows = []
+
+    def record(name, seconds, res, escalations=None):
+        err = float(jnp.linalg.norm(res.x - x_qr)) / max(xnorm, 1e-300)
+        cert = res.certificate
+        if cert is None:
+            _, _, bound = certify_lib.error_bound(A, b, res.x, factor, eps_hat)
+            rel_bound = float(bound) / max(float(jnp.linalg.norm(res.x)), 1e-300)
+            distortion = eps_hat
+        else:
+            rel_bound = float(cert.rel_error_bound)
+            distortion = float(cert.distortion)
+            escalations = int(cert.escalations)
+        row = {
+            "name": name,
+            "m": m,
+            "n": n,
+            "cond": cond,
+            "beta": beta,
+            "wall_s": seconds,
+            "forward_relerr_vs_qr": err,
+            "certified_rel_bound": rel_bound,
+            "certified_distortion": distortion,
+            "cond_estimate": float(cond_R),
+            "escalations": escalations,
+            "itn": int(jnp.ravel(res.itn)[0]),
+        }
+        rows.append(row)
+        emit(
+            f"certified/{name}",
+            seconds,
+            f"relerr={err:.3e};bound={rel_bound:.3e};eps={distortion:.2f}",
+        )
+
+    key = jax.random.key(seed + 1)
+    for method in METHODS:
+        def solve(method=method):
+            return lstsq(A, b, key, method=method)
+
+        seconds = time_fn(solve)
+        record(method, seconds, solve())
+
+    def solve_certified():
+        return lstsq(A, b, key, accuracy="certified")
+
+    seconds = time_fn(solve_certified)
+    record("certified_auto", seconds, solve_certified())
+
+    # the adversarial configuration: a too-small initial sketch forces
+    # the escalation ladder to do its job (rows show the recovery cost)
+    def solve_escalating():
+        return lstsq(A, b, key, accuracy="certified", sketch_size=n + 2)
+
+    seconds = time_fn(solve_escalating)
+    record("certified_escalating", seconds, solve_escalating())
+    return rows

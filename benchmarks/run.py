@@ -6,12 +6,18 @@
   kernels   Pallas kernel micro-benches (interpret mode + derived TPU terms)
   dist      distributed sketched LSQ (shard_map) + comm accounting
   stream    streaming engine: tiles/sec + peak-memory proxy vs monolithic
+  certified per-method wall time + certified-error columns (BENCH_5.json)
   roofline  per-cell roofline terms from the dry-run JSONs
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
-sizes (slow on 1 CPU core).
+sizes (slow on 1 CPU core).  ``--json [PATH]`` additionally dumps the
+``certified`` cell's rows (per-method wall time, forward error vs QR and
+the posterior certified-error columns) as machine-readable JSON —
+``BENCH_5.json`` by default — so the perf/accuracy trajectory is tracked
+from PR 5 on.
 """
 import argparse
+import json
 import sys
 
 
@@ -23,12 +29,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,sketch,kernels,dist,stream,"
-                         "roofline")
+                         "certified,roofline")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--json", nargs="?", const="BENCH_5.json", default=None,
+                    metavar="PATH",
+                    help="write the certified cell's rows as JSON "
+                         "(default path: BENCH_5.json; implies the "
+                         "certified cell runs)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
+        if name == "certified" and args.json is not None:
+            return True
         return only is None or name in only
 
     print("name,us_per_call,derived")
@@ -51,6 +64,19 @@ def main() -> None:
     if want("stream"):
         from . import streaming_bench
         streaming_bench.run(m=65536 if args.full else 16384)
+    if want("certified"):
+        from . import certified_bench
+        rows = certified_bench.run(m=20000 if args.full else 8192,
+                                   n=100 if args.full else 64)
+        if args.json is not None:
+            payload = {
+                "bench": "certified_lstsq",
+                "schema": 1,
+                "rows": rows,
+            }
+            with open(args.json, "w") as fh:
+                json.dump(payload, fh, indent=2)
+            print(f"wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
     if want("roofline"):
         from . import roofline
         roofline.run()

@@ -1,6 +1,8 @@
 """The paper's primary contribution: sketch-and-solve least squares.
 
 - ``sketch``      — the six sketching operators (paper §2)
+- ``certify``     — posterior certification: distortion probe, cond(R),
+                    forward-error bound, ``Certificate`` (trust layer)
 - ``backend``     — sketch-apply backend policy (reference jnp vs Pallas)
 - ``linop``       — matrix-free ``LinearOperator`` input protocol
                     (dense / BCOO-sparse / Tikhonov / custom)
@@ -24,6 +26,7 @@ Out-of-core inputs live in the sibling ``repro.streaming`` package
 """
 from . import (
     backend,
+    certify,
     direct,
     distributed,
     iterative,
@@ -36,9 +39,21 @@ from . import (
     sketch,
 )
 from .backend import BACKENDS, ResolvedBackend, resolve as resolve_backend
+from .certify import (
+    Certificate,
+    certify as certify_solution,
+    error_bound,
+    probe_distortion,
+)
 from .direct import normal_equations, qr_solve, svd_solve
 from .distributed import DistributedLSQResult, sketched_lstsq
-from .iterative import damping_momentum, fossils, iterative_sketching
+from .iterative import (
+    damping_momentum,
+    fossils,
+    fossils_refine,
+    heavy_ball_refine,
+    iterative_sketching,
+)
 from .linop import (
     CustomOperator,
     DenseOperator,
@@ -49,33 +64,43 @@ from .linop import (
     estimate_2norm,
 )
 from .lsqr import LSQRResult, lsqr as lsqr_solve, lsqr_dense, lsqr_operator
-from .lstsq import ACCURACIES, METHODS, lstsq, select_method
+from .lstsq import ACCURACIES, CERTIFIED_LADDER, METHODS, TOL_SUPPORT, lstsq, select_method
 from .precond import SketchedFactor, default_sketch_size, distortion
 from .problems import Problem, generate as generate_problem
 from .result import SolveResult
 from .saa import SAAResult, saa_sas, saa_sas_batch
 from .sap import sap_sas
 from .session import SketchedSolver
-from .sketch import AugmentedSketch, SKETCH_KINDS, fwht, sample as sample_sketch
+from .sketch import (
+    AugmentedSketch,
+    SKETCH_KINDS,
+    StackedSketch,
+    fwht,
+    sample as sample_sketch,
+)
 
 __all__ = [
-    "backend", "direct", "distributed", "iterative", "linop", "lsqr",
-    "precond", "problems", "sap", "session", "sketch",
+    "backend", "certify", "direct", "distributed", "iterative", "linop",
+    "lsqr", "precond", "problems", "sap", "session", "sketch",
     "BACKENDS", "ResolvedBackend", "resolve_backend",
+    "Certificate", "certify_solution", "error_bound", "probe_distortion",
     "normal_equations", "qr_solve", "svd_solve",
     "DistributedLSQResult", "sketched_lstsq",
-    "damping_momentum", "fossils", "iterative_sketching",
+    "damping_momentum", "fossils", "fossils_refine", "heavy_ball_refine",
+    "iterative_sketching",
     "LinearOperator", "DenseOperator", "SparseOperator",
     "TikhonovAugmented", "CustomOperator", "as_operator", "estimate_2norm",
     "LSQRResult", "lsqr_solve", "lsqr_dense", "lsqr_operator",
-    "ACCURACIES", "METHODS", "lstsq", "select_method",
+    "ACCURACIES", "CERTIFIED_LADDER", "METHODS", "TOL_SUPPORT", "lstsq",
+    "select_method",
     "SketchedFactor", "default_sketch_size", "distortion",
     "Problem", "generate_problem",
     "SolveResult",
     "SAAResult", "saa_sas", "saa_sas_batch",
     "sap_sas",
     "SketchedSolver",
-    "AugmentedSketch", "SKETCH_KINDS", "fwht", "sample_sketch",
+    "AugmentedSketch", "SKETCH_KINDS", "StackedSketch", "fwht",
+    "sample_sketch",
     "stream_lstsq", "StreamingSolver",
 ]
 

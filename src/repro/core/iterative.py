@@ -43,7 +43,13 @@ from .backend import resolve_backend_arg
 from .precond import SketchedFactor, default_sketch_size, distortion
 from .result import SolveResult
 
-__all__ = ["iterative_sketching", "fossils", "damping_momentum"]
+__all__ = [
+    "iterative_sketching",
+    "fossils",
+    "damping_momentum",
+    "heavy_ball_refine",
+    "fossils_refine",
+]
 
 
 def damping_momentum(sketch_size: int, n: int) -> tuple[float, float]:
@@ -110,63 +116,35 @@ class _IterState(NamedTuple):
     rhist: jax.Array  # (iter_lim,) or (0,)
 
 
-@resolve_backend_arg
 @partial(
     jax.jit,
-    static_argnames=(
-        "sketch", "sketch_size", "damping", "momentum", "atol", "btol",
-        "steptol", "iter_lim", "backend", "history",
-    ),
+    static_argnames=("atol", "btol", "steptol", "iter_lim", "history"),
 )
-def iterative_sketching(
+def heavy_ball_refine(
     A,
     b: jax.Array,
-    key: jax.Array,
+    factor: SketchedFactor,
+    x0: jax.Array,
+    alpha,
+    beta,
     *,
-    sketch: str = "clarkson_woodruff",
-    sketch_size: int | None = None,
-    damping: float | None = None,
-    momentum: float | None = None,
     atol: float = 0.0,
     btol: float = 0.0,
-    steptol: float | None = None,
+    steptol: float,
     iter_lim: int = 100,
-    backend: str = "auto",
     history: bool = False,
 ) -> SolveResult:
-    """Iterative sketching with damping + momentum (forward stable).
+    """The damped/momentum iteration of :func:`iterative_sketching` against
+    a PREBUILT factor.
 
-    x₀ = sketch-and-solve; then
-    x_{i+1} = x_i + α (RᵀR)⁻¹ Aᵀ(b − A x_i) + β (x_i − x_{i−1}).
-
-    Stops on the step floor (istop=8) — either three consecutive relative
-    steps below ``steptol`` or the step-norm stagnation test (no new
-    minimum for ``_STALL_LIMIT`` iterations; the gradient is computed from
-    the TRUE residual each iteration, so stagnation means the numerical
-    floor, not sketch bias) — on residual tolerances (istop=1/2, SciPy
-    semantics), or at ``iter_lim`` (istop=7).
-
-    ``A`` may be a dense array, a BCOO sparse matrix or a
-    ``repro.core.linop`` operator — only products with A are ever taken,
-    so the solve is fully matrix-free.
+    Factoring this out of the one-shot solver lets the certified adaptive
+    driver (``repro.core.lstsq``) re-run the refinement after escalating an
+    existing factor — the sketch is extended, never redrawn, and only this
+    loop repeats.  Same stopping semantics as ``iterative_sketching``.
     """
     A = linop.as_operator(A)
-    m, n = A.shape
-    s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
-    if steptol is None:
-        steptol = 32 * float(jnp.finfo(A.dtype).eps)
-    alpha, beta = damping_momentum(s, n)
-    if damping is not None:
-        alpha = damping
-    if momentum is not None:
-        beta = momentum
     dtype = A.dtype
     tiny = jnp.finfo(dtype).tiny
-
-    factor, op = SketchedFactor.build(
-        A, key, sketch=sketch, sketch_size=s, backend=backend
-    )
-    x0 = factor.sketch_and_solve(op.apply(b, backend=backend))
     bnorm = jnp.linalg.norm(b)
     anorm = jnp.linalg.norm(factor.R)  # ‖R‖_F = ‖SA‖_F ≈ ‖A‖_F
 
@@ -238,6 +216,68 @@ def iterative_sketching(
     )
 
 
+@resolve_backend_arg
+@partial(
+    jax.jit,
+    static_argnames=(
+        "sketch", "sketch_size", "damping", "momentum", "atol", "btol",
+        "steptol", "iter_lim", "backend", "history",
+    ),
+)
+def iterative_sketching(
+    A,
+    b: jax.Array,
+    key: jax.Array,
+    *,
+    sketch: str = "clarkson_woodruff",
+    sketch_size: int | None = None,
+    damping: float | None = None,
+    momentum: float | None = None,
+    atol: float = 0.0,
+    btol: float = 0.0,
+    steptol: float | None = None,
+    iter_lim: int = 100,
+    backend: str = "auto",
+    history: bool = False,
+) -> SolveResult:
+    """Iterative sketching with damping + momentum (forward stable).
+
+    x₀ = sketch-and-solve; then
+    x_{i+1} = x_i + α (RᵀR)⁻¹ Aᵀ(b − A x_i) + β (x_i − x_{i−1}).
+
+    Stops on the step floor (istop=8) — either three consecutive relative
+    steps below ``steptol`` or the step-norm stagnation test (no new
+    minimum for ``_STALL_LIMIT`` iterations; the gradient is computed from
+    the TRUE residual each iteration, so stagnation means the numerical
+    floor, not sketch bias) — on residual tolerances (istop=1/2, SciPy
+    semantics), or at ``iter_lim`` (istop=7).
+
+    ``A`` may be a dense array, a BCOO sparse matrix or a
+    ``repro.core.linop`` operator — only products with A are ever taken,
+    so the solve is fully matrix-free.
+    """
+    A = linop.as_operator(A)
+    m, n = A.shape
+    s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
+    if steptol is None:
+        steptol = 32 * float(jnp.finfo(A.dtype).eps)
+    alpha, beta = damping_momentum(s, n)
+    if damping is not None:
+        alpha = damping
+    if momentum is not None:
+        beta = momentum
+
+    factor, op = SketchedFactor.build(
+        A, key, sketch=sketch, sketch_size=s, backend=backend
+    )
+    x0 = factor.sketch_and_solve(op.apply(b, backend=backend))
+    return heavy_ball_refine(
+        A, b, factor, x0, alpha, beta,
+        atol=atol, btol=btol, steptol=steptol, iter_lim=iter_lim,
+        history=history,
+    )
+
+
 class _InnerState(NamedTuple):
     itn: jax.Array
     done: jax.Array  # bool: step floor reached
@@ -286,6 +326,80 @@ def _whitened_heavy_ball(
 
     final = lax.while_loop(cond, body, init)
     return final.z, final.itn, final.done
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "refine_steps", "inner_iter_lim", "steptol", "backend", "history",
+    ),
+)
+def fossils_refine(
+    A,
+    b: jax.Array,
+    factor: SketchedFactor,
+    op,
+    x0: jax.Array,
+    alpha,
+    beta,
+    *,
+    refine_steps: int = 2,
+    inner_iter_lim: int,
+    steptol: float,
+    backend: str = "auto",
+    history: bool = False,
+) -> SolveResult:
+    """The FOSSILS refinement passes against a PREBUILT (factor, op) pair.
+
+    The factor-reusing core of :func:`fossils`, exposed for the certified
+    adaptive driver: after a sketch escalation the same refinement re-runs
+    on the extended factor, warm-starting each residual solve with the
+    SAME (extended) operator — no fresh draw, no full re-sketch.
+    """
+    A = linop.as_operator(A)
+    x = x0
+    itn_total = jnp.asarray(0, jnp.int32)
+    # refine_steps=0 means the raw sketch-and-solve estimate goes out
+    # unrefined — never certify that as converged-to-floor.
+    hit_floor = jnp.asarray(refine_steps > 0)
+    rhist = []
+    for _ in range(refine_steps):  # static unroll (refine_steps is tiny)
+        r = b - A.matvec(x)
+        rhist.append(jnp.linalg.norm(r))
+        z0 = factor.warm_start(op.apply(r, backend=backend))
+        z, itn, done = _whitened_heavy_ball(
+            factor, A, r, z0,
+            alpha=alpha, beta=beta, iter_lim=inner_iter_lim, steptol=steptol,
+        )
+        x = x + factor.precondition(z)
+        itn_total = itn_total + itn
+        hit_floor = hit_floor & done
+
+    r = b - A.matvec(x)
+    rnorm = jnp.linalg.norm(r)
+    rhist.append(rnorm)
+    g = A.rmatvec(r)
+
+    istop = jnp.where(hit_floor, 8, 7).astype(jnp.int32)
+    istop = jnp.where(jnp.linalg.norm(b) == 0, 0, istop)
+    return SolveResult(
+        x=x,
+        istop=istop,
+        itn=itn_total,
+        rnorm=rnorm,
+        arnorm=jnp.linalg.norm(g),
+        used_fallback=jnp.asarray(False),
+        history=jnp.stack(rhist) if history else None,
+    )
+
+
+def default_inner_iter_lim(beta: float, dtype=jnp.float64) -> int:
+    """FOSSILS inner-iteration budget: error contracts by ≈ √β per step;
+    budget to the numerical floor, with margin for the stall detector to
+    certify it (istop=8)."""
+    eps_mach = float(jnp.finfo(dtype).eps)
+    rate = max(math.sqrt(beta), 1e-3)
+    return min(int(math.log(eps_mach) / math.log(rate)) + 30, 500)
 
 
 @resolve_backend_arg
@@ -337,47 +451,14 @@ def fossils(
     if momentum is not None:
         beta = momentum
     if inner_iter_lim is None:
-        # Error contracts by ≈ √β per step; budget to the numerical floor,
-        # with margin for the stall detector to certify it (istop=8).
-        eps_mach = float(jnp.finfo(A.dtype).eps)
-        rate = max(math.sqrt(beta), 1e-3)
-        inner_iter_lim = min(int(math.log(eps_mach) / math.log(rate)) + 30, 500)
+        inner_iter_lim = default_inner_iter_lim(beta, A.dtype)
 
     factor, op = SketchedFactor.build(
         A, key, sketch=sketch, sketch_size=s, backend=backend
     )
-    x = factor.sketch_and_solve(op.apply(b, backend=backend))
-
-    itn_total = jnp.asarray(0, jnp.int32)
-    # refine_steps=0 means the raw sketch-and-solve estimate goes out
-    # unrefined — never certify that as converged-to-floor.
-    hit_floor = jnp.asarray(refine_steps > 0)
-    rhist = []
-    for _ in range(refine_steps):  # static unroll (refine_steps is tiny)
-        r = b - A.matvec(x)
-        rhist.append(jnp.linalg.norm(r))
-        z0 = factor.warm_start(op.apply(r, backend=backend))
-        z, itn, done = _whitened_heavy_ball(
-            factor, A, r, z0,
-            alpha=alpha, beta=beta, iter_lim=inner_iter_lim, steptol=steptol,
-        )
-        x = x + factor.precondition(z)
-        itn_total = itn_total + itn
-        hit_floor = hit_floor & done
-
-    r = b - A.matvec(x)
-    rnorm = jnp.linalg.norm(r)
-    rhist.append(rnorm)
-    g = A.rmatvec(r)
-
-    istop = jnp.where(hit_floor, 8, 7).astype(jnp.int32)
-    istop = jnp.where(jnp.linalg.norm(b) == 0, 0, istop)
-    return SolveResult(
-        x=x,
-        istop=istop,
-        itn=itn_total,
-        rnorm=rnorm,
-        arnorm=jnp.linalg.norm(g),
-        used_fallback=jnp.asarray(False),
-        history=jnp.stack(rhist) if history else None,
+    x0 = factor.sketch_and_solve(op.apply(b, backend=backend))
+    return fossils_refine(
+        A, b, factor, op, x0, alpha, beta,
+        refine_steps=refine_steps, inner_iter_lim=inner_iter_lim,
+        steptol=steptol, backend=backend, history=history,
     )

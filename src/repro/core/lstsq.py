@@ -34,7 +34,9 @@ A; ``method`` must then be one of its streaming methods (``"auto"``,
 
 Auto-selection (``method="auto"``):
 
-- problems too small or too square for sketching to pay off → ``direct``;
+- problems too small or too square for sketching to pay off → ``direct``
+  (nearly-square and underdetermined shapes, where no sketch can shrink
+  the row space, always land here / on ``lsqr``);
 - large and strongly overdetermined with a PRNG key → a sketched solver by
   ``accuracy``: ``"fast"`` → ``saa``, ``"balanced"`` (default) →
   ``iterative``, ``"high"`` → ``fossils``;
@@ -42,27 +44,62 @@ Auto-selection (``method="auto"``):
   path);
 - sparse / matrix-free inputs never select ``direct`` (it would densify
   A): with a key they go to the sketched iterative solvers, without one to
-  ``lsqr``.
+  ``lsqr``;
+- with ``reg=λ`` the regime tests run on the ORIGINAL data shape, not the
+  augmented ``(m + n, n)`` operator the solver ultimately sees (the
+  appended √λ·I rows used to inflate m and mis-classify near-boundary
+  ridge problems as sketchable).
+
+``accuracy="certified"`` is the fourth, adaptive tier: solve, then
+*certify* the answer with the posterior estimators of
+``repro.core.certify`` (embedding-distortion probe, cond(R), a forward
+error bound), and on a failed certificate escalate — append rows to the
+sketch (the stored B = SA is extended, never recomputed) and climb the
+method ladder saa → iterative → fossils → dense-QR fallback.  The result
+carries a ``certificate`` with the bound that was finally certified.
 
 The driver is a thin Python-level dispatch — every method underneath is its
 own jitted, backend-dispatched solver, so there is no extra trace or
 runtime cost over calling the solver directly.
+
+Tolerance forwarding is explicit: each method supports a documented
+subset of ``atol``/``btol``/``steptol``/``iter_lim`` (see
+``TOL_SUPPORT``).  Forcing a method while passing a knob it does not
+consume raises; under ``method="auto"`` unsupported knobs are dropped
+(the selected method may legitimately vary with shape).
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 
+from . import certify as certify_lib
 from . import linop
 from .direct import qr_solve
-from .iterative import fossils, iterative_sketching
+from .iterative import (
+    damping_momentum,
+    default_inner_iter_lim,
+    fossils,
+    fossils_refine,
+    heavy_ball_refine,
+    iterative_sketching,
+)
 from .lsqr import lsqr_operator
-from .precond import default_sketch_size
+from .precond import SketchedFactor, default_sketch_size
 from .result import SolveResult
-from .saa import saa_sas
+from .saa import _solve_with_factor, saa_sas
 from .sap import sap_sas
 
-__all__ = ["lstsq", "select_method", "stream_lstsq", "METHODS", "ACCURACIES"]
+__all__ = [
+    "lstsq",
+    "select_method",
+    "stream_lstsq",
+    "METHODS",
+    "ACCURACIES",
+    "TOL_SUPPORT",
+]
 
 
 def __getattr__(name):
@@ -75,7 +112,7 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 METHODS = ("direct", "lsqr", "saa", "sap", "iterative", "fossils")
-ACCURACIES = ("fast", "balanced", "high")
+ACCURACIES = ("fast", "balanced", "high", "certified")
 _ALIASES = {"iterative_sketching": "iterative", "qr": "direct"}
 
 # m·n² flops below which Householder QR is effectively free and sketching
@@ -83,6 +120,25 @@ _ALIASES = {"iterative_sketching": "iterative", "qr": "direct"}
 DIRECT_FLOP_CUTOFF = 1 << 26
 
 _SKETCHED_BY_ACCURACY = {"fast": "saa", "balanced": "iterative", "high": "fossils"}
+
+# Which tolerance knobs each method actually consumes (the explicit
+# forwarding audit): ``direct`` takes none (one exact factorization),
+# ``fossils`` controls its budget through refinement/inner-loop parameters
+# and only honours the step floor.  Forcing a method with a knob outside
+# its set raises; under auto-selection unsupported knobs are dropped.
+_TOL_KEYS = ("atol", "btol", "steptol", "iter_lim")
+TOL_SUPPORT = {
+    "direct": frozenset(),
+    "lsqr": frozenset(_TOL_KEYS),
+    "saa": frozenset(_TOL_KEYS),
+    "sap": frozenset(_TOL_KEYS),
+    "iterative": frozenset(_TOL_KEYS),
+    "fossils": frozenset({"steptol"}),
+}
+
+# The certified tier's escalation ladder: each failed certificate both
+# grows the sketch (appended rows, stored B reused) and climbs one rung.
+CERTIFIED_LADDER = ("saa", "iterative", "fossils", "direct")
 
 
 def select_method(
@@ -99,9 +155,20 @@ def select_method(
     ``matrix_free=True`` (sparse / operator inputs) rules out ``direct``:
     the iterative sketched solvers only take products with A, which is the
     whole point of those inputs.
+
+    For ridge problems callers must pass the ORIGINAL data shape, not the
+    augmented ``(m + n, n)`` one — ``lstsq(reg=λ)`` does so since the
+    regime tests would otherwise see an inflated m.  Nearly-square and
+    underdetermined shapes (where ``default_sketch_size`` clamps to
+    s = m and no embedding can shrink the row space) always fail the
+    regime test and route to ``direct``/``lsqr``.
     """
-    if accuracy not in ACCURACIES:
-        raise ValueError(f"unknown accuracy {accuracy!r}; have {ACCURACIES}")
+    if accuracy not in _SKETCHED_BY_ACCURACY:
+        raise ValueError(
+            f"select_method picks a single solver; accuracy must be one of "
+            f"{tuple(_SKETCHED_BY_ACCURACY)} (the 'certified' tier runs its "
+            f"own escalation ladder), got {accuracy!r}"
+        )
     s = sketch_size if sketch_size is not None else default_sketch_size(n, m)
     # The sketched solvers need the embedding to actually shrink the row
     # space: s rows must both dominate n and be a small fraction of m.
@@ -140,6 +207,115 @@ def _ridge_diagnostics(A, b, x, reg):
     return jnp.linalg.norm(r), jnp.linalg.norm(g)
 
 
+def _certified_lstsq(
+    A_in,
+    A_op,
+    b_solve,
+    key,
+    *,
+    sketch,
+    sketch_size,
+    backend,
+    tol,
+    history,
+    rtol,
+    n_probes,
+):
+    """The adaptive certified driver: solve → certify → escalate.
+
+    One factor is built at the initial sketch size; every escalation
+    APPENDS rows to it (``SketchedFactor.extend`` — only the new rows are
+    sketched, the stored B is reused bit-for-bit) and climbs one rung of
+    :data:`CERTIFIED_LADDER`.  Returns ``(result, method_name)`` for the
+    first certificate that passes, else the attempt with the smallest
+    posterior error bound (its certificate carries ``passed=False``).
+    """
+    m_data, n = A_in.shape
+    dtype = A_op.dtype
+    steptol = tol.get("steptol")
+    if steptol is None:
+        steptol = 32 * float(jnp.finfo(dtype).eps)
+    atol = tol.get("atol", 0.0)
+    btol = tol.get("btol", 0.0)
+    iter_lim = tol.get("iter_lim", 100)
+    dense_input = isinstance(A_in, linop.DenseOperator)
+
+    k_build, k_loop = jax.random.split(key)
+    s = (
+        sketch_size
+        if sketch_size is not None
+        else default_sketch_size(n, m_data)
+    )
+    factor, op, B = SketchedFactor.build_full(
+        A_op, k_build, sketch=sketch, sketch_size=s, backend=backend
+    )
+    escalations = 0
+    best = None  # (bound, result, method) of the best failed attempt
+
+    for rung, meth in enumerate(CERTIFIED_LADDER):
+        k_probe, k_ext = jax.random.split(jax.random.fold_in(k_loop, rung))
+        if meth == "direct":
+            if not dense_input:
+                # Sparse and matrix-free inputs stop at the fossils rung —
+                # the whole point of those input forms is that A is never
+                # densified (BCOO is technically materializable, but an
+                # 8 GB todense() is not a fallback).
+                break
+            res = _direct_result(
+                linop.ensure_dense(A_op, who="the certified QR fallback"),
+                b_solve,
+            )
+        elif meth == "saa":
+            c = op.apply(b_solve, backend=backend)
+            x, inner = _solve_with_factor(
+                A_op, b_solve, factor, c, materialize_y=dense_input,
+                atol=atol, btol=btol, iter_lim=iter_lim, steptol=steptol,
+                history=history,
+            )
+            res = inner._replace(x=x)
+        else:
+            alpha, beta = damping_momentum(s, n)
+            x0 = factor.sketch_and_solve(op.apply(b_solve, backend=backend))
+            if meth == "iterative":
+                res = heavy_ball_refine(
+                    A_op, b_solve, factor, x0, alpha, beta,
+                    atol=atol, btol=btol, steptol=steptol,
+                    iter_lim=iter_lim, history=history,
+                )
+            else:  # fossils
+                res = fossils_refine(
+                    A_op, b_solve, factor, op, x0, alpha, beta,
+                    inner_iter_lim=default_inner_iter_lim(beta, dtype),
+                    steptol=steptol, backend=backend, history=history,
+                )
+        cert = certify_lib.certify(
+            A_op, b_solve, res.x, factor, k_probe, n_probes=n_probes,
+            target=rtol, sketch_rows=s, escalations=escalations,
+        )
+        res = res._replace(certificate=cert)
+        if bool(cert.passed):
+            return res, meth
+        bound = float(cert.rel_error_bound)
+        if not math.isfinite(bound):
+            bound = math.inf
+        if best is None or bound < best[0]:
+            best = (bound, res, meth)
+        # Escalate before the next sketched rung: double the sketch by
+        # appending rows, capped at the data row count (beyond which a
+        # sketch embeds nothing an exact method wouldn't).
+        if rung + 1 < len(CERTIFIED_LADDER):
+            extra = min(s, max(m_data - s, 0))
+            if extra > 0 and CERTIFIED_LADDER[rung + 1] != "direct":
+                factor, op, B = factor.extend(
+                    A_op, op, k_ext, extra, B=B, backend=backend
+                )
+                s += extra
+                escalations += 1
+
+    _, res, meth = best
+    return res, meth
+
+
 def lstsq(
     A,
     b: jax.Array,
@@ -156,20 +332,36 @@ def lstsq(
     iter_lim: int | None = None,
     backend: str = "auto",
     history: bool = False,
+    certified_rtol: float | None = None,
+    certified_probes: int = 8,
 ) -> SolveResult:
     """Solve min‖Ax − b‖₂ (+ λ‖x‖₂² with ``reg=λ``) with an auto-selected
     (or forced) solver.
 
     ``A``: dense array, BCOO sparse matrix, or ``linop.LinearOperator``.
     ``atol``/``btol``/``steptol``/``iter_lim`` left as ``None`` use each
-    solver's own defaults; values are forwarded only to solvers that accept
-    them (``fossils`` controls its budget via refinement/inner-loop
-    parameters, so ``atol``/``btol``/``iter_lim`` do not apply there).
+    solver's own defaults.  Forwarding is audited against ``TOL_SUPPORT``:
+    forcing a method alongside a knob it does not consume (``direct`` takes
+    none; ``fossils`` only ``steptol``) raises ``ValueError``; under
+    ``method="auto"`` unsupported knobs are dropped for the selected
+    solver.
+
+    ``accuracy="certified"`` (``method="auto"`` only) runs the adaptive
+    certified driver: solve, certify with the posterior estimators of
+    ``repro.core.certify``, and on failure escalate sketch size and method
+    (see :data:`CERTIFIED_LADDER`).  ``certified_rtol`` is the relative
+    forward-error target (``None`` → the adaptive QR-attainable default);
+    ``certified_probes`` sets the distortion probe count.  The returned
+    ``SolveResult.certificate`` carries the final posterior bound.
     """
+    if accuracy not in ACCURACIES:
+        raise ValueError(f"unknown accuracy {accuracy!r}; have {ACCURACIES}")
     if callable(getattr(A, "tiles", None)):
         # Row-streamed (out-of-core) input: delegate to the two-pass
         # streaming drivers.  Lazy import — repro.streaming imports this
-        # package, so a top-level import would be circular.
+        # package, so a top-level import would be circular.  A forced
+        # method composes with accuracy="certified" here: streams have no
+        # escalation ladder, certification just rides along.
         from ..streaming.solve import stream_lstsq as _stream_lstsq
 
         tol = {
@@ -181,7 +373,9 @@ def lstsq(
         return _stream_lstsq(
             A, b, key, method=method, sketch=sketch,
             sketch_size=sketch_size, reg=reg, backend=backend,
-            history=history, **tol,
+            history=history, certify=accuracy == "certified",
+            certified_rtol=certified_rtol, certified_probes=certified_probes,
+            **tol,
         )
     A_in = linop.as_operator(A)
     if reg is not None:
@@ -191,8 +385,40 @@ def lstsq(
         A_op, b_solve = A_in, b
     matrix_free = not isinstance(A_in, linop.DenseOperator)
 
-    m, n = A_op.shape
+    # Select on the ORIGINAL data shape: with reg=λ the solver sees the
+    # augmented (m + n, n) operator, but its extra √λ·I rows are exact
+    # (never sketched) and must not inflate m in the regime tests.
+    m, n = A_in.shape
     method = _ALIASES.get(method, method)
+    forced = method != "auto"
+
+    tol = {
+        k: v
+        for k, v in dict(atol=atol, btol=btol, steptol=steptol,
+                         iter_lim=iter_lim).items()
+        if v is not None
+    }
+
+    if accuracy == "certified":
+        if forced:
+            raise ValueError(
+                "accuracy='certified' drives its own method ladder "
+                f"{CERTIFIED_LADDER}; don't force method={method!r}"
+            )
+        if key is None:
+            raise ValueError("accuracy='certified' needs a PRNG key")
+        res, used = _certified_lstsq(
+            A_in, A_op, b_solve, key, sketch=sketch,
+            sketch_size=sketch_size, backend=backend, tol=tol,
+            history=history, rtol=certified_rtol, n_probes=certified_probes,
+        )
+        if reg is not None:
+            rnorm, arnorm = _ridge_diagnostics(
+                A_in, b, res.x, jnp.asarray(reg, A_in.dtype)
+            )
+            res = res._replace(rnorm=rnorm, arnorm=arnorm)
+        return res._replace(method=used)
+
     if method == "auto":
         method = select_method(
             m, n, has_key=key is not None, accuracy=accuracy,
@@ -203,12 +429,18 @@ def lstsq(
     if method in ("saa", "sap", "iterative", "fossils") and key is None:
         raise ValueError(f"method {method!r} needs a PRNG key")
 
-    tol = {
-        k: v
-        for k, v in dict(atol=atol, btol=btol, steptol=steptol,
-                         iter_lim=iter_lim).items()
-        if v is not None
-    }
+    unsupported = sorted(set(tol) - TOL_SUPPORT[method])
+    if unsupported:
+        if forced:
+            supported = sorted(TOL_SUPPORT[method]) or ["(none)"]
+            raise ValueError(
+                f"method {method!r} does not consume {unsupported}; it "
+                f"supports {supported} — drop the unsupported knobs or let "
+                "method='auto' do so"
+            )
+        # auto-selected: drop explicitly rather than silently absorb
+        for k in unsupported:
+            tol.pop(k)
     sk = dict(sketch=sketch, sketch_size=sketch_size, backend=backend)
 
     if method == "direct":
@@ -222,9 +454,8 @@ def lstsq(
         res = sap_sas(A_op, b_solve, key, history=history, **sk, **tol)
     elif method == "iterative":
         res = iterative_sketching(A_op, b_solve, key, history=history, **sk, **tol)
-    else:  # fossils
-        fkw = {"steptol": steptol} if steptol is not None else {}
-        res = fossils(A_op, b_solve, key, history=history, **sk, **fkw)
+    else:  # fossils (tol holds at most steptol after the audit above)
+        res = fossils(A_op, b_solve, key, history=history, **sk, **tol)
 
     if reg is not None:
         # Report diagnostics of the ORIGINAL problem, not the augmented one.

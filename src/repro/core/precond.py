@@ -36,8 +36,16 @@ __all__ = ["SketchedFactor", "default_sketch_size", "distortion"]
 
 
 def default_sketch_size(n: int, m: int) -> int:
-    """Paper regime: m ≫ s > n.  s = 4n is the usual CW sweet spot."""
-    return int(min(max(4 * n, n + 16), max(m // 2, n + 1)))
+    """Paper regime: m ≫ s > n.  s = 4n is the usual CW sweet spot.
+
+    Clamped to s ≤ m: for nearly-square or underdetermined shapes the
+    ``max(m // 2, n + 1)`` branch used to exceed m, building an over-tall
+    sketch that embeds nothing (``select_method`` routes such shapes to
+    ``direct``/``lsqr`` — the regime test ``s ≥ n + 1`` can then only pass
+    when the sketch genuinely shrinks the row space).
+    """
+    s = int(min(max(4 * n, n + 16), max(m // 2, n + 1)))
+    return max(min(s, m), 1)
 
 
 def distortion(sketch_size: int, n: int) -> float:
@@ -89,6 +97,25 @@ class SketchedFactor(NamedTuple):
         right-hand side (``op.apply(b)`` → warm start) or re-sketch a
         perturbed matrix (the SAA fallback) with the SAME S.
         """
+        factor, op, _ = cls.build_full(
+            A, key, sketch=sketch, sketch_size=sketch_size, backend=backend
+        )
+        return factor, op
+
+    @classmethod
+    def build_full(
+        cls,
+        A,
+        key: jax.Array,
+        *,
+        sketch: str = "clarkson_woodruff",
+        sketch_size: int | None = None,
+        backend: str = "auto",
+    ):
+        """:meth:`build` that also returns the assembled sketch:
+        ``(factor, op, B)``.  The adaptive certified driver keeps B so a
+        later :meth:`extend` reuses the stored rows bit-for-bit instead of
+        re-sketching A."""
         A = linop.as_operator(A)
         if isinstance(A, linop.TikhonovAugmented):
             # Structured embedding blockdiag(S, I): sketch the data rows,
@@ -112,7 +139,7 @@ class SketchedFactor(NamedTuple):
             )
             op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
         B = op.apply_op(A, backend=backend)
-        return cls.from_sketch(B), op
+        return cls.from_sketch(B), op, B
 
     @classmethod
     def build_streaming(
@@ -140,6 +167,36 @@ class SketchedFactor(NamedTuple):
             backend=backend,
         )
         return cls.from_sketch(B), op
+
+    # ----------------------------------------------------------- escalation
+    def extend(
+        self,
+        A,
+        op,
+        key: jax.Array,
+        extra: int,
+        *,
+        B: jax.Array | None = None,
+        backend: str = "auto",
+    ):
+        """Grow the sketch by ``extra`` appended rows and re-QR.
+
+        The adaptive repair move of ``lstsq(accuracy="certified")``: when a
+        certificate fails, the embedding is escalated by appending fresh
+        rows to S (``op.extend_rows`` — a weighted stack that embeds like a
+        from-scratch draw at the larger size) and only those new rows are
+        ever applied to A.  ``B`` is the stored sketch this factor was
+        built from (``build_full``); when omitted it is reconstructed as
+        Q·R (exact to rounding — pass B for the bit-exact path).  Returns
+        ``(factor, op_new, B_new)``; the cost is one ``extra``-row sketch
+        apply plus one (d + extra) × n QR, never a full re-sketch.
+        """
+        A = linop.as_operator(A)
+        op_new = op.extend_rows(key, extra)
+        if B is None:
+            B = self.Q @ self.R
+        B_new = op_new.extend_sketch(B, A, backend=backend)
+        return SketchedFactor.from_sketch(B_new), op_new, B_new
 
     # ------------------------------------------------------------ shape info
     @property

@@ -48,6 +48,9 @@ class SolveResult(NamedTuple):
     used_fallback: jax.Array  # bool; only SAA-SAS's perturbation path sets it
     history: jax.Array | None = None  # (iter_lim,) residual norms, nan-padded
     method: str | None = None  # set by lstsq() outside jit
+    # Posterior trust report (repro.core.certify.Certificate) — attached by
+    # the certified/adaptive paths outside jit; None everywhere else.
+    certificate: object | None = None
 
     @property
     def converged(self):

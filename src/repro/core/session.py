@@ -25,6 +25,17 @@ counts the expensive events (``sketches``, ``qr_factorizations``,
 ``solves``) so amortization is observable — the whole point of the
 session API is that ``sketches`` stays at 1 while ``solves`` grows.
 
+Trust layer (``repro.core.certify``): ``certify()`` issues a posterior
+:class:`~repro.core.certify.Certificate` for the stored factor — and,
+given a solve's ``(b, result)``, a forward-error bound for that answer.
+Row updates DRIFT the embedding: S was drawn obliviously to the original
+A, and enough rewritten rows can degrade its quality for the new
+range(A) without any bookkeeping going stale (the delta-sketch itself is
+exact).  ``auto_recertify=True`` re-probes after every ``update_rows``
+and, when the probe fails, escalates the sketch in place
+(``SketchedFactor.extend`` — appended rows, stored B reused) until it
+certifies again or the sketch reaches the data row count.
+
 The per-call work is one sketch of b (O(m) for CountSketch), the whitened
 LSQR iterations (κ-independent count) and one n×n back substitution —
 exactly the marginal cost of a query in ``saa_sas_batch``, but without
@@ -37,6 +48,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import certify as certify_lib
 from . import linop
 from . import sketch as sketch_lib
 from .backend import resolve as resolve_backend
@@ -45,6 +57,10 @@ from .precond import SketchedFactor, default_sketch_size
 from .result import SolveResult
 
 __all__ = ["SketchedSolver"]
+
+# key-derivation constant for the session's certification probe stream
+# (disjoint from the sketch draw made with the constructor key itself)
+_CERTIFY_SALT = 0x6CE7
 
 
 _SOLVE_STATICS = ("atol", "btol", "steptol", "iter_lim", "backend", "history")
@@ -120,6 +136,9 @@ class SketchedSolver:
         iter_lim: int = 100,
         materialize_y: bool | None = None,
         backend: str = "auto",
+        auto_recertify: bool = False,
+        max_distortion: float = certify_lib.DEFAULT_MAX_DISTORTION,
+        certify_probes: int = 8,
     ):
         self.A = linop.as_operator(A)
         self.reg = reg
@@ -151,6 +170,15 @@ class SketchedSolver:
             if reg is not None
             else inner
         )
+        self.auto_recertify = auto_recertify
+        self.max_distortion = float(max_distortion)
+        self.certify_probes = int(certify_probes)
+        self._certify_key = jax.random.fold_in(key, _CERTIFY_SALT)
+        self._certify_calls = 0
+        self.certificate = None  # embedding-level cert of the CURRENT factor
+        self.recertifications = 0  # auto-recertify probes taken so far
+        self.escalations = 0  # sketch extensions taken by recertification
+
         self.stats = {"sketches": 0, "qr_factorizations": 0, "solves": 0}
         self._B = self._sketch_op.apply_op(self._solve_op, backend=self.backend)
         self.stats["sketches"] += 1
@@ -160,6 +188,10 @@ class SketchedSolver:
     def _refactor(self):
         """(Re)build the QR factor — and Y, if materialized — from self._B."""
         self.factor = SketchedFactor.from_sketch(self._B)
+        self._after_refactor()
+
+    def _after_refactor(self):
+        """Bookkeeping shared by every path that replaced the factor."""
         self.stats["qr_factorizations"] += 1
         self._Y = (
             linop.DenseOperator(self.factor.materialize_whitened(self._solve_op))
@@ -204,6 +236,80 @@ class SketchedSolver:
             rnorm=jnp.linalg.norm(r, axis=axis),
             arnorm=jnp.linalg.norm(g, axis=axis),
         )
+
+    # ------------------------------------------------------- certification
+    def _next_probe_key(self):
+        self._certify_calls += 1
+        return jax.random.fold_in(self._certify_key, self._certify_calls)
+
+    def _random_rows(self) -> int:
+        """Rows of the random part of S (ridge sessions exclude the exact
+        √λ·I tail — it is not part of the embedding)."""
+        op = self._sketch_op
+        if isinstance(op, sketch_lib.AugmentedSketch):
+            return op.inner.d
+        return op.d
+
+    def certify(self, b=None, result=None, *, n_probes=None, target=None):
+        """Posterior :class:`~repro.core.certify.Certificate` for the
+        stored factor — or, given one solve's ``(b, result)``, for that
+        specific answer (forward-error bound included).
+
+        The embedding-level form (no arguments) is cached on
+        ``self.certificate`` and is what ``auto_recertify`` refreshes
+        after row updates.  Cost: ``certify_probes`` matvecs with A plus
+        one n×n SVD; nothing is re-sketched.
+        """
+        if (b is None) != (result is None):
+            raise ValueError("pass b and result together (or neither)")
+        x = None
+        b_solve = None
+        if b is not None:
+            x = result.x
+            if x.ndim != 1:
+                raise ValueError(
+                    "certify takes one right-hand side at a time; "
+                    "certify solve_many columns individually"
+                )
+            b_solve = self._rhs(jnp.asarray(b, self.A.dtype))
+        cert = certify_lib.certify(
+            self._solve_op, b_solve, x, self.factor, self._next_probe_key(),
+            n_probes=self.certify_probes if n_probes is None else int(n_probes),
+            target=target, max_distortion=self.max_distortion,
+            sketch_rows=self._random_rows(), escalations=self.escalations,
+        )
+        if x is None:
+            self.certificate = cert
+        return cert
+
+    def _escalate(self, extra: int):
+        """Append ``extra`` fresh rows to S and re-QR — the stored sketch
+        is extended (never recomputed), exactly the certified driver's
+        escalation move."""
+        self.factor, self._sketch_op, self._B = self.factor.extend(
+            self._solve_op, self._sketch_op, self._next_probe_key(), extra,
+            B=self._B, backend=self.backend,
+        )
+        # extend() sketched the new rows and re-QRed internally
+        self.stats["sketches"] += 1
+        self._after_refactor()
+        self.sketch_size = self._random_rows()
+        self.escalations += 1
+
+    def _recertify_after_update(self):
+        """Probe the drifted embedding; escalate until it certifies again
+        (or the sketch reaches the data row count)."""
+        m = self.A.shape[0]
+        cert = self.certify()
+        self.recertifications += 1
+        while not bool(cert.passed):
+            s = self._random_rows()
+            extra = min(s, m - s)
+            if extra <= 0:
+                break
+            self._escalate(extra)
+            cert = self.certify()
+            self.recertifications += 1
 
     # ----------------------------------------------------------------- solves
     def solve(self, b: jax.Array, *, history: bool = False) -> SolveResult:
@@ -291,3 +397,9 @@ class SketchedSolver:
             self._B = self._B + d_sk
             self._set_matrix(A_new)
         self._refactor()
+        # The delta-sketch is exact, but S itself was drawn obliviously to
+        # the ORIGINAL rows — its embedding quality for the new range(A)
+        # must be re-established, not assumed.
+        self.certificate = None
+        if self.auto_recertify:
+            self._recertify_after_update()

@@ -35,6 +35,7 @@ see the streaming contract on ``_OperatorApply``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Callable
 
@@ -53,6 +54,7 @@ __all__ = [
     "SparseSignSketch",
     "UniformSparseSketch",
     "AugmentedSketch",
+    "StackedSketch",
     "SKETCH_KINDS",
 ]
 
@@ -192,6 +194,41 @@ class _OperatorApply:
         restriction of the distributed/streaming sketch assembly."""
         return None
 
+    # -------------------------------------------------------- escalation
+    # A failed certificate (repro.core.certify) is repaired by GROWING the
+    # embedding, not redrawing it: ``extend_rows`` appends ``extra`` fresh
+    # rows as the weighted stack S′ = [√(d/(d+e))·S; √(e/(d+e))·S_e].
+    # The weights keep E[S′ᵀS′] = I, and the variance of ‖S′x‖² matches a
+    # fresh (d+e)-row draw exactly — so the escalated operator embeds like
+    # a from-scratch sketch at the larger size, while the already-paid
+    # sketch B = SA is reused verbatim (``StackedSketch.extend_sketch``).
+
+    def _fresh_like(self, key, extra: int):
+        """An independent draw of this kind with ``extra`` rows over the
+        same m-row space — the new block of an escalated sketch."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support extend_rows"
+        )
+
+    def extend_rows(self, key, extra: int) -> "StackedSketch":
+        """Escalate to d + ``extra`` rows without touching the first d.
+
+        Returns a :class:`StackedSketch` whose top block is THIS operator
+        (reweighted) and whose bottom block is a fresh ``extra``-row draw
+        from ``key``; a stored sketch B = SA extends through
+        ``StackedSketch.extend_sketch`` by sketching only the new rows.
+        """
+        extra = int(extra)
+        if extra <= 0:
+            raise ValueError(f"extra must be a positive row count, got {extra}")
+        d = self.d
+        return StackedSketch(
+            top=self,
+            bottom=self._fresh_like(key, extra),
+            w_top=math.sqrt(d / (d + extra)),
+            w_bottom=math.sqrt(extra / (d + extra)),
+        )
+
 
 # --------------------------------------------------------------------------
 # Dense operators
@@ -266,6 +303,13 @@ class GaussianSketch(_OperatorApply):
         S = self._cols(idx, jnp.float64)
         return UniformDenseSketch(S=S, d=self.d, m=S.shape[1])
 
+    def _fresh_like(self, key, extra):
+        return GaussianSketch.sample(
+            key, extra, self.m,
+            dtype=self.S.dtype if self.S is not None else jnp.float64,
+            materialize=self.S is not None,
+        )
+
     def as_dense(self):
         if self.S is not None:
             return self.S
@@ -302,6 +346,9 @@ class UniformDenseSketch(_OperatorApply):
 
     def restrict_cols(self, idx):
         return UniformDenseSketch(S=self.S[:, idx], d=self.d, m=len(idx))
+
+    def _fresh_like(self, key, extra):
+        return UniformDenseSketch.sample(key, extra, self.m, dtype=self.S.dtype)
 
     def as_dense(self):
         return self.S
@@ -368,6 +415,9 @@ class SRHTSketch(_OperatorApply):
         signs = self.signs[row_offset : row_offset + t]
         return signs[:, None].astype(tile2.dtype) * tile2
 
+    def _fresh_like(self, key, extra):
+        return SRHTSketch.sample(key, extra, self.m, dtype=self.signs.dtype)
+
     def as_dense(self):
         eye = jnp.eye(self.m, dtype=self.signs.dtype)
         return self.apply(eye, backend="reference")
@@ -433,6 +483,9 @@ class CountSketch(_OperatorApply):
             buckets=buckets, signs=signs, d=self.d, m=buckets.shape[0]
         )
 
+    def _fresh_like(self, key, extra):
+        return CountSketch.sample(key, extra, self.m, dtype=self.signs.dtype)
+
     def as_dense(self):
         S = jnp.zeros((self.d, self.m), self.signs.dtype)
         return S.at[self.buckets, jnp.arange(self.m)].set(self.signs)
@@ -497,6 +550,11 @@ class SparseSignSketch(_OperatorApply):
             buckets=buckets, signs=signs, d=self.d, m=buckets.shape[1], k=self.k
         )
 
+    def _fresh_like(self, key, extra):
+        return SparseSignSketch.sample(
+            key, extra, self.m, dtype=self.signs.dtype, k=self.k
+        )
+
     def as_dense(self):
         S = jnp.zeros((self.d, self.m), self.signs.dtype)
         cols = jnp.broadcast_to(jnp.arange(self.m), (self.k, self.m))
@@ -556,6 +614,11 @@ class UniformSparseSketch(_OperatorApply):
         buckets, values = self.buckets[idx], self.values[idx]
         return UniformSparseSketch(
             buckets=buckets, values=values, d=self.d, m=buckets.shape[0]
+        )
+
+    def _fresh_like(self, key, extra):
+        return UniformSparseSketch.sample(
+            key, extra, self.m, dtype=self.values.dtype
         )
 
     def as_dense(self):
@@ -635,6 +698,141 @@ class AugmentedSketch(_OperatorApply):
             axis=1,
         )
         return jnp.concatenate([top, bot], axis=0)
+
+    def extend_rows(self, key, extra: int) -> "AugmentedSketch":
+        """Escalate the DATA block only — the exact identity tail needs no
+        growing (it is not a random embedding), so ridge escalation appends
+        rows to the inner sketch and keeps blockdiag structure."""
+        return AugmentedSketch(
+            inner=self.inner.extend_rows(key, extra), tail=self.tail
+        )
+
+    def extend_sketch(self, B_top, A, *, backend: str = "auto"):
+        """Incremental extension of a stored augmented sketch [S·A; √λI]:
+        the data rows extend through the stacked inner operator, the exact
+        tail rows move down unchanged.  Bit-equal to ``apply_op(A)`` of the
+        escalated operator recomputed from scratch."""
+        from . import linop
+
+        if not isinstance(self.inner, StackedSketch):
+            raise TypeError(
+                "extend_sketch needs an operator produced by extend_rows; "
+                f"inner is {type(self.inner).__name__}"
+            )
+        A = linop.as_operator(A)
+        if not isinstance(A, linop.TikhonovAugmented):
+            raise TypeError(
+                "AugmentedSketch.extend_sketch sketches the data block of a "
+                f"TikhonovAugmented operator, got {type(A).__name__}"
+            )
+        d_prev = self.inner.top.d
+        B_data, B_tail = B_top[:d_prev], B_top[d_prev:]
+        top = self.inner.extend_sketch(B_data, A.op, backend=backend)
+        return jnp.concatenate([top, B_tail], axis=0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StackedSketch(_OperatorApply):
+    """Weighted stack [w_t·S_top; w_b·S_bot] — the escalated sketch.
+
+    Produced by ``op.extend_rows(key, extra)`` with w_t = √(d/(d+e)),
+    w_b = √(e/(d+e)) so that E[SᵀS] = w_t²·I + w_b²·I = I stays an exact
+    expectation-isometry and Var[‖Sx‖²] matches a fresh (d+e)-row draw of
+    the same kind — escalation buys the full statistical benefit of the
+    larger sketch.  The payoff is :meth:`extend_sketch`: a stored
+    B = S_top·A extends to the (d+e)-row sketch by sketching ONLY the new
+    rows (one ``extra``-row apply), bit-equal to applying the stacked
+    operator to A from scratch — the escalation analogue of the streaming
+    accumulators' merge-exactness contract.
+
+    Nested escalations stack recursively (``top`` is the previous stack);
+    ``_fresh_like`` always draws the ORIGINAL kind, so an escalated
+    CountSketch stays a union of CountSketch blocks.
+    """
+
+    top: object  # the pre-escalation operator (d_top, m), reweighted
+    bottom: object  # the fresh block (extra, m), independent draw
+    w_top: float = _static()
+    w_bottom: float = _static()
+
+    @property
+    def d(self) -> int:
+        return self.top.d + self.bottom.d
+
+    @property
+    def m(self) -> int:
+        return self.top.m
+
+    def apply(self, A, *, backend: str = "auto"):
+        top = self.top.apply(A, backend=backend)
+        bot = self.bottom.apply(A, backend=backend)
+        return jnp.concatenate([self.w_top * top, self.w_bottom * bot], axis=0)
+
+    def apply_op(self, A, *, backend: str = "auto"):
+        top = self.top.apply_op(A, backend=backend)
+        bot = self.bottom.apply_op(A, backend=backend)
+        return jnp.concatenate([self.w_top * top, self.w_bottom * bot], axis=0)
+
+    def extend_sketch(self, B_top, A, *, backend: str = "auto"):
+        """[w_t·B_top; w_b·(S_bot·A)] — extend a STORED sketch.
+
+        ``B_top`` must be the sketch the top operator produced for this
+        same A (``top.apply_op(A)``); only the ``bottom.d`` new rows are
+        sketched.  Deterministic recomputation makes the result bit-equal
+        to ``self.apply_op(A)`` from scratch (pinned in tests).
+        """
+        B_top = jnp.asarray(B_top)
+        if B_top.shape[0] != self.top.d:
+            raise ValueError(
+                f"B_top has {B_top.shape[0]} rows, the pre-escalation "
+                f"operator has d={self.top.d}"
+            )
+        bot = self.bottom.apply_op(A, backend=backend)
+        return jnp.concatenate(
+            [self.w_top * B_top, self.w_bottom * bot], axis=0
+        )
+
+    # both blocks must stream additively for the stack to stream at all
+    # (an SRHT block streams by placement — route those through their own
+    # accumulators and merge instead)
+    @property
+    def stream_semantics(self) -> str:  # type: ignore[override]
+        both_add = (
+            self.top.stream_semantics == "add"
+            and self.bottom.stream_semantics == "add"
+        )
+        return "add" if both_add else "place"
+
+    def apply_rows(self, tile, row_offset: int, *, backend: str = "auto"):
+        if self.stream_semantics != "add":
+            raise NotImplementedError(
+                "a stacked sketch with an SRHT block streams by placement; "
+                "accumulate the blocks separately"
+            )
+        top = self.top.apply_rows(tile, row_offset, backend=backend)
+        bot = self.bottom.apply_rows(tile, row_offset, backend=backend)
+        return jnp.concatenate([self.w_top * top, self.w_bottom * bot], axis=0)
+
+    def restrict_cols(self, idx):
+        top = self.top.restrict_cols(idx)
+        bot = self.bottom.restrict_cols(idx)
+        if top is None or bot is None:
+            return None
+        return StackedSketch(
+            top=top, bottom=bot, w_top=self.w_top, w_bottom=self.w_bottom
+        )
+
+    def _fresh_like(self, key, extra):
+        # nested escalation keeps drawing the ORIGINAL kind
+        return self.top._fresh_like(key, extra)
+
+    def as_dense(self):
+        top = self.top.as_dense()
+        bot = self.bottom.as_dense()
+        return jnp.concatenate(
+            [self.w_top * top, self.w_bottom * bot.astype(top.dtype)], axis=0
+        )
 
 
 SKETCH_KINDS: dict[str, type] = {

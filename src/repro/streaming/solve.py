@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import certify as certify_lib
 from ..core import sketch as sketch_lib
 from ..core.backend import resolve as resolve_backend
 from ..core.iterative import _IMPROVE_FACTOR, _STALL_LIMIT, damping_momentum
@@ -349,6 +350,54 @@ def _final_diagnostics(source, b, x, reg):
     return jnp.sqrt(rn2), jnp.linalg.norm(g)
 
 
+def _certify_streamed(source, b, x, factor, key, *, lam, sketch_rows,
+                      n_probes=8, target=None):
+    """Streamed posterior certificate — the pass-1 sketch is REUSED.
+
+    The factor built from the single sketching pass over [A|b] already
+    holds everything the estimators need except products with A, which
+    stream: one pass evaluates all ``n_probes`` whitened distortion
+    probes as a blocked matvec (‖S A R⁻¹w‖ = ‖w‖ exactly, so only
+    ‖A R⁻¹w‖ needs A), and one fused pass gives the residual and
+    gradient for the forward-error bound.  Ridge certificates are issued
+    for the augmented system [A; √λI], whose solution is the ridge
+    solution — the √λ terms are exact column arithmetic, never streamed.
+
+    Returns ``(certificate, rnorm, arnorm)`` where the latter two are the
+    ORIGINAL-system diagnostics of the same fused pass (the ridge
+    gradient ‖Aᵀ(b − Ax) − λx‖, matching ``_final_diagnostics``), so
+    certified callers never stream the residual twice.
+    """
+    n = source.shape[1]
+    dtype = b.dtype
+    W = jax.random.normal(key, (n, int(n_probes)), dtype)
+    V = factor.precondition(W)
+    AV = _stream_matvec(source, V)  # one pass serves every probe
+    yn2 = jnp.sum(AV * AV, axis=0)
+    if lam is not None:
+        yn2 = yn2 + lam * jnp.sum(V * V, axis=0)
+    wn = jnp.linalg.norm(W, axis=0)
+    ratios = wn / jnp.maximum(jnp.sqrt(yn2), jnp.finfo(dtype).tiny)
+    eps_hat = jnp.max(jnp.abs(ratios - 1.0))
+
+    rn2, g = _stream_residual_grad(source, b, x)
+    rn2_aug = rn2
+    if lam is not None:
+        rn2_aug = rn2 + lam * jnp.sum(x * x)
+        g = g - lam * x  # the ridge gradient — also the augmented system's
+    wg = factor.rt_solve(g)
+    cert = certify_lib.build_certificate(
+        factor,
+        distortion=eps_hat,
+        rnorm=jnp.sqrt(rn2_aug),
+        whitened_arnorm=jnp.linalg.norm(wg),
+        xnorm=jnp.linalg.norm(x),
+        target=target,
+        sketch_rows=sketch_rows,
+    )
+    return cert, jnp.sqrt(rn2), jnp.linalg.norm(g)
+
+
 def stream_lstsq(
     source,
     b: jax.Array,
@@ -365,6 +414,9 @@ def stream_lstsq(
     backend: str = "auto",
     history: bool = False,
     tile_rows: int | None = None,
+    certify: bool = False,
+    certified_rtol: float | None = None,
+    certified_probes: int = 8,
 ) -> SolveResult:
     """min‖Ax − b‖ (+ λ‖x‖² with ``reg=λ``) over a row-streamed A.
 
@@ -377,6 +429,16 @@ def stream_lstsq(
     With the same ``key``, the streamed S is bit-identical to the
     in-memory solvers' draw, so results match ``lstsq`` on the
     materialized A to machine precision.
+
+    ``certify=True`` (the streaming certified mode — also reached via
+    ``lstsq(accuracy="certified")`` on a RowSource) attaches a posterior
+    :class:`~repro.core.certify.Certificate` built from the SAME pass-1
+    sketch of [A|b]: +1 stream for the blocked distortion probes and +1
+    fused residual/gradient stream (which also fills the diagnostics the
+    single-pass ``"sketch_and_solve"`` method normally skips).  No
+    escalation is attempted out-of-core — a failed certificate reports
+    ``passed=False`` and the caller chooses between a larger
+    ``sketch_size`` re-run or an in-memory method.
     """
     source = as_source(source, tile_rows)
     m, n = source.shape
@@ -385,7 +447,11 @@ def stream_lstsq(
         raise ValueError(f"b must have shape ({m},), got {b.shape}")
     method = _ALIASES.get(method, method)
     if method == "auto":
-        method = "iterative"
+        # Certified runs default to the whitened LSQR ("saa"): it iterates
+        # to the numerical floor, which the heavy-ball tail often leaves
+        # short of within the default iter_lim — the certificate would
+        # (correctly) refuse to certify that residual accuracy.
+        method = "saa" if certify else "iterative"
     if method not in STREAM_METHODS:
         raise ValueError(
             f"unknown streaming method {method!r}; have "
@@ -412,20 +478,37 @@ def stream_lstsq(
     factor = SketchedFactor.from_sketch(B)
     x0 = factor.sketch_and_solve(c)
 
+    def _maybe_certificate(x):
+        """(certificate, rnorm, arnorm) — Nones when not certifying.  The
+        diagnostics come from the certificate's own fused pass, so
+        certified runs never stream the residual twice."""
+        if not certify:
+            return None, None, None
+        return _certify_streamed(
+            source, b, x, factor, jax.random.fold_in(key, 0xCE27),
+            lam=lam, sketch_rows=s, n_probes=certified_probes,
+            target=certified_rtol,
+        )
+
     # ---- pass 2(+): iterate with streamed products --------------------
     hist = []
     if method == "sketch_and_solve":
-        # Single-pass: no second stream, hence no residual diagnostics.
+        # Single-pass: no second stream, hence no residual diagnostics —
+        # unless a certificate was requested, whose fused pass fills them.
         nan = jnp.asarray(jnp.nan, b.dtype)
+        cert, rnorm, arnorm = _maybe_certificate(x0)
+        if cert is None:
+            rnorm = arnorm = nan
         return SolveResult(
             x=x0,
             istop=jnp.asarray(1, jnp.int32),
             itn=jnp.asarray(0, jnp.int32),
-            rnorm=nan,
-            arnorm=nan,
+            rnorm=rnorm,
+            arnorm=arnorm,
             used_fallback=jnp.asarray(False),
             history=jnp.zeros((0,), b.dtype) if history else None,
             method="stream_sketch_and_solve",
+            certificate=cert,
         )
     if method == "iterative":
         alpha, beta = damping_momentum(s, n)
@@ -434,7 +517,11 @@ def stream_lstsq(
             atol=atol, btol=btol, steptol=steptol, iter_lim=iter_lim,
             history=history,
         )
-        rnorm, arnorm = _final_diagnostics(source, b, x, lam)
+        cert, rnorm_c, arnorm_c = _maybe_certificate(x)
+        if cert is not None:
+            rnorm, arnorm = rnorm_c, arnorm_c
+        else:
+            rnorm, arnorm = _final_diagnostics(source, b, x, lam)
     else:  # saa: preconditioned LSQR on the whitened system, warm-started
         if lam is None:
             def mv(z):
@@ -462,10 +549,14 @@ def stream_lstsq(
             iter_lim=iter_lim, history=history,
         )
         x = factor.precondition(z)
-        rnorm = jnp.asarray(rnorm, b.dtype)
-        arnorm = jnp.asarray(arnorm, b.dtype)
-        if lam is not None:
+        cert, rnorm_c, arnorm_c = _maybe_certificate(x)
+        if cert is not None:
+            rnorm, arnorm = rnorm_c, arnorm_c
+        elif lam is not None:
             rnorm, arnorm = _final_diagnostics(source, b, x, lam)
+        else:
+            rnorm = jnp.asarray(rnorm, b.dtype)
+            arnorm = jnp.asarray(arnorm, b.dtype)
 
     return SolveResult(
         x=x,
@@ -476,6 +567,7 @@ def stream_lstsq(
         used_fallback=jnp.asarray(False),
         history=jnp.asarray(hist, b.dtype) if history else None,
         method=f"stream_{method}",
+        certificate=cert,
     )
 
 

@@ -1,0 +1,435 @@
+"""Certification + adaptive escalation (repro.core.certify, certified lstsq).
+
+Covers the PR's acceptance criteria:
+
+- the probed embedding distortion tracks the TRUE whitened-spectrum
+  distortion within a constant factor, for all six sketch kinds;
+- ``extend_rows`` exactness: the incrementally extended sketch is
+  bit-equal to applying the escalated operator from scratch (mirroring
+  the streaming merge-exactness contract);
+- ``lstsq(accuracy="certified")`` on a cond=1e10 problem returns a
+  certificate whose forward-error bound holds against QR ground truth,
+  and escalates sketch size + method from an adversarially small initial
+  sketch WITHOUT re-sketching A (sketch-apply count pinned);
+- the ridge auto-selection regression (selection on the data shape, not
+  the augmented one) and the explicit tolerance-forwarding audit.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    SketchedFactor,
+    SketchedSolver,
+    generate_problem,
+    lstsq,
+    qr_solve,
+    select_method,
+)
+from repro.core import certify as certify_lib
+from repro.core import linop
+from repro.core import sketch as sketch_lib
+from repro.core.precond import default_sketch_size
+
+ALL_KINDS = (
+    "gaussian",
+    "uniform_dense",
+    "srht",
+    "countsketch",
+    "sparse_sign",
+    "uniform_sparse",
+)
+
+
+def true_subspace_distortion(op, A):
+    """max(σ_max(SU) − 1, 1 − σ_min(SU)) over an orthonormal basis U of
+    range(A) — the quantity the probe estimates from below."""
+    U, _ = jnp.linalg.qr(A)
+    sv = jnp.linalg.svd(op.apply(U, backend="reference"), compute_uv=False)
+    return float(jnp.maximum(sv[0] - 1.0, 1.0 - sv[-1]))
+
+
+# --------------------------------------------------------------------------
+# Estimators
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_probed_distortion_tracks_truth(kind):
+    """ε̂ never exceeds the true whitened-spectrum distortion (the probe is
+    a lower estimate by construction) and stays within a constant factor
+    of it — for every sketch kind, at an aggressive size where the
+    distortion is large enough to matter."""
+    m, n, s = 1024, 16, 48
+    A = jax.random.normal(jax.random.key(0), (m, n))
+    op = sketch_lib.sample(kind, jax.random.key(1), s, m)
+    factor = SketchedFactor.from_sketch(op.apply(A, backend="reference"))
+    eps_true = true_subspace_distortion(op, A)
+    eps_hat = float(
+        certify_lib.probe_distortion(A, factor, jax.random.key(2), n_probes=16)
+    )
+    assert eps_hat <= eps_true * (1.0 + 1e-9), (eps_hat, eps_true)
+    assert eps_hat >= eps_true / 4.0, (eps_hat, eps_true)
+
+
+def test_error_bound_is_valid_posterior_bound():
+    """bound ≥ ‖x̂ − x⋆‖ for a deliberately sloppy solution, using the
+    TRUE distortion (the bound's hypothesis)."""
+    m, n, s = 2048, 24, 96
+    prob = generate_problem(jax.random.key(3), m, n, cond=1e6, beta=1e-4)
+    op = sketch_lib.sample("countsketch", jax.random.key(4), s, m)
+    factor = SketchedFactor.from_sketch(op.apply(prob.A, backend="reference"))
+    x_star = qr_solve(prob.A, prob.b)
+    # sloppy estimate: plain sketch-and-solve, O(ε·‖r‖) off the optimum
+    x_hat = factor.sketch_and_solve(op.apply(prob.b, backend="reference"))
+    eps_true = true_subspace_distortion(op, prob.A)
+    _, _, bound = certify_lib.error_bound(
+        prob.A, prob.b, x_hat, factor, eps_true
+    )
+    err = float(jnp.linalg.norm(x_hat - x_star))
+    assert err <= float(bound) * (1.0 + 1e-9)
+    # and not vacuous: within a few orders of the actual error
+    assert float(bound) <= 1e4 * max(err, 1e-300)
+
+
+def test_cond_estimate_tracks_condition_number():
+    m, n = 2048, 16
+    prob = generate_problem(jax.random.key(5), m, n, cond=1e8, beta=1e-8)
+    factor, _ = SketchedFactor.build(prob.A, jax.random.key(6))
+    _, _, cond_R = certify_lib.factor_spectrum(factor)
+    assert 1e7 < float(cond_R) < 1e9  # κ(R) ≈ κ(A) up to (1±ε) factors
+
+
+# --------------------------------------------------------------------------
+# extend_rows exactness (the escalation primitive)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_extend_rows_bit_equal_to_scratch(kind):
+    """Extending a stored B = SA appends ONLY the new rows, yet produces
+    bit-for-bit the sketch the escalated operator computes from scratch —
+    including a second, nested escalation."""
+    m, n, d, extra = 640, 12, 48, 48
+    A = jax.random.normal(jax.random.key(7), (m, n))
+    op = sketch_lib.sample(kind, jax.random.key(8), d, m)
+    B = op.apply_op(A)
+    op2 = op.extend_rows(jax.random.key(9), extra)
+    assert op2.d == d + extra and op2.m == m
+    B2 = op2.extend_sketch(B, A)
+    assert jnp.array_equal(B2, op2.apply_op(A))
+    # nested escalation keeps the contract
+    op3 = op2.extend_rows(jax.random.key(10), 2 * extra)
+    assert jnp.array_equal(op3.extend_sketch(B2, A), op3.apply_op(A))
+    # the stacked operator still is an expectation-isometry: E[SᵀS] = I
+    # (spot-check the dense matrix's column norms statistically)
+    Sd = op3.as_dense()
+    col_sq = jnp.sum(Sd * Sd, axis=0)
+    assert float(jnp.abs(jnp.mean(col_sq) - 1.0)) < 0.2
+
+
+def test_extend_rows_improves_embedding():
+    """Escalation must actually buy distortion: the stacked operator at
+    2d rows embeds like a fresh 2d-row sketch, not like the d-row one."""
+    m, n, d = 2048, 32, 40  # aggressive: d barely above n
+    A = jax.random.normal(jax.random.key(11), (m, n))
+    op = sketch_lib.sample("countsketch", jax.random.key(12), d, m)
+    eps_before = true_subspace_distortion(op, A)
+    op2 = op.extend_rows(jax.random.key(13), 3 * d)
+    eps_after = true_subspace_distortion(op2, A)
+    assert eps_after < 0.75 * eps_before
+
+
+def test_factor_extend_ridge_augmented():
+    """Ridge escalation extends the DATA block of blockdiag(S, I) and
+    moves the exact √λ·I tail down unchanged — still bit-equal to the
+    escalated operator applied from scratch."""
+    m, n, lam = 800, 10, 0.3
+    A = jax.random.normal(jax.random.key(14), (m, n))
+    A_aug = linop.TikhonovAugmented.wrap(A, lam)
+    factor, op, B = SketchedFactor.build_full(A_aug, jax.random.key(15))
+    factor2, op2, B2 = factor.extend(A_aug, op, jax.random.key(16), op.inner.d, B=B)
+    assert jnp.array_equal(B2, op2.apply_op(A_aug))
+    assert factor2.sketch_size == B2.shape[0]
+    # the exact identity tail is preserved verbatim at the bottom
+    assert jnp.array_equal(B2[-n:], B[-n:])
+
+
+def test_factor_extend_without_stored_b():
+    """B=None reconstructs Q·R — exact to rounding, same escalated op."""
+    m, n = 600, 8
+    A = jax.random.normal(jax.random.key(17), (m, n))
+    factor, op, B = SketchedFactor.build_full(A, jax.random.key(18))
+    f_a, op_a, B_a = factor.extend(A, op, jax.random.key(19), 16, B=B)
+    f_b, op_b, B_b = factor.extend(A, op, jax.random.key(19), 16, B=None)
+    assert jnp.allclose(B_a, B_b, atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# The certified adaptive driver
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hard_prob():
+    return generate_problem(jax.random.key(20), 4000, 64, cond=1e10, beta=1e-10)
+
+
+def test_certified_bound_holds_vs_qr(hard_prob):
+    """Acceptance: cond=1e10 → certificate passes and its forward-error
+    bound holds against QR ground truth within 10x."""
+    x_qr = qr_solve(hard_prob.A, hard_prob.b)
+    res = lstsq(hard_prob.A, hard_prob.b, jax.random.key(21),
+                accuracy="certified")
+    cert = res.certificate
+    assert cert is not None and bool(cert.passed)
+    true_err = float(jnp.linalg.norm(res.x - x_qr))
+    bound = float(cert.error_bound)
+    # the bound holds (up to the 10x slack the probe-based ε̂ may cost)
+    assert true_err <= 10.0 * bound
+    # and certifies genuinely high accuracy on this κ=1e10 problem
+    assert bound / float(jnp.linalg.norm(res.x)) < 1e-4
+    assert float(jnp.linalg.norm(res.x - hard_prob.x_true)) < 1e-4
+    assert float(cert.cond_R) > 1e9  # the certificate exposes the danger
+
+
+def test_certified_escalates_without_resketching(hard_prob, monkeypatch):
+    """Acceptance: an adversarially small initial sketch must escalate
+    sketch size AND method, and A must be sketched exactly once per
+    escalation (never re-sketched from scratch) — pinned by counting the
+    2-D (matrix) sketch applies at the operator layer."""
+    matrix_applies = []
+    real_apply = sketch_lib.CountSketch.apply
+
+    def counting_apply(self, M, *, backend="auto"):
+        if getattr(M, "ndim", 1) == 2:
+            matrix_applies.append(M.shape)
+        return real_apply(self, M, backend=backend)
+
+    monkeypatch.setattr(sketch_lib.CountSketch, "apply", counting_apply)
+
+    n = hard_prob.A.shape[1]
+    res = lstsq(hard_prob.A, hard_prob.b, jax.random.key(22),
+                accuracy="certified", sketch_size=n + 2)
+    cert = res.certificate
+    assert bool(cert.passed)
+    assert cert.escalations >= 1  # the tiny sketch could not certify
+    assert cert.sketch_rows > n + 2  # grew
+    assert res.method != "saa"  # climbed the ladder
+    # one initial sketch of A + exactly one extra-rows sketch per
+    # escalation; any full re-sketch would add one more 2-D apply
+    assert len(matrix_applies) == 1 + cert.escalations
+    # every post-initial apply sketched the full row space through a
+    # FRESH block, never by re-running the stacked operator end to end
+    assert all(shape[0] == hard_prob.A.shape[0] for shape in matrix_applies)
+
+
+def test_certified_rejects_forced_method(hard_prob):
+    with pytest.raises(ValueError, match="certified"):
+        lstsq(hard_prob.A, hard_prob.b, jax.random.key(23),
+              accuracy="certified", method="saa")
+    with pytest.raises(ValueError, match="PRNG key"):
+        lstsq(hard_prob.A, hard_prob.b, accuracy="certified")
+
+
+def test_certified_explicit_slo_target():
+    """An explicit certified_rtol acts as the accuracy SLO: loose targets
+    certify the first rung, absurd ones fail with passed=False rather
+    than looping forever."""
+    A = jax.random.normal(jax.random.key(24), (2000, 16))
+    b = jax.random.normal(jax.random.key(25), (2000,))
+    res = lstsq(A, b, jax.random.key(26), accuracy="certified",
+                certified_rtol=1e-3)
+    assert bool(res.certificate.passed)
+    assert res.method == "saa"  # first rung suffices for a loose SLO
+    res2 = lstsq(A, b, jax.random.key(27), accuracy="certified",
+                 certified_rtol=1e-300)
+    assert res2.certificate is not None and not bool(res2.certificate.passed)
+
+
+def test_certified_never_densifies_sparse_inputs():
+    """The dense-QR fallback rung is for dense inputs only: BCOO is
+    *materializable* but an out-of-core todense() is not a fallback —
+    sparse/matrix-free ladders stop at the fossils rung."""
+    from jax.experimental.sparse import BCOO
+
+    A = jax.random.normal(jax.random.key(50), (2000, 16))
+    b = jax.random.normal(jax.random.key(51), (2000,))
+    res = lstsq(BCOO.fromdense(A), b, jax.random.key(52),
+                accuracy="certified", certified_rtol=1e-300)
+    assert res.method != "direct"  # exhausted the ladder without densifying
+    assert not bool(res.certificate.passed)
+
+
+# --------------------------------------------------------------------------
+# Ridge auto-selection regression + near-square routing (satellite bugfixes)
+# --------------------------------------------------------------------------
+
+
+def test_ridge_selection_uses_data_shape():
+    """m=3n sits below the m ≥ 4n sketching regime, so auto must pick
+    ``direct`` — but the augmented ridge shape (m+n = 4n) used to sneak
+    past the regime test and pick a sketched solver."""
+    m, n = 864, 288  # big enough to clear the flop cutoff
+    assert select_method(m, n) == "direct"
+    assert select_method(m + n, n) != "direct"  # the pre-fix misroute
+    A = jax.random.normal(jax.random.key(28), (m, n))
+    b = jax.random.normal(jax.random.key(29), (m,))
+    res = lstsq(A, b, jax.random.key(30), reg=0.7)
+    assert res.method == "direct"
+    x_ridge = jnp.linalg.solve(A.T @ A + 0.7 * jnp.eye(n), A.T @ b)
+    assert float(jnp.linalg.norm(res.x - x_ridge) / jnp.linalg.norm(x_ridge)) < 1e-8
+
+
+def test_default_sketch_size_clamped_to_m():
+    assert default_sketch_size(64, 64) == 64  # used to return 65 > m
+    assert default_sketch_size(100, 90) == 90  # underdetermined: s ≤ m
+    assert default_sketch_size(64, 4000) == 256  # regular regime unchanged
+
+
+def test_near_square_routes_to_direct_or_lsqr():
+    # square / nearly-square: no sketch can shrink the row space
+    assert select_method(4096, 4096) == "direct"
+    assert select_method(4096, 4095) == "direct"
+    assert select_method(4096, 4096, has_key=False) == "lsqr"
+    assert select_method(4096, 4096, matrix_free=True) == "lsqr"
+
+
+# --------------------------------------------------------------------------
+# Tolerance-forwarding audit (satellite bugfix)
+# --------------------------------------------------------------------------
+
+
+def test_forced_method_rejects_unsupported_tolerances():
+    A = jax.random.normal(jax.random.key(31), (200, 8))
+    b = jax.random.normal(jax.random.key(32), (200,))
+    key = jax.random.key(33)
+    with pytest.raises(ValueError, match="does not consume"):
+        lstsq(A, b, key, method="direct", atol=1e-8)
+    with pytest.raises(ValueError, match="does not consume"):
+        lstsq(A, b, key, method="fossils", iter_lim=5)
+    with pytest.raises(ValueError, match="does not consume"):
+        lstsq(A, b, key, method="fossils", atol=1e-8, btol=1e-8)
+    # the supported subsets still flow through (and solve accurately)
+    x_qr = qr_solve(A, b)
+
+    def relerr(res):
+        return float(jnp.linalg.norm(res.x - x_qr) / jnp.linalg.norm(x_qr))
+
+    assert relerr(lstsq(A, b, key, method="fossils", steptol=1e-12)) < 1e-8
+    assert relerr(lstsq(A, b, key, method="sap", steptol=1e-12)) < 1e-8
+
+
+def test_auto_selection_drops_unsupported_tolerances():
+    """Under method='auto' the selected solver may not consume every knob;
+    they are dropped explicitly instead of raising (or being silently
+    absorbed, as before the audit)."""
+    A = jax.random.normal(jax.random.key(34), (200, 8))
+    b = jax.random.normal(jax.random.key(35), (200,))
+    res = lstsq(A, b, jax.random.key(36), atol=1e-8, iter_lim=7)
+    assert res.method == "direct"  # small problem; knobs were dropped
+    assert int(res.itn) == 0
+
+
+# --------------------------------------------------------------------------
+# Session + streaming trust layer
+# --------------------------------------------------------------------------
+
+
+def test_session_certify_and_solution_bound():
+    k1, k2 = jax.random.split(jax.random.key(37))
+    A = jax.random.normal(k1, (1500, 24))
+    b = jax.random.normal(k2, (1500,))
+    solver = SketchedSolver(A, jax.random.key(38))
+    cert = solver.certify()
+    assert bool(cert.passed) and jnp.isnan(cert.error_bound)
+    assert solver.certificate is cert
+    res = solver.solve(b)
+    full = solver.certify(b, res)
+    err = float(jnp.linalg.norm(res.x - qr_solve(A, b)))
+    assert err <= 10.0 * float(full.error_bound)
+    with pytest.raises(ValueError, match="together"):
+        solver.certify(b)
+
+
+def test_session_update_rows_invalidates_and_recertifies():
+    k1, k2 = jax.random.split(jax.random.key(39))
+    A = jax.random.normal(k1, (1200, 16))
+    rows = jax.random.normal(k2, (3, 16))
+    idx = jnp.array([0, 7, 1100])
+
+    plain = SketchedSolver(A, jax.random.key(40))
+    plain.certify()
+    plain.update_rows(idx, rows)
+    assert plain.certificate is None  # drifted: trust must be re-established
+
+    auto = SketchedSolver(A, jax.random.key(41), auto_recertify=True)
+    auto.update_rows(idx, rows)
+    assert auto.recertifications >= 1
+    assert auto.certificate is not None and bool(auto.certificate.passed)
+
+
+def test_session_recertify_escalates_on_adversarial_drift():
+    """Rewriting rows with a much heavier-tailed distribution degrades a
+    too-small embedding; auto-recertify must escalate the sketch in place
+    (stats move, no new draw) until the probe passes again."""
+    m, n = 2048, 32
+    A = jax.random.normal(jax.random.key(42), (m, n))
+    solver = SketchedSolver(
+        A, jax.random.key(43), sketch_size=n + 2, auto_recertify=True
+    )
+    idx = jnp.arange(64)
+    rows = 1e3 * jax.random.normal(jax.random.key(44), (64, n))
+    solver.update_rows(idx, rows)
+    assert solver.certificate is not None
+    if solver.escalations:  # tiny sketches fail the probe and must grow
+        assert solver.sketch_size > n + 2
+        assert isinstance(solver._sketch_op, sketch_lib.StackedSketch)
+        # the escalated factor still matches a from-scratch sketch
+        A_new = A.at[idx].set(rows)
+        assert jnp.allclose(
+            solver._B, solver._sketch_op.apply_op(A_new), atol=1e-9
+        )
+        assert float(
+            jnp.linalg.norm(
+                solver.solve(jnp.ones(m)).x - qr_solve(A_new, jnp.ones(m))
+            )
+        ) < 1e-6
+
+
+def test_streaming_certified_reuses_pass1_sketch(monkeypatch):
+    from repro.streaming import solve as stream_solve
+    from repro.streaming.sources import as_source
+
+    sketch_calls = []
+    real = stream_solve.stream_sketch
+
+    def counting_stream_sketch(*a, **kw):
+        sketch_calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(stream_solve, "stream_sketch", counting_stream_sketch)
+
+    k1, k2 = jax.random.split(jax.random.key(45))
+    A = jax.random.normal(k1, (1500, 24))
+    b = jax.random.normal(k2, (1500,))
+    res = lstsq(as_source(A, 256), b, jax.random.key(46), accuracy="certified")
+    cert = res.certificate
+    assert cert is not None and bool(cert.passed)
+    assert len(sketch_calls) == 1  # certification reused the pass-1 sketch
+    err = float(jnp.linalg.norm(res.x - qr_solve(A, b)))
+    assert err <= 10.0 * max(float(cert.error_bound), 1e-300)
+
+    # single-pass mode: the certificate's fused pass fills the
+    # diagnostics that are otherwise nan
+    res2 = stream_solve.stream_lstsq(
+        as_source(A, 256), b, jax.random.key(47),
+        method="sketch_and_solve", certify=True,
+    )
+    assert res2.certificate is not None
+    assert bool(jnp.isfinite(res2.rnorm)) and bool(jnp.isfinite(res2.arnorm))
+
+    # accuracy is validated BEFORE the stream delegation — a typo must not
+    # silently return an uncertified result
+    with pytest.raises(ValueError, match="unknown accuracy"):
+        lstsq(as_source(A, 256), b, jax.random.key(48), accuracy="certifed")

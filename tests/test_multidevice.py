@@ -6,6 +6,9 @@ import sys
 
 import pytest
 
+# Multi-process module: slow tier (see pytest.ini)
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -9,6 +9,9 @@ import pytest
 from repro.configs import smoke_config
 from repro.models import decode_step, forward, init_params, prefill
 
+# Model-zoo / multi-process / long-sweep module: slow tier (see pytest.ini)
+pytestmark = pytest.mark.slow
+
 ARCHS = [
     "llama3.2-1b",        # dense GQA, tied embeddings
     "qwen3-0.6b",         # qk-norm

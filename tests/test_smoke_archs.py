@@ -9,6 +9,9 @@ import pytest
 from repro.configs import cells, list_archs, smoke_config
 from repro.models import init_params, loss_fn, forward
 
+# Model-zoo / multi-process / long-sweep module: slow tier (see pytest.ini)
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", list_archs())
 def test_smoke_forward_and_grads(arch):

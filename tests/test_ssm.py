@@ -5,6 +5,9 @@ import pytest
 
 from repro.models.ssm import ssd_chunked
 
+# Model-zoo / multi-process / long-sweep module: slow tier (see pytest.ini)
+pytestmark = pytest.mark.slow
+
 
 def naive_recurrence(x, dt, A, B, C):
     """h_{t} = exp(dt_t A) h_{t-1} + dt_t x_t B_tᵀ;  y_t = C_t h_t."""

@@ -123,6 +123,7 @@ def test_merge_rejects_mismatched_draws(prob):
     )
 
 
+@pytest.mark.slow
 def test_sharded_sketch_psum_merge(prob):
     """The shard_map + psum assembly equals the monolithic apply (the
     collective form of the accumulator merge), for every additive kind."""
@@ -430,6 +431,7 @@ def _random_tiling(rng):
     return m, cuts
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("kind", ALL_KINDS)
 @pytest.mark.parametrize("case", range(4))
 def test_streamed_equals_monolithic_random_tiling(kind, case):

@@ -15,6 +15,9 @@ from repro.train import (
 from repro.train.checkpoint import AsyncCheckpointer, gc_checkpoints, latest_step
 from repro.train.elastic import rebalance_microbatch
 
+# Model-zoo / multi-process / long-sweep module: slow tier (see pytest.ini)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def tiny():
