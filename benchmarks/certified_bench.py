@@ -98,4 +98,13 @@ def run(m=8192, n=64, cond=1e10, beta=1e-10, seed=0):
 
     seconds = time_fn(solve_escalating)
     record("certified_escalating", seconds, solve_escalating())
+
+    # the mixed-precision tier: bf16 sketch apply, full-precision
+    # refinement; at this cond the driver escalates back to full and the
+    # row shows what the precision repair costs end to end
+    def solve_mixed():
+        return lstsq(A, b, key, accuracy="certified", precision="mixed")
+
+    seconds = time_fn(solve_mixed)
+    record("certified_mixed", seconds, solve_mixed())
     return rows

@@ -1,0 +1,151 @@
+"""Perf-regression gate over the committed BENCH_*.json trajectory.
+
+CI runs ``python -m benchmarks.run --tag ci --json`` to produce a fresh
+``BENCH_ci.json``, then ``python -m benchmarks.perf_gate BENCH_ci.json``
+compares it per-method against the newest committed trajectory point
+(``BENCH_N.json`` with the highest numeric N — ``git ls-files`` so only
+committed baselines count, never a stale working-tree file).  A method
+cell regresses when its wall time exceeds ``tolerance ×`` the baseline's
+(default 1.3).
+
+Raw wall times are useless across machines (the committed baseline ran on
+whatever container produced that PR), so by default each method's wall
+time is first normalized by the same file's ``direct`` row — the LAPACK
+QR solve, a pure-BLAS yardstick that scales with the host like every
+other cell.  ``--absolute`` compares raw seconds instead (sensible only
+on the machine that produced the baseline).
+
+Exit codes: 0 = no regression (or no committed baseline yet — the gate
+bootstraps quietly), 1 = at least one regressed cell, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+NORM_ROW = "direct"
+
+
+def committed_baselines(root: Path = REPO_ROOT) -> list[tuple[int, Path]]:
+    """(N, path) for every git-tracked BENCH_<N>.json, N numeric, ascending."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "BENCH_*.json"],
+            cwd=root, capture_output=True, text=True, check=True,
+        ).stdout
+    except (OSError, subprocess.CalledProcessError):
+        return []
+    found = []
+    for line in out.splitlines():
+        m = re.fullmatch(r"BENCH_(\d+)\.json", line.strip())
+        if m:
+            found.append((int(m.group(1)), root / line.strip()))
+    return sorted(found)
+
+
+def load_rows(path: Path) -> dict[str, dict]:
+    with open(path) as fh:
+        payload = json.load(fh)
+    rows = {r["name"]: r for r in payload.get("rows", [])}
+    if not rows:
+        raise ValueError(f"{path}: no rows")
+    return rows
+
+
+def compare(
+    fresh: dict[str, dict],
+    base: dict[str, dict],
+    *,
+    tolerance: float,
+    normalize: bool,
+) -> list[str]:
+    """Human-readable report lines for every regressed method cell."""
+    scale_f = scale_b = 1.0
+    if normalize:
+        if NORM_ROW not in fresh or NORM_ROW not in base:
+            raise ValueError(
+                f"normalization row {NORM_ROW!r} missing "
+                "(pass --absolute to compare raw seconds)"
+            )
+        scale_f = fresh[NORM_ROW]["wall_s"]
+        scale_b = base[NORM_ROW]["wall_s"]
+    failures = []
+    for name in sorted(set(fresh) & set(base)):
+        if normalize and name == NORM_ROW:
+            continue  # the yardstick is 1.0 vs 1.0 by construction
+        t_f = fresh[name]["wall_s"] / scale_f
+        t_b = base[name]["wall_s"] / scale_b
+        if t_b <= 0:
+            continue
+        ratio = t_f / t_b
+        unit = "x direct" if normalize else "s"
+        if ratio > tolerance:
+            failures.append(
+                f"REGRESSION {name}: {t_f:.4g}{unit} vs baseline "
+                f"{t_b:.4g}{unit} ({ratio:.2f}x > {tolerance:.2f}x)"
+            )
+        else:
+            print(f"ok {name}: {ratio:.2f}x vs baseline (tol {tolerance:.2f}x)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="fresh bench JSON (e.g. BENCH_ci.json)")
+    ap.add_argument(
+        "--baseline", default=None,
+        help="explicit baseline JSON (default: committed BENCH_N.json "
+             "with the highest N)",
+    )
+    ap.add_argument(
+        "--tolerance", type=float, default=1.3,
+        help="max allowed fresh/baseline wall-time ratio per method cell "
+             "(default 1.3)",
+    )
+    ap.add_argument(
+        "--absolute", action="store_true",
+        help="compare raw seconds instead of direct-row-normalized times",
+    )
+    args = ap.parse_args(argv)
+
+    fresh_path = Path(args.fresh)
+    if not fresh_path.exists():
+        print(f"perf_gate: fresh bench file {fresh_path} not found", file=sys.stderr)
+        return 2
+
+    if args.baseline is not None:
+        base_path = Path(args.baseline)
+        if not base_path.exists():
+            print(f"perf_gate: baseline {base_path} not found", file=sys.stderr)
+            return 2
+    else:
+        baselines = committed_baselines()
+        if not baselines:
+            print("perf_gate: no committed BENCH_N.json baseline yet — pass")
+            return 0
+        base_path = baselines[-1][1]
+
+    fresh = load_rows(fresh_path)
+    base = load_rows(base_path)
+    print(f"perf_gate: {fresh_path.name} vs {base_path.name} "
+          f"(tolerance {args.tolerance}x, "
+          f"{'absolute' if args.absolute else f'normalized by {NORM_ROW!r}'})")
+    failures = compare(
+        fresh, base, tolerance=args.tolerance, normalize=not args.absolute
+    )
+    for line in failures:
+        print(line, file=sys.stderr)
+    if failures:
+        print(f"perf_gate: {len(failures)} regressed cell(s)", file=sys.stderr)
+        return 1
+    print("perf_gate: pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

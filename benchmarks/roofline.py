@@ -29,8 +29,12 @@ def run(out_dir="experiments/dryrun"):
             continue
         r = c["roofline"]
         dom = r["bottleneck"]
-        t_dom = r[f"t_{dom}_s"] if dom != "collective" else r["t_collective_s"]
-        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        # Emit the time of the LABELED bottleneck so value and label agree;
+        # the unconditional max() is only the fallback for bottleneck names
+        # this report does not know a t_*_s field for.
+        t_dom = r.get(f"t_{dom}_s")
+        if t_dom is None:
+            t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
         emit(
             f"roofline/{c['arch']}/{c['shape']}",
             t_dom,

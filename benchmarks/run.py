@@ -12,9 +12,12 @@
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
 sizes (slow on 1 CPU core).  ``--json [PATH]`` additionally dumps the
 ``certified`` cell's rows (per-method wall time, forward error vs QR and
-the posterior certified-error columns) as machine-readable JSON —
-``BENCH_5.json`` by default — so the perf/accuracy trajectory is tracked
-from PR 5 on.
+the posterior certified-error columns) as machine-readable JSON so the
+perf/accuracy trajectory is tracked in git from PR 5 on.  The default
+path is ``BENCH_{tag}.json`` with ``--tag`` naming the trajectory point
+(current PR number; ``--tag ci`` for throwaway CI runs) — committed
+``BENCH_N.json`` files are what ``benchmarks/perf_gate.py`` compares
+fresh runs against.
 """
 import argparse
 import json
@@ -31,12 +34,17 @@ def main() -> None:
                     help="comma list: fig3,fig4,sketch,kernels,dist,stream,"
                          "certified,roofline")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
-    ap.add_argument("--json", nargs="?", const="BENCH_5.json", default=None,
+    ap.add_argument("--tag", default="6",
+                    help="trajectory tag naming the default JSON path "
+                         "BENCH_{tag}.json (current PR number, or 'ci')")
+    ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="write the certified cell's rows as JSON "
-                         "(default path: BENCH_5.json; implies the "
+                         "(default path: BENCH_{tag}.json; implies the "
                          "certified cell runs)")
     args = ap.parse_args()
+    if args.json == "":
+        args.json = f"BENCH_{args.tag}.json"
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):

@@ -33,14 +33,24 @@ import jax
 __all__ = [
     "BACKENDS",
     "KERNEL_BACKED_KINDS",
+    "PRECISIONS",
     "ResolvedBackend",
     "resolve",
     "resolve_backend_arg",
+    "resolve_fused",
     "default_interpret",
     "kernel_backed",
+    "kernel_blocks",
 ]
 
 BACKENDS = ("auto", "reference", "pallas")
+
+# Working precisions for the sketch/factor stage.  "full" runs everything in
+# the data dtype; "mixed" rounds the data matrix to bf16 for the sketch apply
+# (accumulating in >= f32) and leaves all refinement at full precision — the
+# certified driver escalates mixed -> full automatically when a certificate
+# fails (see core/lstsq.py).
+PRECISIONS = ("full", "mixed")
 
 # Sketch kinds whose apply has a Pallas kernel behind it.
 KERNEL_BACKED_KINDS = frozenset(
@@ -91,6 +101,33 @@ def resolve(backend: str = "auto", platform: str | None = None) -> ResolvedBacke
 def kernel_backed(kind: str) -> bool:
     """True if ``kind``'s apply dispatches to a Pallas kernel under "pallas"."""
     return kind in KERNEL_BACKED_KINDS
+
+
+def kernel_blocks(kind: str, m: int, n: int, d: int, dtype) -> dict:
+    """Autotuned block-shape kwargs for a kernel dispatch site.
+
+    Consults ``repro.kernels.autotune`` (committed cache first, roofline cost
+    model on miss) and returns kwargs splat-able into the kernel wrapper —
+    ``{}`` means "use the kernel's hand-tuned defaults", which is also the
+    answer whenever the tuner is disabled (``REPRO_AUTOTUNE=0``) or
+    unavailable.  Never raises: tuning is advisory, dispatch must not fail.
+    """
+    if os.environ.get("REPRO_AUTOTUNE", "1") == "0":
+        return {}
+    try:
+        from ..kernels.autotune import best_blocks
+
+        return best_blocks(kind, m, n, d, dtype)
+    except Exception:
+        return {}
+
+
+def resolve_fused(fused: bool | None) -> bool:
+    """Resolve the fused sketch->QR knob.  ``None`` reads ``REPRO_FUSED_QR``
+    (default off, preserving the seed pipeline's exact numerics)."""
+    if fused is None:
+        return os.environ.get("REPRO_FUSED_QR", "0") not in ("0", "", "false")
+    return bool(fused)
 
 
 def resolve_backend_arg(fn):

@@ -24,15 +24,24 @@ dense S):
 - **Condition estimate**, :func:`factor_spectrum`.  κ₂(R) = κ₂(SA) lies
   within (1±ε) factors of κ₂(A); its σ_min is also exactly the ‖R⁻¹‖₂
   the error bound needs.
-- **Forward-error bound**, :func:`error_bound`.  With Y = A R⁻¹ and
-  σ_min(Y) ≥ 1/(1+ε):  x̂ − x⋆ = R⁻¹(ẑ − z⋆) and
-  Yᵀ(b − Y ẑ) = (YᵀY)(z⋆ − ẑ), so
+- **Spectrum-floor probe**, :func:`probe_spectrum_floor`.  Gaussian
+  probes dilute a SINGLE collapsed direction of Y = A R⁻¹ by its
+  subspace fraction — exactly the failure mode of a noise-floored
+  sketch (a bf16 ``precision="mixed"`` apply at high cond).  Probing
+  R's own k weakest left singular vectors instead finds that collapse
+  deterministically: the corrupted directions of A land in R's trailing
+  subspace by construction.  Returns σ̂ ≥ σ_min(Y), sharp in the
+  collapse case.
+- **Forward-error bound**, :func:`error_bound`.  With Y = A R⁻¹:
+  x̂ − x⋆ = R⁻¹(ẑ − z⋆) and Yᵀ(b − Y ẑ) = (YᵀY)(z⋆ − ẑ), so
 
-      ‖x̂ − x⋆‖ ≤ ‖R⁻¹‖₂ · (1+ε)² · ‖Yᵀ(b − A x̂)‖ ,
+      ‖x̂ − x⋆‖ ≤ ‖Yᵀ(b − A x̂)‖ / (σ_min(Y)² · σ_min(R)) ,
 
-  one matvec + one rmatvec + one triangular solve.  This is a rigorous
-  bound given a true ε; with the probed ε̂ it inherits the probe's
-  w.h.p. qualifier.
+  one matvec + one rmatvec + one triangular solve, with σ_min(Y)
+  estimated as min(1 − ε̂, σ̂) from both probes.  This is a rigorous
+  bound given a true σ_min(Y); with probed estimates it inherits their
+  w.h.p. qualifier (the floor probe removes the single-direction blind
+  spot that qualifier used to hide).
 
 :class:`Certificate` is a small pytree attached to
 ``SolveResult.certificate``; ``passed`` folds the distortion test and
@@ -53,6 +62,7 @@ from .precond import SketchedFactor
 __all__ = [
     "Certificate",
     "probe_distortion",
+    "probe_spectrum_floor",
     "factor_spectrum",
     "error_bound",
     "certify",
@@ -86,6 +96,7 @@ class Certificate(NamedTuple):
     passed: jax.Array  # bool: distortion ok AND bound within target
     sketch_rows: int = 0  # rows of S when the certificate was issued
     escalations: int = 0  # escalation steps taken before this certificate
+    precision: str = "full"  # sketch precision the certified factor was built at
 
 
 def probe_distortion(
@@ -108,6 +119,29 @@ def probe_distortion(
     return jnp.max(jnp.abs(ratios - 1.0))
 
 
+def probe_spectrum_floor(A, factor: SketchedFactor, *, k: int = 4):
+    """σ̂ = min_j ‖A R⁻¹ u_j‖ over R's k weakest left singular vectors.
+
+    A deterministic UPPER estimate of σ_min(A R⁻¹) that is sharp exactly
+    where Gaussian probes are blind: a factor whose weakness is confined
+    to a few directions.  That is the signature of a noise-floored
+    sketch — e.g. a ``precision="mixed"`` bf16 apply whose rounding noise
+    exceeds A's trailing singular values: every such direction of A
+    collapses onto R's own trailing subspace, so probing R's smallest
+    singular vectors finds the damage with probability one, while an
+    isotropic probe dilutes it by the subspace fraction.  For a healthy
+    factor the probed directions behave like any other: σ̂ ∈
+    [1/(1+ε), 1/(1−ε)], no false alarm.  Cost: one n×n SVD + k matvecs.
+    """
+    A = linop.as_operator(A)
+    n = factor.n
+    kk = max(1, min(int(k), n))
+    U, _, _ = jnp.linalg.svd(factor.R)  # descending singular values
+    W = U[:, n - kk:]
+    Yw = A.matmat(factor.precondition(W))
+    return jnp.min(jnp.linalg.norm(Yw, axis=0))
+
+
 def factor_spectrum(factor: SketchedFactor):
     """(σ_max, σ_min, κ₂) of R — one SVD of the n×n triangular factor.
 
@@ -124,24 +158,34 @@ def factor_spectrum(factor: SketchedFactor):
 def error_bound(A, b, x, factor: SketchedFactor, distortion) -> tuple:
     """Posterior ``(rnorm, whitened_arnorm, bound)`` at a solution x̂.
 
-    ``bound ≥ ‖x̂ − x⋆‖`` whenever ``distortion`` upper-bounds the true
-    embedding distortion of S on range(A) (see module docstring for the
-    two-line proof).  Cost: one matvec, one rmatvec, one triangular
-    solve, one n×n SVD.
+    ``bound ≥ ‖x̂ − x⋆‖`` whenever the σ_min(Y) estimate it rests on is
+    not an over-estimate (see module docstring).  σ_min(Y) is estimated
+    as ``min(1 − distortion, probe_spectrum_floor(A, factor))`` — the
+    isotropic probe's view AND the deterministic trailing-subspace
+    probe's, so single-direction collapse (the mixed-precision failure
+    mode) is priced in instead of diluted away.  Cost: one matvec, one
+    rmatvec, one triangular solve, two n×n SVDs, k floor matvecs.
     """
     A = linop.as_operator(A)
     _, smin, _ = factor_spectrum(factor)
-    return _error_bound_parts(A, b, x, factor, distortion, smin)
+    floor = probe_spectrum_floor(A, factor)
+    return _error_bound_parts(A, b, x, factor, distortion, smin, floor)
 
 
-def _error_bound_parts(A, b, x, factor, distortion, smin):
+def _error_bound_parts(A, b, x, factor, distortion, smin, sigma_floor=None):
     r = b - A.matvec(x)
     rnorm = jnp.linalg.norm(r)
     wg = factor.rt_solve(A.rmatvec(r))
     wg_norm = jnp.linalg.norm(wg)
     tiny = jnp.finfo(factor.R.dtype).tiny
     eps = jnp.clip(distortion, 0.0, 0.999)
-    bound = (1.0 + eps) ** 2 * wg_norm / jnp.maximum(smin, tiny)
+    # ‖x̂−x⋆‖ = ‖R⁻¹(YᵀY)⁻¹Yᵀr̂‖ ≤ ‖Yᵀr̂‖ / (σ_min(Y)² σ_min(R)); both
+    # σ_min(Y) estimates are upper estimates, take the sharper one.
+    sigma_w = 1.0 - eps
+    if sigma_floor is not None:
+        sigma_w = jnp.minimum(sigma_w, sigma_floor)
+    sigma_w = jnp.maximum(sigma_w, tiny)
+    bound = wg_norm / (sigma_w**2 * jnp.maximum(smin, tiny))
     return rnorm, wg_norm, bound
 
 
@@ -171,6 +215,7 @@ def certify(
     max_distortion: float = DEFAULT_MAX_DISTORTION,
     sketch_rows: int | None = None,
     escalations: int = 0,
+    precision: str = "full",
 ) -> Certificate:
     """Issue a :class:`Certificate` for ``x ≈ argmin‖Ax − b‖`` (or, with
     ``b = x = None``, for the embedding alone).
@@ -196,10 +241,26 @@ def certify(
             whitened_arnorm=nan, error_bound=nan, rel_error_bound=nan,
             target=nan, passed=emb_ok,
             sketch_rows=int(sketch_rows or factor.sketch_size),
-            escalations=int(escalations),
+            escalations=int(escalations), precision=precision,
         )
 
-    rnorm, wg_norm, bound = _error_bound_parts(A, b, x, factor, eps_hat, smin)
+    if precision == "mixed":
+        # Sampling probes cannot price a low-precision sketch: rounding
+        # noise floors R's trailing subspace, hiding A's weak directions
+        # in a span no O(1) probe set covers (isotropic probes dilute the
+        # collapse, R-aligned probes see only the noise).  Certifying a
+        # mixed factor therefore pays ONE exact whitened-spectrum pass —
+        # σ_min(A R⁻¹) by SVD, O(mn²), the same order as the full-
+        # precision apply the bf16 sketch skipped.  That is the honest
+        # price of trusting a cheap sketch at high cond; at moderate cond
+        # the check passes and the mixed saving stands.
+        Y = factor.materialize_whitened(A)
+        floor = jnp.linalg.svd(Y, compute_uv=False)[-1]
+    else:
+        floor = probe_spectrum_floor(A, factor)
+    rnorm, wg_norm, bound = _error_bound_parts(
+        A, b, x, factor, eps_hat, smin, floor
+    )
     xnorm = jnp.linalg.norm(x)
     rel = bound / jnp.maximum(xnorm, jnp.finfo(dtype).tiny)
     if target is None:
@@ -212,7 +273,7 @@ def certify(
         whitened_arnorm=wg_norm, error_bound=bound, rel_error_bound=rel,
         target=tgt, passed=passed,
         sketch_rows=int(sketch_rows or factor.sketch_size),
-        escalations=int(escalations),
+        escalations=int(escalations), precision=precision,
     )
 
 
@@ -240,7 +301,9 @@ def build_certificate(
     smax, smin, cond_R = factor_spectrum(factor)
     tiny = jnp.finfo(dtype).tiny
     eps = jnp.clip(distortion, 0.0, 0.999)
-    bound = (1.0 + eps) ** 2 * whitened_arnorm / jnp.maximum(smin, tiny)
+    # no A here (streaming computes its probes in its own passes), so the
+    # σ_min(Y) estimate is the isotropic probe's 1 − ε̂ alone
+    bound = whitened_arnorm / ((1.0 - eps) ** 2 * jnp.maximum(smin, tiny))
     rel = bound / jnp.maximum(xnorm, tiny)
     if target is None:
         tgt = _adaptive_target(dtype, cond_R, rnorm, smax, xnorm)

@@ -221,7 +221,7 @@ def heavy_ball_refine(
     jax.jit,
     static_argnames=(
         "sketch", "sketch_size", "damping", "momentum", "atol", "btol",
-        "steptol", "iter_lim", "backend", "history",
+        "steptol", "iter_lim", "backend", "precision", "fused", "history",
     ),
 )
 def iterative_sketching(
@@ -238,6 +238,8 @@ def iterative_sketching(
     steptol: float | None = None,
     iter_lim: int = 100,
     backend: str = "auto",
+    precision: str = "full",
+    fused: bool | None = None,
     history: bool = False,
 ) -> SolveResult:
     """Iterative sketching with damping + momentum (forward stable).
@@ -268,7 +270,8 @@ def iterative_sketching(
         beta = momentum
 
     factor, op = SketchedFactor.build(
-        A, key, sketch=sketch, sketch_size=s, backend=backend
+        A, key, sketch=sketch, sketch_size=s, backend=backend,
+        precision=precision, fused=fused,
     )
     x0 = factor.sketch_and_solve(op.apply(b, backend=backend))
     return heavy_ball_refine(
@@ -407,7 +410,7 @@ def default_inner_iter_lim(beta: float, dtype=jnp.float64) -> int:
     jax.jit,
     static_argnames=(
         "sketch", "sketch_size", "refine_steps", "inner_iter_lim", "damping",
-        "momentum", "steptol", "backend", "history",
+        "momentum", "steptol", "backend", "precision", "fused", "history",
     ),
 )
 def fossils(
@@ -423,6 +426,8 @@ def fossils(
     momentum: float | None = None,
     steptol: float | None = None,
     backend: str = "auto",
+    precision: str = "full",
+    fused: bool | None = None,
     history: bool = False,
 ) -> SolveResult:
     """FOSSILS-style sketch-and-precondition with iterative refinement.
@@ -454,7 +459,8 @@ def fossils(
         inner_iter_lim = default_inner_iter_lim(beta, A.dtype)
 
     factor, op = SketchedFactor.build(
-        A, key, sketch=sketch, sketch_size=s, backend=backend
+        A, key, sketch=sketch, sketch_size=s, backend=backend,
+        precision=precision, fused=fused,
     )
     x0 = factor.sketch_and_solve(op.apply(b, backend=backend))
     return fossils_refine(

@@ -75,6 +75,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from . import backend as backend_lib
 from . import certify as certify_lib
 from . import linop
 from .direct import qr_solve
@@ -139,6 +140,12 @@ TOL_SUPPORT = {
 # The certified tier's escalation ladder: each failed certificate both
 # grows the sketch (appended rows, stored B reused) and climbs one rung.
 CERTIFIED_LADDER = ("saa", "iterative", "fossils", "direct")
+
+# Methods whose factor build honours ``precision=``/``fused=`` (the sketched
+# solvers that go through ``SketchedFactor.build``).  ``sap``/``lsqr``/
+# ``direct`` never sketch-and-factor this way: forcing one of them together
+# with ``precision="mixed"`` raises, auto-selection falls back to full.
+PRECISION_SUPPORT = frozenset({"saa", "iterative", "fossils"})
 
 
 def select_method(
@@ -220,6 +227,8 @@ def _certified_lstsq(
     history,
     rtol,
     n_probes,
+    precision="full",
+    fused=None,
 ):
     """The adaptive certified driver: solve → certify → escalate.
 
@@ -229,6 +238,15 @@ def _certified_lstsq(
     :data:`CERTIFIED_LADDER`.  Returns ``(result, method_name)`` for the
     first certificate that passes, else the attempt with the smallest
     posterior error bound (its certificate carries ``passed=False``).
+
+    With ``precision="mixed"`` the FIRST escalation move is a precision
+    escalation, not a size/method one: the SAME sketch operator is
+    re-applied at full precision (cheap — one sketch apply, no new QR
+    rows) and the SAME rung retried.  A bf16-rounded sketch loses the
+    embedding only through rounding, so when its certificate fails,
+    restoring precision is the targeted repair; only if the full-precision
+    retry also fails does the driver resume the size/method ladder.  Each
+    certificate records the precision its factor was built at.
     """
     m_data, n = A_in.shape
     dtype = A_op.dtype
@@ -247,13 +265,19 @@ def _certified_lstsq(
         else default_sketch_size(n, m_data)
     )
     factor, op, B = SketchedFactor.build_full(
-        A_op, k_build, sketch=sketch, sketch_size=s, backend=backend
+        A_op, k_build, sketch=sketch, sketch_size=s, backend=backend,
+        precision=precision, fused=fused,
     )
+    prec_now = precision
     escalations = 0
     best = None  # (bound, result, method) of the best failed attempt
 
-    for rung, meth in enumerate(CERTIFIED_LADDER):
-        k_probe, k_ext = jax.random.split(jax.random.fold_in(k_loop, rung))
+    rung = 0
+    attempt = 0
+    while rung < len(CERTIFIED_LADDER):
+        meth = CERTIFIED_LADDER[rung]
+        k_probe, k_ext = jax.random.split(jax.random.fold_in(k_loop, attempt))
+        attempt += 1
         if meth == "direct":
             if not dense_input:
                 # Sparse and matrix-free inputs stop at the fossils rung —
@@ -291,6 +315,7 @@ def _certified_lstsq(
         cert = certify_lib.certify(
             A_op, b_solve, res.x, factor, k_probe, n_probes=n_probes,
             target=rtol, sketch_rows=s, escalations=escalations,
+            precision=prec_now,
         )
         res = res._replace(certificate=cert)
         if bool(cert.passed):
@@ -300,6 +325,16 @@ def _certified_lstsq(
             bound = math.inf
         if best is None or bound < best[0]:
             best = (bound, res, meth)
+        if prec_now == "mixed" and meth != "direct":
+            # Precision escalation: re-apply the SAME operator at full
+            # precision (one sketch apply, no extra rows) and retry this
+            # rung — the cheapest repair when bf16 rounding alone broke
+            # the embedding.
+            B = op.apply_op(A_op, backend=backend)
+            factor = SketchedFactor.from_sketch(B)
+            prec_now = "full"
+            escalations += 1
+            continue
         # Escalate before the next sketched rung: double the sketch by
         # appending rows, capped at the data row count (beyond which a
         # sketch embeds nothing an exact method wouldn't).
@@ -311,6 +346,7 @@ def _certified_lstsq(
                 )
                 s += extra
                 escalations += 1
+        rung += 1
 
     _, res, meth = best
     return res, meth
@@ -331,12 +367,26 @@ def lstsq(
     steptol: float | None = None,
     iter_lim: int | None = None,
     backend: str = "auto",
+    precision: str = "full",
+    fused: bool | None = None,
     history: bool = False,
     certified_rtol: float | None = None,
     certified_probes: int = 8,
 ) -> SolveResult:
     """Solve min‖Ax − b‖₂ (+ λ‖x‖₂² with ``reg=λ``) with an auto-selected
     (or forced) solver.
+
+    ``precision="mixed"`` sketches a bf16-rounded copy of (dense) A with
+    ≥ f32 accumulation; refinement stays full-precision and recovers full
+    working accuracy for moderately conditioned problems, while the
+    ``accuracy="certified"`` tier *verifies* recovery and escalates back
+    to full precision when rounding broke the embedding.  ``fused`` routes
+    factor builds through the fused sketch→QR pipeline
+    (``repro.kernels.tsqr.sketch_qr``; ``None`` → ``REPRO_FUSED_QR`` env,
+    default off).  Both knobs apply to the sketched methods
+    (:data:`PRECISION_SUPPORT`); forcing any other method with
+    ``precision="mixed"`` raises, auto-selection just runs it at full
+    precision.
 
     ``A``: dense array, BCOO sparse matrix, or ``linop.LinearOperator``.
     ``atol``/``btol``/``steptol``/``iter_lim`` left as ``None`` use each
@@ -356,6 +406,10 @@ def lstsq(
     """
     if accuracy not in ACCURACIES:
         raise ValueError(f"unknown accuracy {accuracy!r}; have {ACCURACIES}")
+    if precision not in backend_lib.PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; have {backend_lib.PRECISIONS}"
+        )
     if callable(getattr(A, "tiles", None)):
         # Row-streamed (out-of-core) input: delegate to the two-pass
         # streaming drivers.  Lazy import — repro.streaming imports this
@@ -411,6 +465,7 @@ def lstsq(
             A_in, A_op, b_solve, key, sketch=sketch,
             sketch_size=sketch_size, backend=backend, tol=tol,
             history=history, rtol=certified_rtol, n_probes=certified_probes,
+            precision=precision, fused=fused,
         )
         if reg is not None:
             rnorm, arnorm = _ridge_diagnostics(
@@ -442,6 +497,16 @@ def lstsq(
         for k in unsupported:
             tol.pop(k)
     sk = dict(sketch=sketch, sketch_size=sketch_size, backend=backend)
+    if method in PRECISION_SUPPORT:
+        sk.update(precision=precision, fused=fused)
+    elif precision != "full":
+        if forced:
+            raise ValueError(
+                f"method {method!r} does not sketch through "
+                "SketchedFactor.build and cannot honour precision="
+                f"{precision!r}; supported: {sorted(PRECISION_SUPPORT)}"
+            )
+        precision = "full"  # auto-selected a non-sketched method: run full
 
     if method == "direct":
         res = _direct_result(linop.ensure_dense(A_op, who="method='direct'"),

@@ -29,10 +29,53 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from . import backend as backend_lib
 from . import linop
 from . import sketch as sketch_lib
 
 __all__ = ["SketchedFactor", "default_sketch_size", "distortion"]
+
+
+def _lowp_operator(A, use_pallas: bool):
+    """bf16-rounded copy of a dense(-backed) operator for the mixed sketch.
+
+    Under pallas the bf16 array feeds the kernels directly (they accumulate
+    in f32 and now *return* f32 for half inputs); under the reference
+    backend the data is rounded to bf16 then upcast so XLA matmuls also
+    accumulate in ≥ f32.  Only dense data admits the cast — sparse/custom
+    operators raise, and the caller (or the certified driver) falls back to
+    ``precision="full"``.
+    """
+
+    def cast(arr):
+        low = arr.astype(jnp.bfloat16)
+        return low if use_pallas else low.astype(jnp.float32)
+
+    if isinstance(A, linop.DenseOperator):
+        return linop.DenseOperator(A=cast(A.A))
+    if isinstance(A, linop.TikhonovAugmented) and isinstance(
+        A.op, linop.DenseOperator
+    ):
+        return linop.TikhonovAugmented.wrap(cast(A.op.A), A.reg)
+    raise ValueError(
+        "precision='mixed' needs a dense data matrix (or Tikhonov-augmented "
+        f"dense); got {type(A).__name__}"
+    )
+
+
+def _sketch_apply(op, A, *, backend: str, precision: str):
+    """B = S·A honouring ``precision`` — the unfused sketch-apply stage.
+
+    Mixed precision rounds the data to bf16 before the apply and returns B
+    in A's working dtype: the *sketch* is cheap/low-precision, everything
+    downstream (QR, refinement, certificates) stays full precision.
+    """
+    A = linop.as_operator(A)
+    if precision == "mixed":
+        rb = backend_lib.resolve(backend)
+        B = op.apply_op(_lowp_operator(A, rb.use_pallas), backend=backend)
+        return B.astype(A.dtype)
+    return op.apply_op(A, backend=backend)
 
 
 def default_sketch_size(n: int, m: int) -> int:
@@ -87,6 +130,8 @@ class SketchedFactor(NamedTuple):
         sketch: str = "clarkson_woodruff",
         sketch_size: int | None = None,
         backend: str = "auto",
+        precision: str = "full",
+        fused: bool | None = None,
     ):
         """Draw S, sketch A and factor: returns ``(factor, op)``.
 
@@ -96,9 +141,17 @@ class SketchedFactor(NamedTuple):
         The sketch operator ``op`` is returned so callers can sketch the
         right-hand side (``op.apply(b)`` → warm start) or re-sketch a
         perturbed matrix (the SAA fallback) with the SAME S.
+
+        ``precision="mixed"`` sketches a bf16-rounded copy of a *dense* A
+        (accumulating in ≥ f32); the factor comes back in A's dtype for the
+        refinement loops, which recover — and the certificates verify —
+        full working accuracy.  ``fused`` routes the build through the
+        fused ``sketch_qr`` pipeline (``None`` → ``REPRO_FUSED_QR`` env,
+        default off).
         """
         factor, op, _ = cls.build_full(
-            A, key, sketch=sketch, sketch_size=sketch_size, backend=backend
+            A, key, sketch=sketch, sketch_size=sketch_size, backend=backend,
+            precision=precision, fused=fused,
         )
         return factor, op
 
@@ -111,11 +164,17 @@ class SketchedFactor(NamedTuple):
         sketch: str = "clarkson_woodruff",
         sketch_size: int | None = None,
         backend: str = "auto",
+        precision: str = "full",
+        fused: bool | None = None,
     ):
         """:meth:`build` that also returns the assembled sketch:
         ``(factor, op, B)``.  The adaptive certified driver keeps B so a
         later :meth:`extend` reuses the stored rows bit-for-bit instead of
         re-sketching A."""
+        if precision not in backend_lib.PRECISIONS:
+            raise ValueError(
+                f"unknown precision {precision!r}; have {backend_lib.PRECISIONS}"
+            )
         A = linop.as_operator(A)
         if isinstance(A, linop.TikhonovAugmented):
             # Structured embedding blockdiag(S, I): sketch the data rows,
@@ -138,7 +197,12 @@ class SketchedFactor(NamedTuple):
                 else default_sketch_size(n, m)
             )
             op = sketch_lib.sample(sketch, key, s, m, dtype=A.dtype)
-        B = op.apply_op(A, backend=backend)
+        if backend_lib.resolve_fused(fused):
+            from ..kernels.tsqr import sketch_qr  # kernels import core
+
+            Q, R, B = sketch_qr(op, A, backend=backend, precision=precision)
+            return cls(Q=Q, R=R), op, B
+        B = _sketch_apply(op, A, backend=backend, precision=precision)
         return cls.from_sketch(B), op, B
 
     @classmethod

@@ -88,6 +88,8 @@ def _solve_with_factor(
         "atol",
         "btol",
         "backend",
+        "precision",
+        "fused",
         "history",
     ),
 )
@@ -105,6 +107,8 @@ def saa_sas(
     materialize_y: bool | None = None,
     use_fallback: bool = True,
     backend: str = "auto",
+    precision: str = "full",
+    fused: bool | None = None,
     history: bool = False,
 ) -> SolveResult:
     """Solve min‖Ax − b‖ by Sketch-and-Apply (paper Algorithm 1).
@@ -131,7 +135,8 @@ def saa_sas(
     )
 
     factor, op = SketchedFactor.build(
-        A, k_sketch, sketch=sketch, sketch_size=sketch_size, backend=backend
+        A, k_sketch, sketch=sketch, sketch_size=sketch_size, backend=backend,
+        precision=precision, fused=fused,
     )
     c = op.apply(b, backend=backend)
     x, res = _solve_with_factor(A, b, factor, c, **kw)

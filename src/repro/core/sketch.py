@@ -70,6 +70,13 @@ def _kernels():
     return kernels
 
 
+def _tuned_blocks(kind: str, A, d: int) -> dict:
+    """Autotuned block kwargs for a pallas dispatch (``{}`` = kernel defaults)."""
+    m = A.shape[0]
+    n = A.shape[1] if A.ndim > 1 else 1
+    return backend_lib.kernel_blocks(kind, m, n, d, A.dtype)
+
+
 def fwht(x: jax.Array, axis: int = 0) -> jax.Array:
     """Unnormalized fast Walsh–Hadamard transform along ``axis``.
 
@@ -280,8 +287,9 @@ class GaussianSketch(_OperatorApply):
     def apply(self, A, *, backend: str = "auto"):
         rb = backend_lib.resolve(backend)
         if rb.use_pallas:
+            blocks = _tuned_blocks("gaussian", A, self.d)
             return _kernels().fused_gaussian_sketch(
-                A, self.key, self.d, interpret=rb.interpret
+                A, self.key, self.d, interpret=rb.interpret, **blocks
             )
         A2, vec = _as_2d(A)
         S = self.S if self.S is not None else self.as_dense().astype(A2.dtype)
@@ -334,7 +342,10 @@ class UniformDenseSketch(_OperatorApply):
     def apply(self, A, *, backend: str = "auto"):
         rb = backend_lib.resolve(backend)
         if rb.use_pallas:
-            return _kernels().sketch_matmul(self.S, A, interpret=rb.interpret)
+            blocks = _tuned_blocks("sketch_matmul", A, self.d)
+            return _kernels().sketch_matmul(
+                self.S, A, interpret=rb.interpret, **blocks
+            )
         A2, vec = _as_2d(A)
         return _maybe_squeeze(self.S @ A2, vec)
 
@@ -384,8 +395,9 @@ class SRHTSketch(_OperatorApply):
     def apply(self, A, *, backend: str = "auto"):
         rb = backend_lib.resolve(backend)
         if rb.use_pallas:
+            blocks = _tuned_blocks("srht", A, self.d)
             return _kernels().srht_apply(
-                A, self.signs, self.rows, self.d, interpret=rb.interpret
+                A, self.signs, self.rows, self.d, interpret=rb.interpret, **blocks
             )
         A2, vec = _as_2d(A)
         dtype = A2.dtype
@@ -463,8 +475,9 @@ class CountSketch(_OperatorApply):
     def apply(self, A, *, backend: str = "auto"):
         rb = backend_lib.resolve(backend)
         if rb.use_pallas:
+            blocks = _tuned_blocks("countsketch", A, self.d)
             return _kernels().countsketch_apply(
-                A, self.buckets, self.signs, self.d, interpret=rb.interpret
+                A, self.buckets, self.signs, self.d, interpret=rb.interpret, **blocks
             )
         A2, vec = _as_2d(A)
         contrib = self.signs[:, None].astype(A2.dtype) * A2

@@ -26,8 +26,22 @@ from .sketch_matmul import (
     sketch_matmul_ref,
 )
 from .srht import hadamard_matrix, hadamard_transform, srht_apply, srht_ref
+from .tsqr import (
+    cholqr_finish,
+    panel_gram,
+    panel_gram_ref,
+    sketch_qr,
+    tsqr,
+    tsqr_ref,
+)
 
 __all__ = [
+    "cholqr_finish",
+    "panel_gram",
+    "panel_gram_ref",
+    "sketch_qr",
+    "tsqr",
+    "tsqr_ref",
     "countsketch_apply",
     "countsketch_ref",
     "fused_gaussian_ref",

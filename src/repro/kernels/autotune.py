@@ -1,0 +1,271 @@
+"""Tile-size autotuner for the Pallas sketch kernels.
+
+Picks (block_m, block_d, block_n) per kernel family by sweeping candidate
+block shapes against the same roofline cost model ``benchmarks/roofline.py``
+reports from: predicted time = max(HBM traffic / bandwidth, flops / peak)
+plus a per-grid-step launch overhead.  The traffic term is the one that
+actually differentiates block shapes — grids that revisit an input tile
+across an outer axis (e.g. the dense sketch re-reads S once per n-block,
+every kernel re-reads A once per d-block) pay for each revisit, so larger
+blocks along the revisited axes trade VMEM footprint for HBM traffic.
+Candidates that overflow the VMEM budget are discarded before costing.
+
+Winners are cached in-repo at ``src/repro/kernels/autotune_cache.json``,
+keyed ``"{kind}|m={m}|n={n}|d={d}|{dtype}|{device}"``.  ``best_blocks`` is
+the runtime entry point — exact cache hits return the committed winner,
+misses fall back to the cost model on the fly (memoized per process).  The
+backend policy (``repro.core.backend.kernel_blocks``) consults it for every
+kernel dispatch; set ``REPRO_AUTOTUNE=0`` to force the kernels' hand-tuned
+defaults.
+
+Regenerate the cache after kernel/geometry changes::
+
+    PYTHONPATH=src python -m repro.kernels.autotune --write
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["best_blocks", "predict_cost", "CACHE_PATH", "KINDS"]
+
+CACHE_PATH = Path(__file__).with_name("autotune_cache.json")
+CACHE_SCHEMA = 1
+
+# Kernel families the tuner knows, with the block kwargs each accepts.
+KINDS = {
+    "countsketch": ("block_m", "block_d", "block_n"),
+    "sketch_matmul": ("block_d", "block_m", "block_n"),
+    "gaussian": ("block_d", "block_m", "block_n"),
+    "srht": ("block_n",),
+    "tsqr": ("block_m", "block_d"),
+}
+_ALIASES = {"uniform_dense": "sketch_matmul", "clarkson_woodruff": "countsketch"}
+
+# VMEM working-set budget per grid step.  v5e has ~16 MiB/core; half of it
+# keeps double-buffered pipelines honest.
+VMEM_BUDGET = 8 * 1024 * 1024
+_STEP_OVERHEAD_S = 5e-7  # per-grid-step launch cost; penalizes tiny blocks
+
+_BLOCK_M = (128, 256, 512, 1024, 2048)
+_BLOCK_D = (128, 256, 512, 1024)
+_BLOCK_N = (128, 256, 512)
+
+
+def _hw():
+    """Roofline constants — shared with benchmarks via repro.launch.mesh."""
+    try:
+        from ..launch.mesh import HW
+
+        return HW
+    except Exception:  # pragma: no cover - mesh module should always import
+        return {"peak_flops_bf16": 197e12, "hbm_bw": 819e9}
+
+
+def _dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _peak_flops(dtype) -> float:
+    peak = float(_hw().get("peak_flops_bf16", 197e12))
+    # MXU fp32 runs at roughly half the bf16 rate; fp64 emulation far slower.
+    itemsize = _dtype_bytes(dtype)
+    if itemsize <= 2:
+        return peak
+    if itemsize == 4:
+        return peak / 2
+    return peak / 8
+
+
+def predict_cost(kind: str, m: int, n: int, d: int, dtype, blocks: dict) -> float:
+    """Roofline-predicted seconds for one kernel launch with these blocks.
+
+    Returns ``inf`` for configs whose VMEM working set exceeds the budget,
+    so infeasible candidates lose every comparison.
+    """
+    kind = _ALIASES.get(kind, kind)
+    b = _dtype_bytes(dtype)
+    acc_b = max(b, 4)  # half inputs accumulate in f32
+    n_p = max(128, n)
+    bm = blocks.get("block_m", m)
+    bd = blocks.get("block_d", d)
+    bn = blocks.get("block_n", n_p)
+    m_blocks = _cdiv(m, bm)
+    d_blocks = _cdiv(d, bd)
+    n_blocks = _cdiv(n_p, bn)
+
+    flops = 2.0 * m * n * d
+    if kind == "countsketch":
+        # one-hot matmul recast: dense-rate MACs, A re-read per d-block,
+        # bucket/sign columns re-read per (d, n) block.
+        traffic = m * n * b * d_blocks + m * (4 + b) * d_blocks * n_blocks
+        traffic += d * n * b
+        vmem = (bm * bn + bm * bd + bd * bn) * b + 2 * bm * 4
+        steps = m_blocks * d_blocks * n_blocks
+    elif kind == "sketch_matmul":
+        traffic = d * m * b * n_blocks + m * n * b * d_blocks + d * n * b
+        vmem = (bd * bm + bm * bn + bd * bn) * b
+        steps = m_blocks * d_blocks * n_blocks
+    elif kind == "gaussian":
+        # S is generated in-kernel: no S traffic, but the threefry+Box-Muller
+        # pipeline costs ~32 scalar ops per S element, re-done per n-block.
+        traffic = m * n * b * d_blocks + d * n * b
+        flops += 32.0 * d * m * n_blocks
+        vmem = (bd * bm + bm * bn + bd * bn) * b
+        steps = m_blocks * d_blocks * n_blocks
+    elif kind == "srht":
+        # two-stage FWHT over m_pad rows: log2(m) butterfly sweeps, each a
+        # read+write of the full (m_pad, bn) working set per column block.
+        m_pad = 1 << max(1, (m - 1).bit_length())
+        sweeps = max(1, m_pad.bit_length() - 1)
+        flops = 2.0 * m_pad * n * sweeps
+        traffic = 4.0 * m_pad * n * b + d * n * b
+        vmem = min(m_pad, 2048) * bn * b
+        steps = n_blocks
+    elif kind == "tsqr":
+        # fused sketch→Gram: A re-read per d-block, B written once (never
+        # re-read), Gram folded from VMEM-resident panels.
+        traffic = m * n * b * d_blocks + d * m * b + d * n * acc_b
+        flops += 2.0 * d * n * n
+        vmem = bd * bm * b + bm * n_p * b + (bd * n_p + n_p * n_p) * acc_b
+        steps = m_blocks * d_blocks
+    else:
+        raise ValueError(f"unknown autotune kind {kind!r}; have {sorted(KINDS)}")
+
+    if vmem > VMEM_BUDGET:
+        return float("inf")
+    hbm_bw = float(_hw().get("hbm_bw", 819e9))
+    return max(traffic / hbm_bw, flops / _peak_flops(dtype)) + steps * _STEP_OVERHEAD_S
+
+
+def _candidates(kind: str, m: int, n: int, d: int):
+    kind = _ALIASES.get(kind, kind)
+    n_p = max(128, n)
+    bms = sorted({min(v, max(8, m)) for v in _BLOCK_M})
+    bds = sorted({min(v, max(8, d)) for v in _BLOCK_D})
+    bns = sorted({min(v, n_p) for v in _BLOCK_N})
+    if kind == "srht":
+        for bn in bns:
+            yield {"block_n": bn}
+    elif kind == "tsqr":
+        for bm in bms:
+            for bd in bds:
+                yield {"block_m": bm, "block_d": bd}
+    else:
+        for bm in bms:
+            for bd in bds:
+                for bn in bns:
+                    yield {"block_m": bm, "block_d": bd, "block_n": bn}
+
+
+def _device_kind() -> str:
+    try:
+        return jax.devices()[0].device_kind.replace(" ", "_")
+    except Exception:  # pragma: no cover - no runtime attached
+        return "unknown"
+
+
+def _key(kind: str, m: int, n: int, d: int, dtype, device: str) -> str:
+    return f"{kind}|m={m}|n={n}|d={d}|{jnp.dtype(dtype).name}|{device}"
+
+
+@functools.lru_cache(maxsize=1)
+def _load_cache() -> dict:
+    try:
+        data = json.loads(CACHE_PATH.read_text())
+        if data.get("schema") == CACHE_SCHEMA:
+            return data.get("entries", {})
+    except (OSError, ValueError):
+        pass
+    return {}
+
+
+@functools.lru_cache(maxsize=4096)
+def _model_best(kind: str, m: int, n: int, d: int, dtype_name: str) -> tuple:
+    best, best_cost = None, float("inf")
+    for cand in _candidates(kind, m, n, d):
+        c = predict_cost(kind, m, n, d, dtype_name, cand)
+        if c < best_cost:
+            best, best_cost = cand, c
+    # every family has at least one VMEM-feasible candidate at these sizes,
+    # but fall back to kernel defaults ({}), never crash, if the model says no
+    return tuple(sorted((best or {}).items()))
+
+
+def best_blocks(
+    kind: str, m: int, n: int, d: int, dtype, device: str | None = None
+) -> dict:
+    """Winning block kwargs for this (kind, shape, dtype, device).
+
+    Committed-cache hit first, cost model on miss.  The returned dict uses
+    the kernel wrapper's own kwarg names and can be splatted directly:
+    ``countsketch_apply(A, h, s, d, **best_blocks("countsketch", ...))``.
+    """
+    kind = _ALIASES.get(kind, kind)
+    if kind not in KINDS:
+        raise ValueError(f"unknown autotune kind {kind!r}; have {sorted(KINDS)}")
+    if device is None:
+        device = _device_kind()
+    hit = _load_cache().get(_key(kind, m, n, d, dtype, device))
+    if hit is not None:
+        return {k: v for k, v in hit.items() if k in KINDS[kind]}
+    return dict(_model_best(kind, m, n, d, jnp.dtype(dtype).name))
+
+
+# ---------------------------------------------------------------------------
+# cache generation
+
+
+def _sweep_shapes():
+    for n in (64, 128, 256, 512):
+        for m in (4096, 16384, 65536):
+            d = min(4 * n, m // 2)
+            yield m, n, d
+
+
+def write_cache(device: str | None = None, path: Path | None = None) -> dict:
+    """Sweep canonical paper shapes and write the winners JSON."""
+    if device is None:
+        device = _device_kind()
+    entries = {}
+    for kind in KINDS:
+        for m, n, d in _sweep_shapes():
+            for dtype in ("float32", "bfloat16"):
+                entries[_key(kind, m, n, d, dtype, device)] = dict(
+                    _model_best(kind, m, n, d, dtype)
+                )
+    payload = {"schema": CACHE_SCHEMA, "entries": entries}
+    out = path or CACHE_PATH
+    out.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    _load_cache.cache_clear()
+    return entries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write", action="store_true", help="regenerate the cache")
+    ap.add_argument("--device", default=None, help="override device kind key")
+    args = ap.parse_args(argv)
+    if args.write:
+        entries = write_cache(device=args.device)
+        print(f"wrote {len(entries)} entries to {CACHE_PATH}")
+        return 0
+    device = args.device or _device_kind()
+    for m, n, d in _sweep_shapes():
+        for kind in KINDS:
+            blocks = best_blocks(kind, m, n, d, "float32", device=device)
+            print(f"{kind:14s} m={m:6d} n={n:3d} d={d:4d} -> {blocks}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -68,5 +68,7 @@ def countsketch_apply(
         out_shape=jax.ShapeDtypeStruct((d_p, n_p), acc_dtype),
         interpret=interpret,
     )(h_p, s_p, A_p)
-    out = out[:d, :n].astype(A.dtype)
+    # half-precision inputs keep the f32 accumulator dtype (mixed-precision
+    # contract: bf16 data, >= f32 sketch output for the QR/refinement stages)
+    out = out[:d, :n]
     return out[:, 0] if vec else out

@@ -59,7 +59,9 @@ def sketch_matmul(
         out_shape=jax.ShapeDtypeStruct((d_p, n_p), acc),
         interpret=interpret,
     )(S_p, A_p)
-    out = out[:d, :n].astype(A2.dtype)
+    # half-precision inputs keep the f32 accumulator dtype (mixed-precision
+    # contract: bf16 data, >= f32 sketch output for the QR/refinement stages)
+    out = out[:d, :n]
     return out[:, 0] if vec else out
 
 
@@ -124,5 +126,5 @@ def fused_gaussian_sketch(
         out_shape=jax.ShapeDtypeStruct((d_p, n_p), acc),
         interpret=interpret,
     )(k0, k1, scale_arr, A_p)
-    out = out[:d, :n].astype(A2.dtype)
+    out = out[:d, :n]  # keep the f32 accumulator dtype for half inputs
     return out[:, 0] if vec else out

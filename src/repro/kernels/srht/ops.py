@@ -96,13 +96,14 @@ def hadamard_transform(
     return out[:, 0] if vec else out
 
 
-@partial(jax.jit, static_argnames=("d", "interpret"))
+@partial(jax.jit, static_argnames=("d", "block_n", "interpret"))
 def srht_apply(
     A: jax.Array,
     signs: jax.Array,
     rows: jax.Array,
     d: int,
     *,
+    block_n: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
     """SRHT sketch S·A = (1/√d) · P · H · D · A.
@@ -122,6 +123,8 @@ def srht_apply(
     m_pad = signs.shape[0]
     if m_pad != m:
         A2 = jnp.pad(A2, ((0, m_pad - m), (0, 0)))
-    HDx = hadamard_transform(signs[:, None].astype(A2.dtype) * A2, interpret=interpret)
+    HDx = hadamard_transform(
+        signs[:, None].astype(A2.dtype) * A2, block_n=block_n, interpret=interpret
+    )
     out = HDx[rows] / jnp.sqrt(jnp.asarray(d, A2.dtype))
     return out[:, 0] if vec else out

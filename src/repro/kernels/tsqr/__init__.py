@@ -1,0 +1,16 @@
+from .fused import countsketch_gram, gaussian_gram, matmul_gram, sketch_qr
+from .ops import MAX_FUSED_COLS, cholqr_finish, panel_gram, tsqr
+from .ref import panel_gram_ref, tsqr_ref
+
+__all__ = [
+    "MAX_FUSED_COLS",
+    "cholqr_finish",
+    "countsketch_gram",
+    "gaussian_gram",
+    "matmul_gram",
+    "panel_gram",
+    "panel_gram_ref",
+    "sketch_qr",
+    "tsqr",
+    "tsqr_ref",
+]
