@@ -15,8 +15,21 @@ QR solve, a pure-BLAS yardstick that scales with the host like every
 other cell.  ``--absolute`` compares raw seconds instead (sensible only
 on the machine that produced the baseline).
 
+Serve rows (PR 7) are gated on three more metrics wherever present:
+
+- ``solves_per_s`` — throughput, HIGHER is better, so the regression
+  ratio is inverted; normalized by the ``direct`` yardstick like wall
+  times (solves/sec × direct-seconds is dimensionless).
+- ``speedup`` — batched-vs-per-request ratio, already dimensionless, so
+  compared absolutely; additionally held to the hard ≥5x acceptance
+  floor whenever the row exists, baseline or not.
+- ``p99_s`` — open-loop tail latency, compared absolutely: it is
+  dominated by the service's batching *window* (a configuration
+  constant), so normalizing by machine speed would punish faster hosts.
+
 Exit codes: 0 = no regression (or no committed baseline yet — the gate
-bootstraps quietly), 1 = at least one regressed cell, 2 = usage error.
+bootstraps quietly), 1 = at least one regressed cell or missed floor,
+2 = usage error.
 """
 from __future__ import annotations
 
@@ -29,6 +42,20 @@ from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 NORM_ROW = "direct"
+
+# (metric, lower_is_better, normalized): wall times and throughput scale
+# with the host so they are measured in direct-row units; speedup and the
+# window-dominated open-loop p99 are compared absolutely.
+METRICS = (
+    ("wall_s", True, True),
+    ("solves_per_s", False, True),
+    ("speedup", False, False),
+    ("p99_s", True, False),
+)
+
+# Hard floors checked on the FRESH file alone (acceptance criteria that
+# must hold even with no committed baseline): row name -> (metric, min).
+FLOORS = {"serve_speedup": ("speedup", 5.0)}
 
 
 def committed_baselines(root: Path = REPO_ROOT) -> list[tuple[int, Path]]:
@@ -57,6 +84,23 @@ def load_rows(path: Path) -> dict[str, dict]:
     return rows
 
 
+def check_floors(fresh: dict[str, dict]) -> list[str]:
+    """Absolute acceptance floors on the fresh file (baseline-independent)."""
+    failures = []
+    for name, (metric, floor) in FLOORS.items():
+        row = fresh.get(name)
+        if row is None or metric not in row:
+            continue
+        val = row[metric]
+        if val < floor:
+            failures.append(
+                f"FLOOR {name}.{metric}: {val:.3g} < required {floor:.3g}"
+            )
+        else:
+            print(f"ok {name}.{metric}: {val:.3g} >= floor {floor:.3g}")
+    return failures
+
+
 def compare(
     fresh: dict[str, dict],
     base: dict[str, dict],
@@ -78,19 +122,35 @@ def compare(
     for name in sorted(set(fresh) & set(base)):
         if normalize and name == NORM_ROW:
             continue  # the yardstick is 1.0 vs 1.0 by construction
-        t_f = fresh[name]["wall_s"] / scale_f
-        t_b = base[name]["wall_s"] / scale_b
-        if t_b <= 0:
-            continue
-        ratio = t_f / t_b
-        unit = "x direct" if normalize else "s"
-        if ratio > tolerance:
-            failures.append(
-                f"REGRESSION {name}: {t_f:.4g}{unit} vs baseline "
-                f"{t_b:.4g}{unit} ({ratio:.2f}x > {tolerance:.2f}x)"
-            )
-        else:
-            print(f"ok {name}: {ratio:.2f}x vs baseline (tol {tolerance:.2f}x)")
+        for metric, lower_better, metric_norm in METRICS:
+            if metric not in fresh[name] or metric not in base[name]:
+                continue
+            # throughput in direct-row units multiplies by the yardstick
+            # (solves/sec x seconds is dimensionless); times divide by it
+            if normalize and metric_norm:
+                if lower_better:
+                    v_f = fresh[name][metric] / scale_f
+                    v_b = base[name][metric] / scale_b
+                else:
+                    v_f = fresh[name][metric] * scale_f
+                    v_b = base[name][metric] * scale_b
+            else:
+                v_f = fresh[name][metric]
+                v_b = base[name][metric]
+            if v_b <= 0 or v_f <= 0:
+                continue
+            # ratio > 1 always means "fresh is worse"
+            ratio = v_f / v_b if lower_better else v_b / v_f
+            unit = "x direct" if (normalize and metric_norm) else ""
+            label = name if metric == "wall_s" else f"{name}.{metric}"
+            if ratio > tolerance:
+                failures.append(
+                    f"REGRESSION {label}: {v_f:.4g}{unit} vs baseline "
+                    f"{v_b:.4g}{unit} ({ratio:.2f}x > {tolerance:.2f}x)"
+                )
+            else:
+                print(f"ok {label}: {ratio:.2f}x vs baseline "
+                      f"(tol {tolerance:.2f}x)")
     return failures
 
 
@@ -117,6 +177,8 @@ def main(argv=None) -> int:
     if not fresh_path.exists():
         print(f"perf_gate: fresh bench file {fresh_path} not found", file=sys.stderr)
         return 2
+    fresh = load_rows(fresh_path)
+    failures = check_floors(fresh)
 
     if args.baseline is not None:
         base_path = Path(args.baseline)
@@ -126,16 +188,19 @@ def main(argv=None) -> int:
     else:
         baselines = committed_baselines()
         if not baselines:
+            if failures:
+                for line in failures:
+                    print(line, file=sys.stderr)
+                return 1
             print("perf_gate: no committed BENCH_N.json baseline yet — pass")
             return 0
         base_path = baselines[-1][1]
 
-    fresh = load_rows(fresh_path)
     base = load_rows(base_path)
     print(f"perf_gate: {fresh_path.name} vs {base_path.name} "
           f"(tolerance {args.tolerance}x, "
           f"{'absolute' if args.absolute else f'normalized by {NORM_ROW!r}'})")
-    failures = compare(
+    failures += compare(
         fresh, base, tolerance=args.tolerance, normalize=not args.absolute
     )
     for line in failures:

@@ -7,15 +7,17 @@
   dist      distributed sketched LSQ (shard_map) + comm accounting
   stream    streaming engine: tiles/sec + peak-memory proxy vs monolithic
   certified per-method wall time + certified-error columns (BENCH_5.json)
+  serve     multi-tenant solve service: closed/open-loop load rows (PR 7)
   roofline  per-cell roofline terms from the dry-run JSONs
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
 sizes (slow on 1 CPU core).  ``--json [PATH]`` additionally dumps the
 ``certified`` cell's rows (per-method wall time, forward error vs QR and
-the posterior certified-error columns) as machine-readable JSON so the
-perf/accuracy trajectory is tracked in git from PR 5 on.  The default
-path is ``BENCH_{tag}.json`` with ``--tag`` naming the trajectory point
-(current PR number; ``--tag ci`` for throwaway CI runs) — committed
+the posterior certified-error columns) plus the ``serve`` cell's
+throughput/latency rows as machine-readable JSON so the perf/accuracy
+trajectory is tracked in git from PR 5 on.  The default path is
+``BENCH_{tag}.json`` with ``--tag`` naming the trajectory point (current
+PR number; ``--tag ci`` for throwaway CI runs) — committed
 ``BENCH_N.json`` files are what ``benchmarks/perf_gate.py`` compares
 fresh runs against.
 """
@@ -32,9 +34,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,sketch,kernels,dist,stream,"
-                         "certified,roofline")
+                         "certified,serve,roofline")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
-    ap.add_argument("--tag", default="6",
+    ap.add_argument("--tag", default="7",
                     help="trajectory tag naming the default JSON path "
                          "BENCH_{tag}.json (current PR number, or 'ci')")
     ap.add_argument("--json", nargs="?", const="", default=None,
@@ -48,7 +50,9 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
-        if name == "certified" and args.json is not None:
+        # --json implies the trajectory cells (certified + serve) run:
+        # BENCH_{tag}.json must always carry both row families.
+        if name in ("certified", "serve") and args.json is not None:
             return True
         return only is None or name in only
 
@@ -72,19 +76,23 @@ def main() -> None:
     if want("stream"):
         from . import streaming_bench
         streaming_bench.run(m=65536 if args.full else 16384)
+    rows = []
     if want("certified"):
         from . import certified_bench
-        rows = certified_bench.run(m=20000 if args.full else 8192,
-                                   n=100 if args.full else 64)
-        if args.json is not None:
-            payload = {
-                "bench": "certified_lstsq",
-                "schema": 1,
-                "rows": rows,
-            }
-            with open(args.json, "w") as fh:
-                json.dump(payload, fh, indent=2)
-            print(f"wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
+        rows += certified_bench.run(m=20000 if args.full else 8192,
+                                    n=100 if args.full else 64)
+    if want("serve"):
+        from . import serve_bench
+        rows += serve_bench.run(full=args.full)
+    if args.json is not None:
+        payload = {
+            "bench": "certified_lstsq",
+            "schema": 1,
+            "rows": rows,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
     if want("roofline"):
         from . import roofline
         roofline.run()

@@ -312,8 +312,46 @@ class SketchedSolver:
             self.recertifications += 1
 
     # ----------------------------------------------------------------- solves
+    def _check_rhs(self, b: jax.Array, *, many: bool) -> jax.Array:
+        """Validate a right-hand side up front — shape and dtype.
+
+        Shape mismatches raise here with the session's expectation spelled
+        out instead of surfacing as an XLA dot-dimension failure deep in
+        the jitted solve.  Dtype policy: a RHS that would *promote* the
+        solve away from A's dtype (f64 b against an f32 session, complex
+        against real) is an error — silent promotion would recompile the
+        cached executables and lie about the precision the factor was
+        built at; a safely-representable RHS (f32 b, f64 A) is cast to
+        A's dtype explicitly.
+        """
+        b = jnp.asarray(b)
+        m = self.A.shape[0]
+        if many:
+            if b.ndim != 2 or b.shape[0] != m:
+                raise ValueError(
+                    f"solve_many needs B of shape ({m}, k), got {b.shape}"
+                )
+        else:
+            if b.ndim != 1 or b.shape[0] != m:
+                raise ValueError(
+                    f"solve needs b of shape ({m},) matching A's row count, "
+                    f"got {b.shape}"
+                )
+        dtype = self.A.dtype
+        if b.dtype != dtype:
+            if jnp.result_type(b.dtype, dtype) != dtype:
+                raise TypeError(
+                    f"right-hand side dtype {b.dtype} does not fit the "
+                    f"session's {dtype} factor: solving would silently "
+                    f"promote past the precision A was sketched at — cast "
+                    f"b (or rebuild the session at {b.dtype}) explicitly"
+                )
+            b = b.astype(dtype)
+        return b
+
     def solve(self, b: jax.Array, *, history: bool = False) -> SolveResult:
         """min‖Ax − b‖ against the stored factor (one whitened LSQR run)."""
+        b = self._check_rhs(b, many=False)
         res = _solve_one(
             self._solve_op, self._Y, self.factor, self._sketch_op,
             self._rhs(b), history=history, **self._kw,
@@ -328,11 +366,7 @@ class SketchedSolver:
         substitution — the factor is shared by construction.  (vmap-of-
         while semantics: all columns iterate until the slowest converges.)
         """
-        if B.ndim != 2 or B.shape[0] != self.A.shape[0]:
-            raise ValueError(
-                f"solve_many needs B of shape ({self.A.shape[0]}, k), "
-                f"got {B.shape}"
-            )
+        B = self._check_rhs(B, many=True)
         B_orig = B
         if self.reg is not None:
             n = self.A.shape[1]

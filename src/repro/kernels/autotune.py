@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import functools
 import json
+import logging
 from pathlib import Path
 
 import jax
@@ -36,6 +37,12 @@ __all__ = ["best_blocks", "predict_cost", "CACHE_PATH", "KINDS"]
 
 CACHE_PATH = Path(__file__).with_name("autotune_cache.json")
 CACHE_SCHEMA = 1
+
+_log = logging.getLogger(__name__)
+# One warning per unseen (kind, shape, dtype, device) key per process: a
+# miss means every dispatch at this shape runs on modeled blocks, which is
+# worth knowing once — not once per kernel launch.
+_MISS_WARNED: set[str] = set()
 
 # Kernel families the tuner knows, with the block kwargs each accepts.
 KINDS = {
@@ -215,10 +222,20 @@ def best_blocks(
         raise ValueError(f"unknown autotune kind {kind!r}; have {sorted(KINDS)}")
     if device is None:
         device = _device_kind()
-    hit = _load_cache().get(_key(kind, m, n, d, dtype, device))
+    key = _key(kind, m, n, d, dtype, device)
+    hit = _load_cache().get(key)
     if hit is not None:
         return {k: v for k, v in hit.items() if k in KINDS[kind]}
-    return dict(_model_best(kind, m, n, d, jnp.dtype(dtype).name))
+    blocks = dict(_model_best(kind, m, n, d, jnp.dtype(dtype).name))
+    if key not in _MISS_WARNED:
+        _MISS_WARNED.add(key)
+        _log.warning(
+            "autotune cache miss for %s: no committed winner, falling back "
+            "to roofline-model blocks %s (run `python -m repro.kernels."
+            "autotune` on this device to sweep and pin real winners)",
+            key, blocks or "{} (kernel defaults)",
+        )
+    return blocks
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,197 @@
+"""LRU factor cache — live ``SketchedSolver`` sessions under a byte budget.
+
+The service's economics: a session build costs one sketch + one QR
+(O(mn + sn²)); a cached solve costs whitened LSQR iterations only.  The
+cache therefore holds *sessions*, not solutions — the artifact whose
+rebuild is expensive and whose marginal use is cheap.
+
+Policy and accounting:
+
+- **LRU by fingerprint.**  ``get_or_build(fp, builder)`` returns the live
+  session on a hit (and refreshes recency), builds + inserts on a miss.
+- **Byte budget.**  Each entry is charged the bytes of the artifacts the
+  session *owns* — the stored sketch B, the QR factor (Q, R) and the
+  materialized whitened Y when present.  (The data matrix A is pinned by
+  the session but owned by the caller; charging it would double-count
+  every tenant's own data.)  Inserting past ``max_bytes`` evicts LRU
+  entries until the new entry fits; a single entry larger than the whole
+  budget is still admitted (the service could not run otherwise) and
+  simply evicts everything else.
+- **Counters.**  ``hits`` / ``misses`` / ``evictions`` / ``bytes`` are
+  live attributes; ``stats()`` snapshots them plus per-entry hit counts.
+- **Drift-aware invalidation.**  ``update_rows(fp, idx, rows)`` routes a
+  data update *through* the cached session (O(|idx|·n) delta-sketch, no
+  rebuild), re-keys the entry under the updated matrix's fingerprint and
+  — for sessions built with ``auto_recertify`` — lets the session's
+  recertification escalate the drifted embedding.  If recertification
+  exhausts its escalation room without a passing certificate the entry is
+  dropped: serving from a factor known to be bad is worse than a rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable
+
+import jax
+
+from ..core.session import SketchedSolver
+from .fingerprint import Fingerprint, fingerprint
+
+__all__ = ["FactorCache", "CacheEntry", "session_nbytes"]
+
+
+def session_nbytes(solver: SketchedSolver) -> int:
+    """Bytes of the session-owned artifacts: B, the QR factor, Y."""
+    leaves = jax.tree_util.tree_leaves(
+        (solver._B, tuple(solver.factor), solver._Y)
+    )
+    return int(sum(getattr(leaf, "nbytes", 0) for leaf in leaves))
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    solver: SketchedSolver
+    fp: Fingerprint
+    nbytes: int
+    hits: int = 0
+    built_s: float = 0.0  # wall seconds the builder spent
+
+
+class FactorCache:
+    """LRU cache of live :class:`SketchedSolver` sessions, byte-budgeted."""
+
+    def __init__(self, max_bytes: int = 256 * 1024 * 1024):
+        self.max_bytes = int(max_bytes)
+        self._entries: "OrderedDict[Fingerprint, CacheEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes = 0
+
+    # ------------------------------------------------------------- lookups
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, fp: Fingerprint) -> bool:
+        return fp in self._entries
+
+    def get(self, fp: Fingerprint) -> SketchedSolver | None:
+        """Hit → the live session (recency refreshed); miss → None."""
+        entry = self._entries.get(fp)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(fp)
+        entry.hits += 1
+        self.hits += 1
+        return entry.solver
+
+    def get_or_build(
+        self, fp: Fingerprint, builder: Callable[[], SketchedSolver]
+    ) -> tuple[SketchedSolver, bool]:
+        """``(session, was_hit)`` — the service's single entry point."""
+        solver = self.get(fp)
+        if solver is not None:
+            return solver, True
+        t0 = time.perf_counter()
+        solver = builder()
+        self.put(fp, solver, built_s=time.perf_counter() - t0)
+        return solver, False
+
+    # ------------------------------------------------------------- updates
+    def put(
+        self, fp: Fingerprint, solver: SketchedSolver, *, built_s: float = 0.0
+    ) -> CacheEntry:
+        if fp in self._entries:
+            self._drop(fp)
+        entry = CacheEntry(
+            solver=solver, fp=fp, nbytes=session_nbytes(solver),
+            built_s=built_s,
+        )
+        self._entries[fp] = entry
+        self.bytes += entry.nbytes
+        self._evict_to_budget(keep=fp)
+        return entry
+
+    def _drop(self, fp: Fingerprint) -> CacheEntry | None:
+        entry = self._entries.pop(fp, None)
+        if entry is not None:
+            self.bytes -= entry.nbytes
+        return entry
+
+    def invalidate(self, fp: Fingerprint) -> bool:
+        """Explicitly drop an entry (counted as an eviction)."""
+        if self._drop(fp) is None:
+            return False
+        self.evictions += 1
+        return True
+
+    def clear(self) -> None:
+        self.evictions += len(self._entries)
+        self._entries.clear()
+        self.bytes = 0
+
+    def _evict_to_budget(self, keep: Fingerprint) -> None:
+        # Evict LRU-first until under budget; the just-touched entry is
+        # exempt so one oversized tenant degrades to cache-of-one rather
+        # than thrashing itself out.
+        while self.bytes > self.max_bytes and len(self._entries) > 1:
+            lru_fp = next(iter(self._entries))
+            if lru_fp == keep:
+                self._entries.move_to_end(lru_fp)
+                lru_fp = next(iter(self._entries))
+            self._drop(lru_fp)
+            self.evictions += 1
+
+    # ------------------------------------------------------ drift handling
+    def update_rows(self, fp: Fingerprint, idx, rows) -> Fingerprint | None:
+        """Apply ``A[idx] ← rows`` through the cached session and re-key.
+
+        Returns the UPDATED matrix's fingerprint (the old key is dead —
+        its data no longer exists anywhere), or ``None`` when the entry
+        had to be dropped because the drifted embedding could not be
+        recertified within the session's escalation room.  Cache misses
+        raise ``KeyError``: there is nothing to update.
+        """
+        entry = self._entries.get(fp)
+        if entry is None:
+            raise KeyError(f"no cached session for {fp.short()}")
+        solver = entry.solver
+        solver.update_rows(idx, rows)  # delta-sketch + small QR in-session
+        if solver.auto_recertify and solver.certificate is not None:
+            if not bool(solver.certificate.passed):
+                # escalation room exhausted without a passing certificate:
+                # this factor is KNOWN bad for the new data — drop it.
+                self.invalidate(fp)
+                return None
+        new_fp = fingerprint(
+            solver.A.A, reg=fp.reg, sketch=fp.sketch,
+            sketch_size=fp.sketch_size,
+        )
+        self._drop(fp)
+        entry.fp = new_fp
+        entry.nbytes = session_nbytes(solver)  # escalation may have grown B
+        self._entries[new_fp] = entry
+        self.bytes += entry.nbytes
+        self._evict_to_budget(keep=new_fp)
+        return new_fp
+
+    # ------------------------------------------------------------- reports
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "bytes": self.bytes,
+            "max_bytes": self.max_bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": (self.hits / total) if total else 0.0,
+            "per_entry": {
+                e.fp.short(): {"hits": e.hits, "nbytes": e.nbytes,
+                               "built_s": e.built_s}
+                for e in self._entries.values()
+            },
+        }

@@ -1,0 +1,145 @@
+"""Content fingerprints — the cache key of the multi-tenant solve service.
+
+The expensive artifact the service amortizes is a ``SketchedSolver``
+session (one sketch + QR of A).  Two requests may share that artifact iff
+they would build the *same* session: same data matrix, same dtype, same
+ridge parameter and same sketch configuration.  A :class:`Fingerprint`
+names that equivalence class as a small frozen value object, hashable and
+usable as a dict key.
+
+What goes into the key:
+
+- ``kind``   — the structural input family (``dense`` / ``bcoo`` /
+  ``operator``): a dense A and a BCOO A with identical entries build
+  different sessions (different apply paths), so they must not collide.
+- ``shape``/``dtype`` — trace-level identity.
+- ``reg``    — the ridge λ (a different λ is a different factor: the
+  augmented [A; √λI] operator is sketched through a different embedding).
+- ``sketch``/``sketch_size`` — the embedding configuration the session
+  would be built with.
+- ``digest`` — the content hash.  For dense arrays and BCOO matrices this
+  is a real digest of the numerical payload (BLAKE2b over the raw bytes —
+  O(bytes) once per *distinct object*; repeated submissions of the same
+  array object hit a memo and skip the hash).  Matrix-free operators have
+  no inspectable payload, so they REQUIRE an explicit user ``token``: the
+  caller asserts "this token names this operator's content" and the
+  fingerprint is structural (type, shape, dtype) + token.  Passing a
+  token for array inputs overrides the byte digest — the escape hatch for
+  callers who already version their data.
+
+``fingerprint`` is pure bookkeeping — it never touches the accelerator
+beyond a device→host copy of the payload being digested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from ..core import linop
+
+__all__ = ["Fingerprint", "fingerprint", "digest_array"]
+
+# Digest memo keyed on id(buffer).  A weakref.finalize on the owning object
+# evicts the entry when the buffer dies, so a recycled id() can never serve
+# a stale digest.  Objects that refuse weakrefs just get re-digested.
+_DIGEST_MEMO: dict[int, str] = {}
+
+
+def _memo_evict(obj_id: int) -> None:
+    _DIGEST_MEMO.pop(obj_id, None)
+
+
+def digest_array(x) -> str:
+    """BLAKE2b-128 hex digest of an array's raw bytes (+ shape/dtype).
+
+    Works for ``jax.Array`` and ``numpy`` inputs; the device→host copy and
+    the hash are paid once per distinct object (memoized by identity, with
+    a weakref finalizer guarding against id reuse).
+    """
+    obj_id = id(x)
+    hit = _DIGEST_MEMO.get(obj_id)
+    if hit is not None:
+        return hit
+    host = np.asarray(x)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(host.shape).encode())
+    h.update(str(host.dtype).encode())
+    h.update(np.ascontiguousarray(host).tobytes())
+    digest = h.hexdigest()
+    try:
+        import weakref
+
+        weakref.finalize(x, _memo_evict, obj_id)
+        _DIGEST_MEMO[obj_id] = digest
+    except TypeError:
+        pass  # not weakref-able: skip the memo, never risk staleness
+    return digest
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Hashable identity of a solve problem's expensive artifact."""
+
+    kind: str  # "dense" | "bcoo" | "operator"
+    shape: tuple[int, int]
+    dtype: str
+    reg: float | None
+    sketch: str
+    sketch_size: int | None
+    digest: str
+
+    def short(self) -> str:
+        """Human-readable cache-log form."""
+        r = "" if self.reg is None else f"|reg={self.reg:g}"
+        return (
+            f"{self.kind}{self.shape[0]}x{self.shape[1]}:{self.dtype}"
+            f"{r}|{self.sketch}|{self.digest[:10]}"
+        )
+
+
+def fingerprint(
+    A,
+    *,
+    reg: float | None = None,
+    sketch: str = "clarkson_woodruff",
+    sketch_size: int | None = None,
+    token: str | None = None,
+) -> Fingerprint:
+    """Fingerprint a problem: ``jax.Array | BCOO | LinearOperator``.
+
+    ``token`` is REQUIRED for matrix-free operators (nothing to digest)
+    and optional for array/BCOO inputs (overrides the byte digest with a
+    caller-asserted content name).  ``reg``/``sketch``/``sketch_size``
+    must match the session configuration the cache would build — the
+    service threads its own knobs through here.
+    """
+    op = linop.as_operator(A)
+    shape = (int(op.shape[0]), int(op.shape[1]))
+    dtype = str(np.dtype(op.dtype))
+    reg_f = None if reg is None else float(reg)
+    if isinstance(op, linop.DenseOperator):
+        kind = "dense"
+        digest = token if token is not None else digest_array(op.A)
+    elif isinstance(op, linop.SparseOperator):
+        kind = "bcoo"
+        if token is not None:
+            digest = token
+        else:
+            digest = (
+                digest_array(op.M.data)[:16] + digest_array(op.M.indices)[:16]
+            )
+    else:
+        kind = "operator"
+        if token is None:
+            raise ValueError(
+                "matrix-free operators have no inspectable payload to "
+                "digest — pass an explicit token= naming this operator's "
+                "content (the caller owns its versioning)"
+            )
+        digest = f"{type(op).__name__}:{token}"
+    return Fingerprint(
+        kind=kind, shape=shape, dtype=dtype, reg=reg_f,
+        sketch=sketch, sketch_size=sketch_size, digest=digest,
+    )

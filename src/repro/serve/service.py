@@ -1,0 +1,614 @@
+"""``SolveService`` — the async multi-tenant front-end over the solver stack.
+
+The request path, end to end:
+
+1. ``submit(A, b, ...)`` fingerprints the problem (``serve.fingerprint``),
+   routes it — big A → the *session* path (cached factor, coalesced
+   ``solve_many``), tiny A → the *bucket* path (padded vmapped QR) — and
+   returns a ``concurrent.futures.Future`` immediately.
+2. ``pump()`` releases ready micro-batches (``serve.batching``): for each
+   same-fingerprint batch it fetches the live ``SketchedSolver`` from the
+   LRU factor cache (``serve.cache``; builds + certifies on a miss),
+   sketches the stacked right-hand sides ONCE and runs one vmapped
+   whitened LSQR; for each shape bucket it runs the padded batch QR.
+3. Every response carries a posterior ``Certificate`` for its requested
+   ``certified_rtol`` (``None`` → the service-level SLO
+   ``default_rtol``).  The batch is certified in ONE blocked pass — the
+   embedding-level distortion/spectrum are cached per factor, so the
+   per-request cost is a couple of gemm rows.
+4. Requests whose certificate fails get the *slow path* — a per-request
+   ``lstsq(accuracy="certified")`` with its full escalation ladder — and
+   are gracefully REJECTED with a reason when even that cannot meet the
+   SLO, or when their deadline expired (the certificate-vs-budget trade
+   the SLO semantics promise: you get the accuracy you asked for, or an
+   honest refusal, never a silently degraded answer).
+
+Synchronous callers use ``solve()`` (submit + flush); load generators
+call ``start()`` to run the pump on a background thread (continuous
+micro-batching: batches release on size OR age, so tail latency is
+bounded by ``max_delay_s`` even at low arrival rates).
+
+This module is the serving refactor of the seed's ``launch/serve.py`` /
+``train/serve.py`` loop skeleton onto the least-squares stack: same
+batched front-end shape (queue → coalesce → one compiled batch step),
+with the LM decode step swapped for ``solve_many`` against a cached
+sketch→QR factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import certify as certify_lib
+from ..core import linop
+from ..core.lstsq import lstsq
+from ..core.precond import default_sketch_size
+from ..core.result import SolveResult
+from ..core.session import SketchedSolver
+from .batching import (
+    MicroBatcher,
+    _next_pow2,
+    bucket_shape,
+    pad_problem,
+    solve_bucket,
+)
+from .cache import FactorCache
+from .fingerprint import Fingerprint, fingerprint
+
+__all__ = ["SolveService", "SolveResponse"]
+
+# Route problems below this m·n² flop count to the padded-bucket direct
+# path: same cutoff the lstsq auto-selector uses for "QR is free".
+SMALL_PROBLEM_FLOPS = 1 << 26
+
+
+@jax.jit
+def _certify_block(op, factor, B_aug, X, distortion, smin, floor):
+    """Blocked posterior pieces for a whole RHS batch in one compile:
+    residuals, whitened gradients ‖R⁻ᵀAᵀr̂‖ and the certified bounds
+    ‖x̂ − x⋆‖ ≤ ‖Yᵀr̂‖ / (σ_w² σ_min(R)) per column."""
+    dtype = factor.R.dtype
+    tiny = jnp.finfo(dtype).tiny
+    Rres = B_aug - op.matmat(X)
+    WG = factor.rt_solve(op.rmatmat(Rres))
+    wg = jnp.linalg.norm(WG, axis=0)
+    rn = jnp.linalg.norm(Rres, axis=0)
+    xn = jnp.linalg.norm(X, axis=0)
+    eps = jnp.clip(distortion, 0.0, 0.999)
+    sigma_w = jnp.maximum(jnp.minimum(1.0 - eps, floor), tiny)
+    bounds = wg / (sigma_w**2 * jnp.maximum(smin, tiny))
+    rels = bounds / jnp.maximum(xn, tiny)
+    return wg, rn, bounds, rels
+
+
+@dataclasses.dataclass
+class SolveResponse:
+    """What a request's future resolves to — answer or honest refusal."""
+
+    status: str  # "ok" | "rejected"
+    x: jax.Array | None
+    result: SolveResult | None
+    certificate: object | None  # repro.core.certify.Certificate
+    reason: str | None  # rejection reason ("rejected" only)
+    path: str  # "session" | "bucket" | "slow"
+    cache_hit: bool
+    batch_size: int
+    queued_s: float  # submit → dispatch
+    latency_s: float  # submit → response
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+@dataclasses.dataclass
+class _Request:
+    future: Future
+    A: object  # raw user input (array / BCOO / operator)
+    b: jax.Array
+    reg: float | None
+    rtol: float  # resolved SLO (never None inside the service)
+    deadline: float | None  # absolute time.monotonic() deadline
+    t_submit: float
+    fp: Fingerprint | None = None  # session path only
+    raw_shape: tuple[int, int] = (0, 0)  # bucket path: pre-pad shape
+
+
+class SolveService:
+    """Multi-tenant least-squares serving: cached factors + micro-batching.
+
+    Parameters
+    ----------
+    key : PRNG key seeding every session build and slow-path solve.
+    cache_bytes : byte budget of the LRU factor cache.
+    max_batch / max_delay_s : the continuous micro-batching window.
+    default_rtol : the service-level accuracy SLO — the ``certified_rtol``
+        a request gets when it doesn't name one.  Session LSQR tolerances
+        are derived from it (``atol = btol = default_rtol * tol_margin``)
+        so solves stop as soon as the certificate can pass, not at the
+        machine floor; requests demanding much tighter rtol than the
+        service class fall through to the slow path.
+    sketch / sketch_size_factor : the embedding the cached sessions are
+        built with.  Serving wants a *larger* sketch than one-shot solves
+        (default 8n vs 4n): the build is amortized anyway, and the lower
+        distortion ε ≈ √(n/s) cuts every request's LSQR iteration count.
+    small_problem_flops : m·n² below which requests take the bucket path.
+    """
+
+    def __init__(
+        self,
+        key: jax.Array,
+        *,
+        cache_bytes: int = 256 * 1024 * 1024,
+        max_batch: int = 64,
+        max_delay_s: float = 0.002,
+        default_rtol: float = 1e-6,
+        tol_margin: float = 0.02,
+        sketch: str = "clarkson_woodruff",
+        sketch_size_factor: int = 8,
+        iter_lim: int = 100,
+        small_problem_flops: int = SMALL_PROBLEM_FLOPS,
+        max_distortion: float = certify_lib.DEFAULT_MAX_DISTORTION,
+    ):
+        self._key = key
+        self._session_counter = 0
+        self.cache = FactorCache(max_bytes=cache_bytes)
+        self.sessions = MicroBatcher(max_batch=max_batch, max_delay_s=max_delay_s)
+        self.buckets = MicroBatcher(max_batch=max_batch, max_delay_s=max_delay_s)
+        self.default_rtol = float(default_rtol)
+        self.session_tol = float(default_rtol) * float(tol_margin)
+        self.sketch = sketch
+        self.sketch_size_factor = int(sketch_size_factor)
+        self.iter_lim = int(iter_lim)
+        self.small_problem_flops = int(small_problem_flops)
+        self.max_distortion = float(max_distortion)
+        self.counters = {
+            "requests": 0, "ok": 0, "rejected": 0, "slow_path": 0,
+            "session_batches": 0, "bucket_batches": 0,
+        }
+        self._bucket_keys: set = set()
+        self._lock = threading.RLock()
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------ submission
+    def _resolve_sketch_size(self, m: int, n: int) -> int:
+        s = self.sketch_size_factor * n
+        if m // 2 <= n + 1:
+            return default_sketch_size(n, m)
+        return max(n + 1, min(s, m // 2))
+
+    def submit(
+        self,
+        A,
+        b,
+        *,
+        reg: float | None = None,
+        certified_rtol: float | None = None,
+        deadline_s: float | None = None,
+        token: str | None = None,
+        mode: str = "auto",
+    ) -> Future:
+        """Enqueue one solve; resolves to a :class:`SolveResponse`.
+
+        ``certified_rtol=None`` inherits the service SLO ``default_rtol``;
+        ``deadline_s`` is a relative latency budget — a request whose
+        certificate cannot be met before it expires is rejected with a
+        reason rather than answered late or loosely.  ``token`` names the
+        content of matrix-free operators (see ``serve.fingerprint``).
+        ``mode`` forces the ``"session"`` or ``"bucket"`` path
+        (``"auto"`` routes by problem size).
+        """
+        if mode not in ("auto", "session", "bucket"):
+            raise ValueError(f"unknown mode {mode!r}")
+        op = linop.as_operator(A)
+        m, n = (int(op.shape[0]), int(op.shape[1]))
+        b = jnp.asarray(b)
+        if b.ndim != 1 or b.shape[0] != m:
+            raise ValueError(
+                f"submit needs a single right-hand side of shape ({m},), "
+                f"got {b.shape}"
+            )
+        now = time.monotonic()
+        req = _Request(
+            future=Future(),
+            A=A,
+            b=b,
+            reg=None if reg is None else float(reg),
+            rtol=(
+                self.default_rtol
+                if certified_rtol is None
+                else float(certified_rtol)
+            ),
+            deadline=None if deadline_s is None else now + float(deadline_s),
+            t_submit=now,
+            raw_shape=(m, n),
+        )
+        if mode == "auto":
+            small = m * n * n <= self.small_problem_flops
+            mode = (
+                "bucket"
+                if small and isinstance(op, linop.DenseOperator)
+                else "session"
+            )
+        with self._lock:
+            self.counters["requests"] += 1
+            if mode == "bucket":
+                if not isinstance(op, linop.DenseOperator):
+                    raise ValueError(
+                        "the bucket path pads dense arrays; got "
+                        f"{type(op).__name__} — use mode='session'"
+                    )
+                key = (*bucket_shape(m, n), str(jnp.dtype(op.dtype)))
+                self._bucket_keys.add(key)
+                self.buckets.add(key, req, now=now)
+            else:
+                req.fp = fingerprint(
+                    A, reg=req.reg, sketch=self.sketch,
+                    sketch_size=self._resolve_sketch_size(m, n), token=token,
+                )
+                self.sessions.add(req.fp, req, now=now)
+        return req.future
+
+    def solve(self, A, b, **kw) -> SolveResponse:
+        """Synchronous convenience: submit + flush (or wait on the pump)."""
+        fut = self.submit(A, b, **kw)
+        if self._thread is None:
+            self.flush()
+        return fut.result()
+
+    # -------------------------------------------------------------- pumping
+    def pump(self, *, drain: bool = False) -> int:
+        """Dispatch every ready micro-batch; returns #requests completed."""
+        with self._lock:
+            ready = self.sessions.ready(drain=drain)
+            ready_b = self.buckets.ready(drain=drain)
+            done = 0
+            for fp, reqs in ready:
+                self.counters["session_batches"] += 1
+                done += self._dispatch_session(fp, reqs)
+            for key, reqs in ready_b:
+                self.counters["bucket_batches"] += 1
+                done += self._dispatch_bucket(key, reqs)
+            return done
+
+    def flush(self) -> int:
+        """Drain every queue (the synchronous caller's barrier)."""
+        total = 0
+        while True:
+            n = self.pump(drain=True)
+            total += n
+            with self._lock:
+                if self.sessions.pending + self.buckets.pending == 0:
+                    return total
+
+    def start(self, poll_s: float = 0.0005) -> None:
+        """Run the pump on a daemon thread (open-loop serving mode)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if self.pump() == 0:
+                    time.sleep(poll_s)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        self.flush()
+
+    def prewarm(self, A, *, reg: float | None = None,
+                token: str | None = None) -> None:
+        """The serving warmup request: build + certify A's session and
+        compile the whole batch-width ladder before real traffic lands,
+        so no tenant's first requests eat a session build or an XLA
+        compile as tail latency."""
+        m, n = (int(jnp.shape(A)[0]), int(jnp.shape(A)[1]))
+        fp = fingerprint(
+            A, reg=reg, sketch=self.sketch,
+            sketch_size=self._resolve_sketch_size(m, n), token=token,
+        )
+        with self._lock:
+            session, _ = self.cache.get_or_build(
+                fp, lambda: self._build_session(A, fp)
+            )
+            self._ensure_certified_embedding(session)
+            self._spectrum(session)
+            b = session.A.matvec(jnp.ones((n,), session.A.dtype))
+            res = session.solve(b)
+            self._certify_columns(session, b[:, None], res.x[:, None],
+                                  [self.default_rtol])
+            w = 2
+            while w <= self.sessions.max_batch:
+                B = jnp.tile(b[:, None], (1, w))
+                res = session.solve_many(B)
+                self._certify_columns(session, B, res.x,
+                                      [self.default_rtol] * w)
+                w *= 2
+
+    # ------------------------------------------------------------- sessions
+    def _next_key(self) -> jax.Array:
+        self._session_counter += 1
+        return jax.random.fold_in(self._key, self._session_counter)
+
+    def _build_session(self, A, fp: Fingerprint) -> SketchedSolver:
+        return SketchedSolver(
+            A, self._next_key(), sketch=fp.sketch,
+            sketch_size=fp.sketch_size, reg=fp.reg,
+            atol=self.session_tol, btol=self.session_tol,
+            iter_lim=self.iter_lim, max_distortion=self.max_distortion,
+        )
+
+    def _ensure_certified_embedding(self, session: SketchedSolver) -> bool:
+        """Embedding-level certificate, escalating in place on failure."""
+        if session.certificate is None:
+            session._recertify_after_update()
+        return bool(session.certificate.passed)
+
+    def _spectrum(self, session: SketchedSolver):
+        """(smax, smin, cond, floor) of the CURRENT factor, cached on it."""
+        cached = getattr(session, "_serve_spectrum", None)
+        if cached is not None and cached[0] is session.factor:
+            return cached[1:]
+        smax, smin, cond = certify_lib.factor_spectrum(session.factor)
+        floor = certify_lib.probe_spectrum_floor(
+            session._solve_op, session.factor
+        )
+        session._serve_spectrum = (session.factor, smax, smin, cond, floor)
+        return smax, smin, cond, floor
+
+    def _certify_columns(self, session: SketchedSolver, B, X, rtols):
+        """Per-column Certificates from ONE blocked posterior pass.
+
+        The embedding pieces (distortion probe, spectrum, floor) are
+        cached per factor; only ‖Yᵀr̂‖ is per-request, and the whole
+        batch shares one jitted matmat/rmatmat/triangular-solve trio.
+        ``rtols`` may be shorter than B's width (padding columns get no
+        certificate).  Everything lands on the host in ONE transfer and
+        the Certificate assembly is pure numpy — per-request dispatch
+        overhead is what an eager version of this loop would spend.
+        """
+        emb = session.certificate
+        smax, smin, cond, floor = self._spectrum(session)
+        if session.reg is not None:
+            n = session.A.shape[1]
+            B = jnp.concatenate([B, jnp.zeros((n, B.shape[1]), B.dtype)], 0)
+        wg, rn, bounds, rels = _certify_block(
+            session._solve_op, session.factor, B, X, emb.distortion,
+            smin, floor,
+        )
+        wg, rn, bounds, rels, distortion, cond = jax.device_get(
+            (wg, rn, bounds, rels, emb.distortion, cond)
+        )
+        emb_ok = bool(emb.passed)
+        certs = []
+        for j, rtol in enumerate(rtols):
+            rel = rels[j]
+            certs.append(certify_lib.Certificate(
+                distortion=distortion, cond_R=cond, rnorm=rn[j],
+                whitened_arnorm=wg[j], error_bound=bounds[j],
+                rel_error_bound=rel, target=rtol,
+                passed=emb_ok and bool(np.isfinite(rel)) and rel <= rtol,
+                sketch_rows=session.sketch_size,
+                escalations=session.escalations,
+            ))
+        return certs
+
+    def _dispatch_session(self, fp: Fingerprint, reqs: list[_Request]) -> int:
+        now = time.monotonic()
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now > r.deadline:
+                self._reject(r, "deadline expired while queued", "session",
+                             False, len(reqs))
+            else:
+                live.append(r)
+        if not live:
+            return len(reqs)
+        session, hit = self.cache.get_or_build(
+            fp, lambda: self._build_session(live[0].A, fp)
+        )
+        emb_ok = self._ensure_certified_embedding(session)
+        k = len(live)
+        # Pad the RHS block up the power-of-two ladder (duplicating the
+        # last column): the vmapped solve compiles per batch WIDTH, so
+        # without padding every distinct coalesced size k is a fresh XLA
+        # compile — a multi-second tail-latency spike the first time each
+        # size appears.  The ladder bounds compiles at O(log max_batch)
+        # per problem shape; the duplicate columns ride the same gemms
+        # nearly for free and are sliced off before certification.
+        k_pad = min(_next_pow2(k), self.sessions.max_batch)
+        if k_pad == 1:
+            res = session.solve(live[0].b)
+            B_full = live[0].b[:, None]
+            X = res.x[:, None]
+        else:
+            B_full = jnp.stack(
+                [r.b for r in live] + [live[-1].b] * (k_pad - k), axis=1
+            )
+            res = session.solve_many(B_full)
+            X = res.x
+        # Certify the PADDED width (duplicate columns certify redundantly
+        # for free) so the jitted certify block shares the solve's
+        # compile ladder instead of compiling per coalesced size.
+        certs = self._certify_columns(
+            session, B_full, X, [r.rtol for r in live]
+        )
+        X_host = np.asarray(X)
+        host = jax.device_get((res.istop, res.itn, res.rnorm, res.arnorm,
+                               res.used_fallback))
+        for j, r in enumerate(live):
+            cert = certs[j]
+            res_j = self._slice_result(res, host, X_host, j, k_pad)._replace(
+                certificate=cert
+            )
+            if bool(cert.passed):
+                self._resolve(r, res_j, cert, "session", hit, k)
+                continue
+            if not emb_ok:
+                reason = (
+                    "embedding could not be certified even at the maximum "
+                    f"sketch size (distortion {float(cert.distortion):.3f})"
+                )
+            else:
+                reason = None
+            self._retry_slow(r, fp, reason, batch_size=k, cache_hit=hit,
+                             fast_cert=cert)
+        return len(reqs)
+
+    def _slice_result(self, res, host, X_host, j, k_pad) -> SolveResult:
+        if k_pad == 1:
+            return res
+        istop, itn, rnorm, arnorm, fb = host
+        pick = lambda v: v[..., j] if getattr(v, "ndim", 0) else v  # noqa: E731
+        return res._replace(
+            x=X_host[:, j], istop=pick(istop), itn=pick(itn),
+            rnorm=pick(rnorm), arnorm=pick(arnorm), used_fallback=pick(fb),
+        )
+
+    def _retry_slow(
+        self, r: _Request, fp: Fingerprint, forced_reason: str | None,
+        *, batch_size: int, cache_hit: bool, fast_cert,
+    ):
+        """Fast-path certificate failed: per-request certified lstsq, with
+        deadline-aware graceful rejection."""
+        if forced_reason is not None:
+            self._reject(r, forced_reason, "session", cache_hit, batch_size)
+            return
+        now = time.monotonic()
+        if r.deadline is not None and now > r.deadline:
+            self._reject(
+                r,
+                f"certificate for rtol={r.rtol:.1e} not met in deadline "
+                f"(best bound {float(fast_cert.rel_error_bound):.2e})",
+                "session", cache_hit, batch_size,
+            )
+            return
+        self.counters["slow_path"] += 1
+        res = lstsq(
+            r.A, r.b, self._next_key(), accuracy="certified",
+            certified_rtol=r.rtol, reg=r.reg, sketch=fp.sketch,
+        )
+        cert = res.certificate
+        if cert is not None and bool(cert.passed):
+            self._resolve(r, res, cert, "slow", cache_hit, batch_size)
+        else:
+            bound = (
+                float(cert.rel_error_bound) if cert is not None else float("nan")
+            )
+            self._reject(
+                r,
+                f"certificate for rtol={r.rtol:.1e} unattainable (full "
+                f"escalation ladder exhausted; best bound {bound:.2e})",
+                "slow", cache_hit, batch_size,
+            )
+
+    # -------------------------------------------------------------- buckets
+    def _dispatch_bucket(self, key, reqs: list[_Request]) -> int:
+        m_pad, n_pad, _ = key
+        now = time.monotonic()
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now > r.deadline:
+                self._reject(r, "deadline expired while queued", "bucket",
+                             False, len(reqs))
+            else:
+                live.append(r)
+        if not live:
+            return len(reqs)
+        pads = [
+            pad_problem(linop.as_operator(r.A).A, r.b, m_pad, n_pad)
+            for r in live
+        ]
+        A_stack = jnp.stack([p[0] for p in pads])
+        b_stack = jnp.stack([p[1] for p in pads])
+        lam = jnp.asarray([r.reg or 0.0 for r in live], A_stack.dtype)
+        out = solve_bucket(A_stack, b_stack, lam, certify=True)
+        k = len(live)
+        dtype = A_stack.dtype
+        for j, r in enumerate(live):
+            n = r.raw_shape[1]
+            x = out["x"][j, :n]
+            xn = jnp.maximum(
+                jnp.linalg.norm(out["x"][j]), jnp.finfo(dtype).tiny
+            )
+            rel = out["error_bound"][j] / xn
+            # Direct QR answers certify with ZERO embedding distortion —
+            # R here is A_aug's own triangular factor, so the bound is
+            # deterministic (module docstring of serve.batching).
+            cert = certify_lib.Certificate(
+                distortion=jnp.asarray(0.0, dtype),
+                cond_R=out["cond"][j], rnorm=out["rnorm"][j],
+                whitened_arnorm=out["whitened_arnorm"][j],
+                error_bound=out["error_bound"][j],
+                rel_error_bound=rel,
+                target=jnp.asarray(r.rtol, dtype),
+                passed=jnp.isfinite(rel) & (rel <= r.rtol),
+                sketch_rows=m_pad + n_pad, escalations=0,
+            )
+            res = SolveResult(
+                x=x, istop=jnp.asarray(1, jnp.int32),
+                itn=jnp.asarray(0, jnp.int32), rnorm=out["rnorm"][j],
+                arnorm=jnp.asarray(jnp.nan, dtype),
+                used_fallback=jnp.asarray(False), method="bucket_direct",
+                certificate=cert,
+            )
+            if bool(cert.passed):
+                self._resolve(r, res, cert, "bucket", False, k)
+            else:
+                self._reject(
+                    r,
+                    f"rtol={r.rtol:.1e} is below direct-QR attainable "
+                    f"accuracy for this problem (posterior bound "
+                    f"{float(rel):.2e}); no tighter method exists",
+                    "bucket", False, k,
+                )
+        return len(reqs)
+
+    # ------------------------------------------------------------ responses
+    def _resolve(self, r, res, cert, path, hit, batch):
+        now = time.monotonic()
+        self.counters["ok"] += 1
+        r.future.set_result(SolveResponse(
+            status="ok", x=res.x, result=res, certificate=cert, reason=None,
+            path=path, cache_hit=hit, batch_size=batch,
+            queued_s=now - r.t_submit, latency_s=now - r.t_submit,
+        ))
+
+    def _reject(self, r, reason, path, hit, batch):
+        now = time.monotonic()
+        self.counters["rejected"] += 1
+        r.future.set_result(SolveResponse(
+            status="rejected", x=None, result=None, certificate=None,
+            reason=reason, path=path, cache_hit=hit, batch_size=batch,
+            queued_s=now - r.t_submit, latency_s=now - r.t_submit,
+        ))
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        with self._lock:
+            occ = OrderedDict(
+                session_occupancy=self.sessions.mean_occupancy,
+                bucket_occupancy=self.buckets.mean_occupancy,
+            )
+            return {
+                **self.counters,
+                **occ,
+                "pending": self.sessions.pending + self.buckets.pending,
+                "bucket_executables": len(self._bucket_keys),
+                "cache": self.cache.stats(),
+            }

@@ -1,0 +1,113 @@
+"""FactorCache: LRU + byte budget, counters, drift-aware invalidation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.session import SketchedSolver
+from repro.serve import FactorCache, fingerprint, session_nbytes
+
+M, N = 400, 12
+
+
+def _problem(seed=0, m=M, n=N):
+    kA, kb = jax.random.split(jax.random.PRNGKey(seed))
+    A = jax.random.normal(kA, (m, n))
+    b = jax.random.normal(kb, (m,))
+    return A, b
+
+
+def _build(A, seed=0, **kw):
+    return lambda: SketchedSolver(A, jax.random.PRNGKey(100 + seed), **kw)
+
+
+def test_hit_miss_counters_and_lru():
+    cache = FactorCache()
+    A, _ = _problem()
+    fp = fingerprint(A)
+    assert cache.get(fp) is None
+    s1, hit = cache.get_or_build(fp, _build(A))
+    assert not hit
+    s2, hit = cache.get_or_build(fp, _build(A))
+    assert hit and s2 is s1
+    st = cache.stats()
+    assert st["hits"] == 1 and st["misses"] == 2
+    assert st["hit_rate"] == pytest.approx(1 / 3)
+    assert st["entries"] == 1
+
+
+def test_byte_budget_evicts_lru():
+    A0, _ = _problem(0)
+    one_session = _build(A0)()
+    budget = int(session_nbytes(one_session) * 2.5)  # fits 2, not 3
+    cache = FactorCache(max_bytes=budget)
+    fps = []
+    for seed in range(3):
+        A, _ = _problem(seed)
+        fp = fingerprint(A)
+        fps.append(fp)
+        cache.get_or_build(fp, _build(A, seed))
+    assert len(cache) == 2
+    assert fps[0] not in cache  # LRU evicted
+    assert fps[2] in cache
+    assert cache.evictions == 1
+    assert cache.bytes <= budget
+
+
+def test_oversized_entry_still_admitted():
+    A, _ = _problem()
+    cache = FactorCache(max_bytes=1)  # everything is oversized
+    fp = fingerprint(A)
+    cache.get_or_build(fp, _build(A))
+    assert fp in cache and len(cache) == 1
+
+
+def test_invalidate_and_clear():
+    cache = FactorCache()
+    A, _ = _problem()
+    fp = fingerprint(A)
+    cache.get_or_build(fp, _build(A))
+    assert cache.invalidate(fp)
+    assert not cache.invalidate(fp)
+    assert cache.bytes == 0 and len(cache) == 0
+
+
+def test_update_rows_rekeys_under_new_fingerprint():
+    cache = FactorCache()
+    A, b = _problem()
+    fp = fingerprint(A)
+    solver, _ = cache.get_or_build(fp, _build(A))
+    x_before = solver.solve(b).x
+
+    idx = jnp.arange(5)
+    rows = jax.random.normal(jax.random.PRNGKey(9), (5, N))
+    new_fp = cache.update_rows(fp, idx, rows)
+    assert new_fp is not None and new_fp != fp
+    assert fp not in cache and new_fp in cache
+    # the re-key must match what a fresh fingerprint of the new data gives
+    assert new_fp == fingerprint(solver.A.A)
+    # and the cached session actually solves the UPDATED problem
+    x_after = cache.get(new_fp).solve(b).x
+    A_new = A.at[idx].set(rows)
+    x_ref = jnp.linalg.lstsq(A_new, b)[0]
+    assert float(jnp.linalg.norm(x_after - x_ref)) <= 1e-6 * float(
+        jnp.linalg.norm(x_ref)
+    )
+    assert float(jnp.linalg.norm(x_after - x_before)) > 1e-8
+
+
+def test_update_rows_missing_entry_raises():
+    cache = FactorCache()
+    A, _ = _problem()
+    with pytest.raises(KeyError):
+        cache.update_rows(fingerprint(A), jnp.arange(2), jnp.zeros((2, N)))
+
+
+def test_session_nbytes_counts_owned_artifacts():
+    A, _ = _problem()
+    solver = _build(A)()
+    # exactly the session-owned artifacts: B, the QR factor, Y — never A
+    expected = (
+        solver._B.nbytes + solver.factor.Q.nbytes + solver.factor.R.nbytes
+        + solver._Y.A.nbytes
+    )
+    assert session_nbytes(solver) == expected

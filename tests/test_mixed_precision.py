@@ -136,6 +136,45 @@ def test_best_blocks_alias_and_cache_consistency():
     assert a == b
 
 
+def test_best_blocks_cache_miss_warns_once(caplog):
+    """An unseen key falls back to model blocks with ONE warning naming
+    them; repeats stay silent, and the fallback equals the cost model."""
+    from repro.kernels import autotune
+
+    # an off-sweep shape no committed cache will ever contain
+    args = ("countsketch", 12345, 67, 321, "float32")
+    key = autotune._key(*args, device="nonexistent_device")
+    autotune._MISS_WARNED.discard(key)
+    with caplog.at_level("WARNING", logger="repro.kernels.autotune"):
+        blocks = best_blocks(*args, device="nonexistent_device")
+    hits = [r for r in caplog.records if key in r.getMessage()]
+    assert len(hits) == 1
+    assert "fallback" in hits[0].getMessage() or "falling back" in hits[0].getMessage()
+    assert str(blocks) in hits[0].getMessage()
+    assert blocks == dict(autotune._model_best(*args[:4], "float32"))
+
+    caplog.clear()
+    with caplog.at_level("WARNING", logger="repro.kernels.autotune"):
+        again = best_blocks(*args, device="nonexistent_device")
+    assert again == blocks
+    assert not [r for r in caplog.records if key in r.getMessage()]
+
+
+def test_best_blocks_cache_hit_does_not_warn(caplog):
+    """Committed-cache hits never touch the warning path."""
+    from repro.kernels import autotune
+
+    cached = autotune._load_cache()
+    if not cached:
+        pytest.skip("no committed autotune cache in this checkout")
+    key = next(iter(cached))
+    kind, m, n, d, dtype, device = key.split("|")
+    m, n, d = (int(s.split("=")[1]) for s in (m, n, d))
+    with caplog.at_level("WARNING", logger="repro.kernels.autotune"):
+        best_blocks(kind, m, n, d, dtype, device=device)
+    assert not [r for r in caplog.records if "cache miss" in r.getMessage()]
+
+
 def test_kernel_blocks_env_kill_switch(monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE", "0")
     assert backend_lib.kernel_blocks("countsketch", 4096, 64, 256,

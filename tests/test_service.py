@@ -1,0 +1,191 @@
+"""SolveService: routing, coalescing, SLOs, rejection, stats."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serve import SolveService
+
+M, N = 600, 12
+
+
+@pytest.fixture(scope="module")
+def tenant():
+    kA, kx, kr = jax.random.split(jax.random.PRNGKey(0), 3)
+    A = jax.random.normal(kA, (M, N))
+    X = jax.random.normal(kx, (N, 8))
+    X = X / jnp.linalg.norm(X, axis=0)
+    B = A @ X + 1e-8 * jax.random.normal(kr, (M, 8))
+    return A, B
+
+
+def _service(**kw):
+    kw.setdefault("max_delay_s", 0.001)
+    return SolveService(jax.random.PRNGKey(42), **kw)
+
+
+def test_coalesced_batch_all_certified(tenant):
+    A, B = tenant
+    svc = _service()
+    futs = [svc.submit(A, B[:, j], certified_rtol=1e-6, mode="session")
+            for j in range(8)]
+    assert svc.stats()["pending"] == 8
+    svc.flush()
+    x_ref = jnp.linalg.lstsq(A, B)[0]
+    for j, f in enumerate(futs):
+        r = f.result(timeout=0)
+        assert r.ok and r.path == "session" and r.batch_size == 8
+        assert bool(r.certificate.passed)
+        assert float(r.certificate.target) == 1e-6
+        rel = float(jnp.linalg.norm(r.x - x_ref[:, j])) / float(
+            jnp.linalg.norm(x_ref[:, j])
+        )
+        assert rel <= 1e-6
+    c = svc.counters
+    assert c["session_batches"] == 1 and c["ok"] == 8 and c["rejected"] == 0
+
+
+def test_cache_hit_on_second_wave(tenant):
+    A, B = tenant
+    svc = _service()
+    svc.solve(A, B[:, 0], mode="session")
+    r = svc.solve(A, B[:, 1], mode="session")
+    assert r.cache_hit
+    assert svc.stats()["cache"]["entries"] == 1
+
+
+def test_tenants_do_not_share_sessions(tenant):
+    A, B = tenant
+    A2 = A + 1.0
+    svc = _service()
+    svc.solve(A, B[:, 0], mode="session")
+    svc.solve(A2, B[:, 0], mode="session")
+    assert svc.stats()["cache"]["entries"] == 2
+
+
+def test_default_rtol_is_the_service_slo(tenant):
+    A, B = tenant
+    svc = _service(default_rtol=1e-5)
+    r = svc.solve(A, B[:, 0], mode="session")
+    assert r.ok and float(r.certificate.target) == 1e-5
+
+
+def test_expired_deadline_rejected(tenant):
+    A, B = tenant
+    svc = _service()
+    fut = svc.submit(A, B[:, 0], mode="session", deadline_s=-1.0)
+    svc.flush()
+    r = fut.result(timeout=0)
+    assert not r.ok and "deadline" in r.reason
+    assert r.x is None and r.certificate is None
+    assert svc.counters["rejected"] == 1
+
+
+def test_unattainable_rtol_rejected_with_reason(tenant):
+    A, B = tenant
+    svc = _service()
+    r = svc.solve(A, B[:, 0], certified_rtol=1e-308, mode="session")
+    assert not r.ok
+    assert "unattainable" in r.reason
+    assert svc.counters["slow_path"] == 1
+
+
+def test_auto_routing_by_problem_size(tenant):
+    A, B = tenant  # 600 x 12 -> m n^2 tiny -> bucket
+    svc = _service()
+    r = svc.solve(A, B[:, 0])
+    assert r.path == "bucket"
+    big = jax.random.normal(jax.random.PRNGKey(1), (9000, 90))
+    r2 = svc.solve(big, big @ jnp.ones((90,)))
+    assert r2.path == "session"
+
+
+def test_bucket_coalesces_shapes_into_buckets():
+    svc = _service()
+    futs = []
+    for i in range(4):
+        A = jax.random.normal(jax.random.PRNGKey(10 + i), (50 + i, 7))
+        b = jax.random.normal(jax.random.PRNGKey(20 + i), (50 + i,))
+        futs.append(svc.submit(A, b, certified_rtol=1e-8))
+    svc.flush()
+    for i, f in enumerate(futs):
+        r = f.result(timeout=0)
+        assert r.ok and r.path == "bucket" and bool(r.certificate.passed)
+        assert r.x.shape == (7,)
+    # 50..53 rows with n_pad=8 all land in the (64, 8) bucket: ONE compile
+    assert svc.stats()["bucket_executables"] == 1
+    assert svc.counters["bucket_batches"] == 1
+
+
+def test_bucket_rejects_matrix_free(tenant):
+    from repro.core import linop
+
+    A, B = tenant
+    op = linop.CustomOperator(
+        matvec_fn=lambda x: A @ x, rmatvec_fn=lambda y: A.T @ y,
+        op_shape=A.shape, op_dtype=A.dtype,
+    )
+    svc = _service()
+    with pytest.raises(ValueError, match="bucket"):
+        svc.submit(op, B[:, 0], mode="bucket", token="t")
+    # session mode works, with the mandatory token
+    r = svc.solve(op, B[:, 0], mode="session", token="tenant-op-v1")
+    assert r.ok and r.path == "session"
+
+
+def test_submit_validates_rhs_and_mode(tenant):
+    A, B = tenant
+    svc = _service()
+    with pytest.raises(ValueError, match="right-hand side"):
+        svc.submit(A, B)  # 2-D b
+    with pytest.raises(ValueError, match="mode"):
+        svc.submit(A, B[:, 0], mode="warp")
+
+
+def test_prewarm_makes_first_request_a_hit(tenant):
+    A, B = tenant
+    svc = _service()
+    svc.prewarm(A)
+    r = svc.solve(A, B[:, 0], mode="session")
+    assert r.ok and r.cache_hit
+
+
+def test_background_pump_thread(tenant):
+    A, B = tenant
+    svc = _service()
+    svc.start(poll_s=1e-4)
+    try:
+        futs = [svc.submit(A, B[:, j], mode="session") for j in range(4)]
+        resps = [f.result(timeout=30.0) for f in futs]
+    finally:
+        svc.stop()
+    assert all(r.ok for r in resps)
+    assert all(r.latency_s >= 0 for r in resps)
+
+
+def test_batch_padding_keeps_answers_exact(tenant):
+    """3 requests pad to the 4-wide ladder rung; answers stay per-request."""
+    A, B = tenant
+    svc = _service()
+    futs = [svc.submit(A, B[:, j], certified_rtol=1e-6, mode="session")
+            for j in range(3)]
+    svc.flush()
+    x_ref = jnp.linalg.lstsq(A, B[:, :3])[0]
+    for j, f in enumerate(futs):
+        r = f.result(timeout=0)
+        assert r.ok and r.batch_size == 3
+        rel = float(jnp.linalg.norm(r.x - x_ref[:, j])) / float(
+            jnp.linalg.norm(x_ref[:, j])
+        )
+        assert rel <= 1e-6
+
+
+def test_stats_shape(tenant):
+    A, B = tenant
+    svc = _service()
+    svc.solve(A, B[:, 0], mode="session")
+    st = svc.stats()
+    for key in ("requests", "ok", "rejected", "slow_path", "pending",
+                "session_occupancy", "bucket_occupancy", "cache"):
+        assert key in st
+    assert st["cache"]["entries"] == 1
+    assert 0.0 < st["session_occupancy"] <= 1.0

@@ -86,6 +86,43 @@ def test_solve_many_matches_columnwise(prob):
         solver.solve_many(b)
 
 
+def test_rhs_validation_up_front(prob):
+    """Shape/dtype mismatches fail fast with a clear message, never as an
+    XLA shape error deep inside the jitted solve."""
+    A, b, _ = prob
+    solver = SketchedSolver(A, jax.random.key(11))
+    with pytest.raises(ValueError, match="solve needs b of shape"):
+        solver.solve(b[:-1])
+    with pytest.raises(ValueError, match="solve needs b of shape"):
+        solver.solve(jnp.stack([b, b], axis=1))
+    with pytest.raises(ValueError, match="solve_many needs B"):
+        solver.solve_many(jnp.stack([b, b], axis=1)[:-1])
+    # wrong leading dim with the right ndim: still the clear message
+    with pytest.raises(ValueError, match="solve_many needs B"):
+        solver.solve_many(jnp.zeros((M_ROWS - 3, 2), A.dtype))
+
+
+def test_rhs_dtype_policy(prob):
+    """Safe upcast is taken explicitly; silent promotion is an error."""
+    A, b, x_qr = prob
+    solver = SketchedSolver(A, jax.random.key(12))  # f64 session
+    # f32 RHS fits f64: cast explicitly, solve normally
+    res = solver.solve(b.astype(jnp.float32))
+    assert res.x.dtype == A.dtype
+    assert relerr(res.x, x_qr) < 1e-5  # b was rounded to f32, not the solve
+    resm = solver.solve_many(jnp.stack([b, -b], axis=1).astype(jnp.float32))
+    assert resm.x.dtype == A.dtype
+    # a promoting RHS (complex against a real factor) is refused
+    with pytest.raises(TypeError, match="promote"):
+        solver.solve(b.astype(jnp.complex128))
+    with pytest.raises(TypeError, match="promote"):
+        solver.solve_many(jnp.stack([b, b], axis=1).astype(jnp.complex128))
+    # and an f32 SESSION refuses an f64 RHS (would silently promote)
+    solver32 = SketchedSolver(A.astype(jnp.float32), jax.random.key(13))
+    with pytest.raises(TypeError, match="promote"):
+        solver32.solve(b)
+
+
 def test_accepts_sparse_and_operator_inputs(prob):
     A, b, x_qr = prob
     sp = SketchedSolver(BCOO.fromdense(A), jax.random.key(4))
