@@ -30,6 +30,7 @@ Policy and accounting:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 from typing import Callable
@@ -60,11 +61,19 @@ class CacheEntry:
 
 
 class FactorCache:
-    """LRU cache of live :class:`SketchedSolver` sessions, byte-budgeted."""
+    """LRU cache of live :class:`SketchedSolver` sessions, byte-budgeted.
+
+    Thread-safe: every public method holds an internal lock, so the
+    service's pump thread, a synchronous ``flush()`` caller and a
+    ``stats()`` poller can touch the cache concurrently.  Session
+    *builds* run outside the lock (they can take seconds); a racing
+    build of the same fingerprint is resolved first-put-wins.
+    """
 
     def __init__(self, max_bytes: int = 256 * 1024 * 1024):
         self.max_bytes = int(max_bytes)
         self._entries: "OrderedDict[Fingerprint, CacheEntry]" = OrderedDict()
+        self._mu = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -72,21 +81,24 @@ class FactorCache:
 
     # ------------------------------------------------------------- lookups
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._mu:
+            return len(self._entries)
 
     def __contains__(self, fp: Fingerprint) -> bool:
-        return fp in self._entries
+        with self._mu:
+            return fp in self._entries
 
     def get(self, fp: Fingerprint) -> SketchedSolver | None:
         """Hit → the live session (recency refreshed); miss → None."""
-        entry = self._entries.get(fp)
-        if entry is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(fp)
-        entry.hits += 1
-        self.hits += 1
-        return entry.solver
+        with self._mu:
+            entry = self._entries.get(fp)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(fp)
+            entry.hits += 1
+            self.hits += 1
+            return entry.solver
 
     def get_or_build(
         self, fp: Fingerprint, builder: Callable[[], SketchedSolver]
@@ -96,24 +108,36 @@ class FactorCache:
         if solver is not None:
             return solver, True
         t0 = time.perf_counter()
-        solver = builder()
-        self.put(fp, solver, built_s=time.perf_counter() - t0)
+        solver = builder()  # outside the lock: builds can take seconds
+        built_s = time.perf_counter() - t0
+        with self._mu:
+            entry = self._entries.get(fp)
+            if entry is not None:
+                # another thread's build landed first: use THAT live
+                # session (it may already hold compiled ladders / drift
+                # state) and drop ours on the floor.
+                self._entries.move_to_end(fp)
+                entry.hits += 1
+                self.hits += 1
+                return entry.solver, True
+            self.put(fp, solver, built_s=built_s)
         return solver, False
 
     # ------------------------------------------------------------- updates
     def put(
         self, fp: Fingerprint, solver: SketchedSolver, *, built_s: float = 0.0
     ) -> CacheEntry:
-        if fp in self._entries:
-            self._drop(fp)
-        entry = CacheEntry(
-            solver=solver, fp=fp, nbytes=session_nbytes(solver),
-            built_s=built_s,
-        )
-        self._entries[fp] = entry
-        self.bytes += entry.nbytes
-        self._evict_to_budget(keep=fp)
-        return entry
+        with self._mu:
+            if fp in self._entries:
+                self._drop(fp)
+            entry = CacheEntry(
+                solver=solver, fp=fp, nbytes=session_nbytes(solver),
+                built_s=built_s,
+            )
+            self._entries[fp] = entry
+            self.bytes += entry.nbytes
+            self._evict_to_budget(keep=fp)
+            return entry
 
     def _drop(self, fp: Fingerprint) -> CacheEntry | None:
         entry = self._entries.pop(fp, None)
@@ -123,15 +147,17 @@ class FactorCache:
 
     def invalidate(self, fp: Fingerprint) -> bool:
         """Explicitly drop an entry (counted as an eviction)."""
-        if self._drop(fp) is None:
-            return False
-        self.evictions += 1
-        return True
+        with self._mu:
+            if self._drop(fp) is None:
+                return False
+            self.evictions += 1
+            return True
 
     def clear(self) -> None:
-        self.evictions += len(self._entries)
-        self._entries.clear()
-        self.bytes = 0
+        with self._mu:
+            self.evictions += len(self._entries)
+            self._entries.clear()
+            self.bytes = 0
 
     def _evict_to_budget(self, keep: Fingerprint) -> None:
         # Evict LRU-first until under budget; the just-touched entry is
@@ -155,43 +181,45 @@ class FactorCache:
         recertified within the session's escalation room.  Cache misses
         raise ``KeyError``: there is nothing to update.
         """
-        entry = self._entries.get(fp)
-        if entry is None:
-            raise KeyError(f"no cached session for {fp.short()}")
-        solver = entry.solver
-        solver.update_rows(idx, rows)  # delta-sketch + small QR in-session
-        if solver.auto_recertify and solver.certificate is not None:
-            if not bool(solver.certificate.passed):
-                # escalation room exhausted without a passing certificate:
-                # this factor is KNOWN bad for the new data — drop it.
-                self.invalidate(fp)
-                return None
-        new_fp = fingerprint(
-            solver.A.A, reg=fp.reg, sketch=fp.sketch,
-            sketch_size=fp.sketch_size,
-        )
-        self._drop(fp)
-        entry.fp = new_fp
-        entry.nbytes = session_nbytes(solver)  # escalation may have grown B
-        self._entries[new_fp] = entry
-        self.bytes += entry.nbytes
-        self._evict_to_budget(keep=new_fp)
-        return new_fp
+        with self._mu:
+            entry = self._entries.get(fp)
+            if entry is None:
+                raise KeyError(f"no cached session for {fp.short()}")
+            solver = entry.solver
+            solver.update_rows(idx, rows)  # delta-sketch + small QR in-session
+            if solver.auto_recertify and solver.certificate is not None:
+                if not bool(solver.certificate.passed):
+                    # escalation room exhausted without a passing certificate:
+                    # this factor is KNOWN bad for the new data — drop it.
+                    self.invalidate(fp)
+                    return None
+            new_fp = fingerprint(
+                solver.A.A, reg=fp.reg, sketch=fp.sketch,
+                sketch_size=fp.sketch_size,
+            )
+            self._drop(fp)
+            entry.fp = new_fp
+            entry.nbytes = session_nbytes(solver)  # escalation may have grown B
+            self._entries[new_fp] = entry
+            self.bytes += entry.nbytes
+            self._evict_to_budget(keep=new_fp)
+            return new_fp
 
     # ------------------------------------------------------------- reports
     def stats(self) -> dict:
-        total = self.hits + self.misses
-        return {
-            "entries": len(self._entries),
-            "bytes": self.bytes,
-            "max_bytes": self.max_bytes,
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-            "hit_rate": (self.hits / total) if total else 0.0,
-            "per_entry": {
-                e.fp.short(): {"hits": e.hits, "nbytes": e.nbytes,
-                               "built_s": e.built_s}
-                for e in self._entries.values()
-            },
-        }
+        with self._mu:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._entries),
+                "bytes": self.bytes,
+                "max_bytes": self.max_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": (self.hits / total) if total else 0.0,
+                "per_entry": {
+                    e.fp.short(): {"hits": e.hits, "nbytes": e.nbytes,
+                                   "built_s": e.built_s}
+                    for e in self._entries.values()
+                },
+            }

@@ -19,13 +19,23 @@ What goes into the key:
   would be built with.
 - ``digest`` — the content hash.  For dense arrays and BCOO matrices this
   is a real digest of the numerical payload (BLAKE2b over the raw bytes —
-  O(bytes) once per *distinct object*; repeated submissions of the same
-  array object hit a memo and skip the hash).  Matrix-free operators have
-  no inspectable payload, so they REQUIRE an explicit user ``token``: the
-  caller asserts "this token names this operator's content" and the
-  fingerprint is structural (type, shape, dtype) + token.  Passing a
-  token for array inputs overrides the byte digest — the escape hatch for
-  callers who already version their data.
+  O(bytes) once per *distinct immutable object*; repeated submissions of
+  the same ``jax.Array`` hit a memo and skip the hash, while writable
+  numpy arrays are re-digested every time — an in-place mutation must
+  change the fingerprint).  Matrix-free operators have no inspectable
+  payload, so they REQUIRE an explicit user ``token``: the caller asserts
+  "this token names this operator's content" and the fingerprint is
+  structural (type, shape, dtype) + token.  Passing a token for array
+  inputs overrides the byte digest — the escape hatch for callers who
+  already version their data.
+
+Tokens live in ONE namespace per service by default: two callers using
+the same token string (say ``"v1"``) for *different* content of the same
+shape/dtype/config would collide on one fingerprint and be served each
+other's cached factor.  In a multi-tenant deployment, pass ``tenant=``
+to scope tokens per caller — the tenant id is mixed into the token's
+digest (content digests are deliberately NOT tenant-scoped: identical
+bytes SHOULD share a factor; that sharing is the cache's whole point).
 
 ``fingerprint`` is pure bookkeeping — it never touches the accelerator
 beyond a device→host copy of the payload being digested.
@@ -34,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import weakref
 
 import numpy as np
 
@@ -43,7 +54,11 @@ __all__ = ["Fingerprint", "fingerprint", "digest_array"]
 
 # Digest memo keyed on id(buffer).  A weakref.finalize on the owning object
 # evicts the entry when the buffer dies, so a recycled id() can never serve
-# a stale digest.  Objects that refuse weakrefs just get re-digested.
+# a stale digest.  Only IMMUTABLE buffers are memoized (jax.Array,
+# read-only numpy views): a writable numpy array can be mutated in place
+# under the same id, so memoizing it would let a caller resubmit a changed
+# matrix and be served the factor of the old bytes.  Objects that refuse
+# weakrefs just get re-digested.
 _DIGEST_MEMO: dict[int, str] = {}
 
 
@@ -55,26 +70,30 @@ def digest_array(x) -> str:
     """BLAKE2b-128 hex digest of an array's raw bytes (+ shape/dtype).
 
     Works for ``jax.Array`` and ``numpy`` inputs; the device→host copy and
-    the hash are paid once per distinct object (memoized by identity, with
-    a weakref finalizer guarding against id reuse).
+    the hash are paid once per distinct *immutable* object (memoized by
+    identity, with a weakref finalizer guarding against id reuse).
+    Writable numpy arrays skip the memo entirely — in-place mutation
+    changes the content under the same object identity, and serving a
+    stale digest would mean serving a stale cached factor.
     """
+    mutable = isinstance(x, np.ndarray) and x.flags.writeable
     obj_id = id(x)
-    hit = _DIGEST_MEMO.get(obj_id)
-    if hit is not None:
-        return hit
+    if not mutable:
+        hit = _DIGEST_MEMO.get(obj_id)
+        if hit is not None:
+            return hit
     host = np.asarray(x)
     h = hashlib.blake2b(digest_size=16)
     h.update(str(host.shape).encode())
     h.update(str(host.dtype).encode())
     h.update(np.ascontiguousarray(host).tobytes())
     digest = h.hexdigest()
-    try:
-        import weakref
-
-        weakref.finalize(x, _memo_evict, obj_id)
-        _DIGEST_MEMO[obj_id] = digest
-    except TypeError:
-        pass  # not weakref-able: skip the memo, never risk staleness
+    if not mutable:
+        try:
+            weakref.finalize(x, _memo_evict, obj_id)
+            _DIGEST_MEMO[obj_id] = digest
+        except TypeError:
+            pass  # not weakref-able: skip the memo, never risk staleness
     return digest
 
 
@@ -106,19 +125,28 @@ def fingerprint(
     sketch: str = "clarkson_woodruff",
     sketch_size: int | None = None,
     token: str | None = None,
+    tenant: str | None = None,
 ) -> Fingerprint:
     """Fingerprint a problem: ``jax.Array | BCOO | LinearOperator``.
 
     ``token`` is REQUIRED for matrix-free operators (nothing to digest)
     and optional for array/BCOO inputs (overrides the byte digest with a
-    caller-asserted content name).  ``reg``/``sketch``/``sketch_size``
-    must match the session configuration the cache would build — the
-    service threads its own knobs through here.
+    caller-asserted content name).  ``tenant`` scopes the token: tokens
+    are caller-asserted names, so without a tenant id two independent
+    callers both naming their data ``"v1"`` would silently share one
+    cache entry — with one, each tenant owns a private token namespace.
+    ``tenant`` without a token is a no-op: content digests are shared by
+    design (identical bytes = identical factor).
+    ``reg``/``sketch``/``sketch_size`` must match the session
+    configuration the cache would build — the service threads its own
+    knobs through here.
     """
     op = linop.as_operator(A)
     shape = (int(op.shape[0]), int(op.shape[1]))
     dtype = str(np.dtype(op.dtype))
     reg_f = None if reg is None else float(reg)
+    if token is not None and tenant is not None:
+        token = f"{tenant}\x1f{token}"  # \x1f: no crafted-string collisions
     if isinstance(op, linop.DenseOperator):
         kind = "dense"
         digest = token if token is not None else digest_array(op.A)

@@ -26,7 +26,11 @@ The request path, end to end:
 Synchronous callers use ``solve()`` (submit + flush); load generators
 call ``start()`` to run the pump on a background thread (continuous
 micro-batching: batches release on size OR age, so tail latency is
-bounded by ``max_delay_s`` even at low arrival rates).
+bounded by ``max_delay_s`` even at low arrival rates).  The pump is
+exception-isolated per batch — an internal failure rejects that batch's
+futures with the error as the reason and keeps serving — and holds the
+submission lock only while popping queues, so clients enqueue freely
+while a batch computes.
 
 This module is the serving refactor of the seed's ``launch/serve.py`` /
 ``train/serve.py`` loop skeleton onto the least-squares stack: same
@@ -117,6 +121,7 @@ class _Request:
     rtol: float  # resolved SLO (never None inside the service)
     deadline: float | None  # absolute time.monotonic() deadline
     t_submit: float
+    t_dispatch: float | None = None  # stamped when the batch is popped
     fp: Fingerprint | None = None  # session path only
     raw_shape: tuple[int, int] = (0, 0)  # bucket path: pre-pad shape
 
@@ -174,7 +179,14 @@ class SolveService:
             "session_batches": 0, "bucket_batches": 0,
         }
         self._bucket_keys: set = set()
+        # _lock guards the queues/counters only and is held for
+        # microseconds; _dispatch_lock serializes the dispatchers (pump
+        # thread vs. a concurrent flush()) so sessions, spectrum caches
+        # and the XLA compile ladder stay single-threaded.  submit()
+        # never touches _dispatch_lock — clients keep enqueueing while a
+        # batch computes.
         self._lock = threading.RLock()
+        self._dispatch_lock = threading.RLock()
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
 
@@ -194,6 +206,7 @@ class SolveService:
         certified_rtol: float | None = None,
         deadline_s: float | None = None,
         token: str | None = None,
+        tenant: str | None = None,
         mode: str = "auto",
     ) -> Future:
         """Enqueue one solve; resolves to a :class:`SolveResponse`.
@@ -202,9 +215,16 @@ class SolveService:
         ``deadline_s`` is a relative latency budget — a request whose
         certificate cannot be met before it expires is rejected with a
         reason rather than answered late or loosely.  ``token`` names the
-        content of matrix-free operators (see ``serve.fingerprint``).
-        ``mode`` forces the ``"session"`` or ``"bucket"`` path
-        (``"auto"`` routes by problem size).
+        content of matrix-free operators and ``tenant`` scopes tokens per
+        caller so independent tenants' version strings cannot collide on
+        one cache entry (see ``serve.fingerprint``).  ``mode`` forces the
+        ``"session"`` or ``"bucket"`` path (``"auto"`` routes by problem
+        size).
+
+        Validation is front-loaded here, in the CALLER's thread: a b of
+        the wrong shape or a dtype that would promote past A's precision
+        raises immediately instead of poisoning the shared batch its
+        fingerprint would coalesce into.
         """
         if mode not in ("auto", "session", "bucket"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -216,6 +236,19 @@ class SolveService:
                 f"submit needs a single right-hand side of shape ({m},), "
                 f"got {b.shape}"
             )
+        dtype = jnp.dtype(op.dtype)
+        if b.dtype != dtype:
+            # Same policy as SketchedSolver._check_rhs, enforced at the
+            # service door: a promoting RHS is the CALLER's error and must
+            # not surface mid-dispatch inside someone else's batch.
+            if jnp.result_type(b.dtype, dtype) != dtype:
+                raise TypeError(
+                    f"right-hand side dtype {b.dtype} does not fit A's "
+                    f"{dtype}: solving would silently promote past the "
+                    f"precision the cached factor is built at — cast b "
+                    f"(or submit A at {b.dtype}) explicitly"
+                )
+            b = b.astype(dtype)
         now = time.monotonic()
         req = _Request(
             future=Future(),
@@ -253,6 +286,7 @@ class SolveService:
                 req.fp = fingerprint(
                     A, reg=req.reg, sketch=self.sketch,
                     sketch_size=self._resolve_sketch_size(m, n), token=token,
+                    tenant=tenant,
                 )
                 self.sessions.add(req.fp, req, now=now)
         return req.future
@@ -266,18 +300,49 @@ class SolveService:
 
     # -------------------------------------------------------------- pumping
     def pump(self, *, drain: bool = False) -> int:
-        """Dispatch every ready micro-batch; returns #requests completed."""
+        """Dispatch every ready micro-batch; returns #requests completed.
+
+        The queue pop is the only work under ``_lock`` — the popped
+        request lists are private, so the dispatches (session builds, XLA
+        compiles, solves, certification) run with submissions flowing
+        freely.  Each batch dispatch is exception-isolated: an internal
+        failure rejects THAT batch's futures with the error as the reason
+        and the pump keeps serving everyone else — one bad batch must
+        never hang the service.
+        """
         with self._lock:
             ready = self.sessions.ready(drain=drain)
             ready_b = self.buckets.ready(drain=drain)
-            done = 0
+            self.counters["session_batches"] += len(ready)
+            self.counters["bucket_batches"] += len(ready_b)
+        now = time.monotonic()
+        for _, reqs in (*ready, *ready_b):
+            for r in reqs:
+                r.t_dispatch = now
+        done = 0
+        with self._dispatch_lock:
             for fp, reqs in ready:
-                self.counters["session_batches"] += 1
-                done += self._dispatch_session(fp, reqs)
+                done += self._dispatch_guarded(
+                    self._dispatch_session, fp, reqs, "session"
+                )
             for key, reqs in ready_b:
-                self.counters["bucket_batches"] += 1
-                done += self._dispatch_bucket(key, reqs)
-            return done
+                done += self._dispatch_guarded(
+                    self._dispatch_bucket, key, reqs, "bucket"
+                )
+        return done
+
+    def _dispatch_guarded(self, dispatch, key, reqs, path: str) -> int:
+        try:
+            return dispatch(key, reqs)
+        except Exception as e:  # noqa: BLE001 — the pump must survive
+            for r in reqs:
+                if not r.future.done():
+                    self._reject(
+                        r,
+                        f"internal error during {path} dispatch: {e!r}",
+                        path, False, len(reqs),
+                    )
+            return len(reqs)
 
     def flush(self) -> int:
         """Drain every queue (the synchronous caller's barrier)."""
@@ -312,7 +377,8 @@ class SolveService:
         self.flush()
 
     def prewarm(self, A, *, reg: float | None = None,
-                token: str | None = None) -> None:
+                token: str | None = None,
+                tenant: str | None = None) -> None:
         """The serving warmup request: build + certify A's session and
         compile the whole batch-width ladder before real traffic lands,
         so no tenant's first requests eat a session build or an XLA
@@ -321,8 +387,9 @@ class SolveService:
         fp = fingerprint(
             A, reg=reg, sketch=self.sketch,
             sketch_size=self._resolve_sketch_size(m, n), token=token,
+            tenant=tenant,
         )
-        with self._lock:
+        with self._dispatch_lock:
             session, _ = self.cache.get_or_build(
                 fp, lambda: self._build_session(A, fp)
             )
@@ -342,8 +409,10 @@ class SolveService:
 
     # ------------------------------------------------------------- sessions
     def _next_key(self) -> jax.Array:
-        self._session_counter += 1
-        return jax.random.fold_in(self._key, self._session_counter)
+        with self._lock:
+            self._session_counter += 1
+            counter = self._session_counter
+        return jax.random.fold_in(self._key, counter)
 
     def _build_session(self, A, fp: Fingerprint) -> SketchedSolver:
         return SketchedSolver(
@@ -498,7 +567,8 @@ class SolveService:
                 "session", cache_hit, batch_size,
             )
             return
-        self.counters["slow_path"] += 1
+        with self._lock:
+            self.counters["slow_path"] += 1
         res = lstsq(
             r.A, r.b, self._next_key(), accuracy="certified",
             certified_rtol=r.rtol, reg=r.reg, sketch=fp.sketch,
@@ -580,22 +650,31 @@ class SolveService:
         return len(reqs)
 
     # ------------------------------------------------------------ responses
+    def _queued_s(self, r, now: float) -> float:
+        # Queue wait = submit → the pump popping the request's batch; a
+        # request answered without ever being popped (rejected at submit
+        # follow-up paths) charges its whole life to the queue.
+        t_dispatch = r.t_dispatch if r.t_dispatch is not None else now
+        return max(0.0, t_dispatch - r.t_submit)
+
     def _resolve(self, r, res, cert, path, hit, batch):
         now = time.monotonic()
-        self.counters["ok"] += 1
+        with self._lock:
+            self.counters["ok"] += 1
         r.future.set_result(SolveResponse(
             status="ok", x=res.x, result=res, certificate=cert, reason=None,
             path=path, cache_hit=hit, batch_size=batch,
-            queued_s=now - r.t_submit, latency_s=now - r.t_submit,
+            queued_s=self._queued_s(r, now), latency_s=now - r.t_submit,
         ))
 
     def _reject(self, r, reason, path, hit, batch):
         now = time.monotonic()
-        self.counters["rejected"] += 1
+        with self._lock:
+            self.counters["rejected"] += 1
         r.future.set_result(SolveResponse(
             status="rejected", x=None, result=None, certificate=None,
             reason=reason, path=path, cache_hit=hit, batch_size=batch,
-            queued_s=now - r.t_submit, latency_s=now - r.t_submit,
+            queued_s=self._queued_s(r, now), latency_s=now - r.t_submit,
         ))
 
     # ---------------------------------------------------------------- stats

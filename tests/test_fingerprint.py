@@ -42,6 +42,48 @@ def test_digest_memo_hits_by_identity():
     assert digest_array(jnp.array(A)) == d1  # same bytes, fresh object
 
 
+def test_inplace_mutation_changes_fingerprint():
+    """A writable numpy A mutated in place must NOT hit a stale memo —
+    the old digest would serve the old matrix's cached factor."""
+    import numpy as np
+
+    A = np.asarray(_A()).copy()
+    fp1 = fingerprint(A)
+    A[0, 0] += 1.0
+    fp2 = fingerprint(A)
+    assert fp1 != fp2
+    A[0, 0] -= 1.0
+    assert fingerprint(A) == fp1
+
+
+def test_readonly_numpy_is_memoized():
+    import numpy as np
+
+    A = np.asarray(_A()).copy()
+    A.setflags(write=False)
+    assert digest_array(A) == digest_array(A)
+    assert fingerprint(A) == fingerprint(A)
+
+
+def test_tenant_namespaces_tokens():
+    A, A2 = _A(), _A(seed=1)
+    # Same token from two tenants: PRIVATE namespaces, no collision even
+    # for different matrices of the same shape/dtype/config.
+    fa = fingerprint(A, token="v1", tenant="alice")
+    fb = fingerprint(A2, token="v1", tenant="bob")
+    assert fa != fb
+    assert fingerprint(A, token="v1", tenant="alice") == fa
+    # tenant= without a token is a no-op: content digests stay shared.
+    assert fingerprint(A, tenant="alice") == fingerprint(A)
+    # the operator path namespaces too
+    op = linop.CustomOperator(
+        matvec_fn=lambda x: A @ x, rmatvec_fn=lambda y: A.T @ y,
+        op_shape=A.shape, op_dtype=A.dtype,
+    )
+    assert (fingerprint(op, token="v1", tenant="alice")
+            != fingerprint(op, token="v1", tenant="bob"))
+
+
 def test_bcoo_fingerprint():
     A = _A()
     M = jsparse.BCOO.fromdense(jnp.where(jnp.abs(A) > 1.0, A, 0.0))

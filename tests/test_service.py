@@ -1,4 +1,7 @@
 """SolveService: routing, coalescing, SLOs, rejection, stats."""
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -139,6 +142,105 @@ def test_submit_validates_rhs_and_mode(tenant):
         svc.submit(A, B)  # 2-D b
     with pytest.raises(ValueError, match="mode"):
         svc.submit(A, B[:, 0], mode="warp")
+
+
+def test_submit_rejects_promoting_rhs_dtype(tenant):
+    """A promoting b (f64 against an f32 session) must fail AT SUBMIT, in
+    the caller's thread — not blow up mid-dispatch inside a shared batch."""
+    A, B = tenant
+    A32 = A.astype(jnp.float32)
+    with pytest.raises(TypeError, match="dtype"):
+        _service().submit(A32, B[:, 0].astype(jnp.float64), mode="session")
+    # a safely-representable RHS is cast, solved and certified normally
+    svc = _service()
+    r = svc.solve(A, B[:, 0].astype(jnp.float32), mode="session")
+    assert r.ok and r.x.dtype == A.dtype
+
+
+def test_dispatch_exception_rejects_batch_not_service(tenant, monkeypatch):
+    """An internal dispatch failure must resolve THAT batch's futures with
+    a reasoned rejection and leave the pump thread serving everyone else
+    — the review scenario was a service-wide hang on one bad batch."""
+    A, B = tenant
+    svc = _service()
+    calls = {"n": 0}
+    orig = svc.cache.get_or_build
+
+    def flaky(fp, builder):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("kaboom")
+        return orig(fp, builder)
+
+    monkeypatch.setattr(svc.cache, "get_or_build", flaky)
+    svc.start(poll_s=1e-4)
+    try:
+        r1 = svc.submit(A, B[:, 0], mode="session").result(timeout=60.0)
+        r2 = svc.submit(A, B[:, 1], mode="session").result(timeout=60.0)
+    finally:
+        svc.stop()
+    assert not r1.ok and "internal error" in r1.reason and "kaboom" in r1.reason
+    assert r2.ok and bool(r2.certificate.passed)
+    assert svc.counters["rejected"] == 1 and svc.counters["ok"] == 1
+
+
+def test_queued_vs_compute_breakdown(tenant):
+    """queued_s is submit → dispatch; the solve itself must land in
+    latency_s − queued_s, not be double-counted as queueing."""
+    A, B = tenant
+    svc = _service()
+    fut = svc.submit(A, B[:, 0], mode="session")
+    time.sleep(0.05)  # request sits in the queue
+    svc.flush()
+    r = fut.result(timeout=0)
+    assert r.ok
+    assert 0.04 <= r.queued_s <= r.latency_s
+    # the session build + solve + certification takes real time
+    assert r.latency_s - r.queued_s > 0.0
+
+
+def test_submit_does_not_block_during_dispatch(tenant, monkeypatch):
+    """Clients must keep enqueueing while the pump computes a batch."""
+    A, B = tenant
+    svc = _service()
+    entered, release = threading.Event(), threading.Event()
+    orig = svc._dispatch_session
+
+    def slow(fp, reqs):
+        entered.set()
+        release.wait(timeout=30.0)
+        return orig(fp, reqs)
+
+    monkeypatch.setattr(svc, "_dispatch_session", slow)
+    svc.start(poll_s=1e-4)
+    try:
+        f1 = svc.submit(A, B[:, 0], mode="session")
+        assert entered.wait(timeout=30.0)
+        t0 = time.monotonic()
+        f2 = svc.submit(A, B[:, 1], mode="session")
+        dt = time.monotonic() - t0
+        release.set()
+        assert f1.result(timeout=60.0).ok and f2.result(timeout=60.0).ok
+    finally:
+        release.set()
+        svc.stop()
+    assert dt < 0.2, f"submit blocked {dt:.3f}s behind an in-flight dispatch"
+
+
+def test_tenant_scoped_tokens_do_not_collide(tenant):
+    """Two tenants both calling their (different) data 'v1' must get their
+    own factors and their own answers."""
+    A, B = tenant
+    A2 = A + 1.0
+    svc = _service()
+    r1 = svc.solve(A, B[:, 0], mode="session", token="v1", tenant="alice")
+    r2 = svc.solve(A2, B[:, 0], mode="session", token="v1", tenant="bob")
+    assert r1.ok and r2.ok
+    assert svc.stats()["cache"]["entries"] == 2
+    x1 = jnp.linalg.lstsq(A, B[:, 0])[0]
+    x2 = jnp.linalg.lstsq(A2, B[:, 0])[0]
+    assert float(jnp.linalg.norm(r1.x - x1) / jnp.linalg.norm(x1)) <= 1e-6
+    assert float(jnp.linalg.norm(r2.x - x2) / jnp.linalg.norm(x2)) <= 1e-6
 
 
 def test_prewarm_makes_first_request_a_hit(tenant):
