@@ -1,0 +1,126 @@
+"""Cluster engine: pass-1 scaling vs worker count + kill-and-resume cost.
+
+Two row families:
+
+- ``cluster/pass1/w<K>`` — one fault-tolerant pass-1 sketch over the
+  pool at K workers; ``tiles_per_s`` is the scaling figure (the workers
+  are threads sharing one CPU here, so this measures coordination
+  overhead, not linear speedup — the number that must NOT collapse as K
+  grows).
+- ``cluster_resume_overhead`` — a full two-pass cluster solve, clean vs
+  with a worker killed mid-pass-1 and recovered from its accumulator
+  checkpoint.  ``overhead_x`` = faulted / clean wall time; the perf gate
+  holds it to the ≤1.5x acceptance ceiling (recovery re-streams only the
+  tiles past the watermark, so it must stay far from a full restart's
+  ~2x).
+
+``--smoke`` shrinks sizes for the examples-smoke CI lane.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import jax
+
+from repro.cluster import ClusterEngine, ClusterSpec, KillWorker
+from repro.streaming import ArraySource, stream_lstsq, stream_sketch
+
+from .common import emit, time_fn
+
+WORKER_COUNTS = (1, 2, 4)
+
+
+def _pass1(A, tile_rows, workers, d):
+    """Time one pool-distributed pass-1 sketch (fresh engine per call so
+    fault bookkeeping and checkpoints never leak across repeats)."""
+    def run():
+        with tempfile.TemporaryDirectory() as ckpt:
+            eng = ClusterEngine(
+                ArraySource(A, tile_rows=tile_rows),
+                ClusterSpec(num_workers=workers, ckpt_dir=ckpt,
+                            checkpoint_every=4),
+            )
+            B, _, _ = stream_sketch(eng, jax.random.key(2), sketch_size=d)
+            eng.close()
+            return B
+    return run
+
+
+def _solve(A, b, tile_rows, workers, d, faults):
+    def run():
+        with tempfile.TemporaryDirectory() as ckpt:
+            eng = ClusterEngine(
+                ArraySource(A, tile_rows=tile_rows),
+                ClusterSpec(
+                    num_workers=workers, ckpt_dir=ckpt, checkpoint_every=2,
+                    faults=None if faults is None else list(faults),
+                ),
+            )
+            x = stream_lstsq(eng, b, jax.random.key(3), method="saa",
+                             sketch_size=d).x
+            eng.close()
+            return x
+    return run
+
+
+def run(m=16384, n=64, d_mult=4, tile_rows=512, seed=0, smoke=False):
+    if smoke:
+        m, n, tile_rows = 4000, 32, 250
+    d = d_mult * n
+    A = jax.random.normal(jax.random.key(seed), (m, n))
+    b = jax.random.normal(jax.random.key(seed + 1), (m,))
+    n_tiles = -(-m // tile_rows)
+    rows = []
+
+    for w in WORKER_COUNTS:
+        t = time_fn(_pass1(A, tile_rows, w, d))
+        tps = n_tiles / t
+        emit(
+            f"cluster/pass1/w{w}", t,
+            f"tiles_per_s={tps:.1f};workers={w};tile_rows={tile_rows};"
+            f"d={d};m={m}",
+        )
+        rows.append({
+            "name": f"cluster_pass1_w{w}", "m": m, "n": n, "d": d,
+            "workers": w, "tile_rows": tile_rows,
+            "wall_s": t, "tiles_per_s": tps,
+        })
+
+    workers = 4
+    t_clean = time_fn(_solve(A, b, tile_rows, workers, d, None))
+    # kill a mid-pool worker a few tiles into its range, every repeat
+    kill = (KillWorker(worker=1, at_tile=2),)
+    t_kill = time_fn(_solve(A, b, tile_rows, workers, d, kill))
+    overhead = t_kill / t_clean
+    emit(
+        "cluster/solve/clean", t_clean,
+        f"workers={workers};tile_rows={tile_rows};m={m};n={n}",
+    )
+    emit(
+        "cluster/solve/kill_resume", t_kill,
+        f"workers={workers};overhead_x={overhead:.3f};m={m};n={n}",
+    )
+    rows.append({
+        "name": "cluster_resume_overhead", "m": m, "n": n,
+        "workers": workers, "tile_rows": tile_rows,
+        "wall_s": t_kill, "wall_s_clean": t_clean,
+        "overhead_x": overhead,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for the CI smoke lane")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        if "overhead_x" in row:
+            assert row["overhead_x"] < 2.5, (
+                f"kill-and-resume overhead {row['overhead_x']:.2f}x — "
+                "recovery is re-running far more than the lost tiles"
+            )

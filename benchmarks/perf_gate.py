@@ -27,6 +27,16 @@ Serve rows (PR 7) are gated on three more metrics wherever present:
   dominated by the service's batching *window* (a configuration
   constant), so normalizing by machine speed would punish faster hosts.
 
+Cluster rows (PR 8) add two more:
+
+- ``tiles_per_s`` — pass-1 streaming throughput across the worker pool,
+  HIGHER is better, normalized by the ``direct`` yardstick.
+- ``overhead_x`` — kill-and-resume wall time over the uninterrupted
+  cluster solve, dimensionless so compared absolutely; additionally held
+  to the hard ≤1.5x acceptance CEILING whenever the row exists (recovery
+  resumes from the accumulator checkpoint, so it must never approach a
+  full restart's ~2x).
+
 Exit codes: 0 = no regression (or no committed baseline yet — the gate
 bootstraps quietly), 1 = at least one regressed cell or missed floor,
 2 = usage error.
@@ -51,11 +61,17 @@ METRICS = (
     ("solves_per_s", False, True),
     ("speedup", False, False),
     ("p99_s", True, False),
+    ("tiles_per_s", False, True),
+    ("overhead_x", True, False),
 )
 
 # Hard floors checked on the FRESH file alone (acceptance criteria that
 # must hold even with no committed baseline): row name -> (metric, min).
 FLOORS = {"serve_speedup": ("speedup", 5.0)}
+
+# Hard ceilings, same contract with the inequality flipped:
+# row name -> (metric, max).
+CEILINGS = {"cluster_resume_overhead": ("overhead_x", 1.5)}
 
 
 def committed_baselines(root: Path = REPO_ROOT) -> list[tuple[int, Path]]:
@@ -85,7 +101,8 @@ def load_rows(path: Path) -> dict[str, dict]:
 
 
 def check_floors(fresh: dict[str, dict]) -> list[str]:
-    """Absolute acceptance floors on the fresh file (baseline-independent)."""
+    """Absolute acceptance floors/ceilings on the fresh file
+    (baseline-independent)."""
     failures = []
     for name, (metric, floor) in FLOORS.items():
         row = fresh.get(name)
@@ -98,6 +115,17 @@ def check_floors(fresh: dict[str, dict]) -> list[str]:
             )
         else:
             print(f"ok {name}.{metric}: {val:.3g} >= floor {floor:.3g}")
+    for name, (metric, ceil) in CEILINGS.items():
+        row = fresh.get(name)
+        if row is None or metric not in row:
+            continue
+        val = row[metric]
+        if val > ceil:
+            failures.append(
+                f"CEILING {name}.{metric}: {val:.3g} > allowed {ceil:.3g}"
+            )
+        else:
+            print(f"ok {name}.{metric}: {val:.3g} <= ceiling {ceil:.3g}")
     return failures
 
 

@@ -8,6 +8,7 @@
   stream    streaming engine: tiles/sec + peak-memory proxy vs monolithic
   certified per-method wall time + certified-error columns (BENCH_5.json)
   serve     multi-tenant solve service: closed/open-loop load rows (PR 7)
+  cluster   multi-worker pass-1 scaling + kill-and-resume overhead (PR 8)
   roofline  per-cell roofline terms from the dry-run JSONs
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
@@ -34,9 +35,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,sketch,kernels,dist,stream,"
-                         "certified,serve,roofline")
+                         "certified,serve,cluster,roofline")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
-    ap.add_argument("--tag", default="7",
+    ap.add_argument("--tag", default="8",
                     help="trajectory tag naming the default JSON path "
                          "BENCH_{tag}.json (current PR number, or 'ci')")
     ap.add_argument("--json", nargs="?", const="", default=None,
@@ -50,9 +51,10 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
-        # --json implies the trajectory cells (certified + serve) run:
-        # BENCH_{tag}.json must always carry both row families.
-        if name in ("certified", "serve") and args.json is not None:
+        # --json implies the trajectory cells (certified + serve +
+        # cluster) run: BENCH_{tag}.json must always carry all three
+        # row families.
+        if name in ("certified", "serve", "cluster") and args.json is not None:
             return True
         return only is None or name in only
 
@@ -84,6 +86,9 @@ def main() -> None:
     if want("serve"):
         from . import serve_bench
         rows += serve_bench.run(full=args.full)
+    if want("cluster"):
+        from . import cluster_bench
+        rows += cluster_bench.run(m=65536 if args.full else 16384)
     if args.json is not None:
         payload = {
             "bench": "certified_lstsq",

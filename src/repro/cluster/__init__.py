@@ -1,0 +1,56 @@
+"""repro.cluster — multi-host, fault-tolerant out-of-core solving.
+
+Four layers (see each module's docstring for the full contract):
+
+- ``shard``       row-range partitioning, ownership, reassignment
+- ``checkpoint``  mid-pass accumulator save/restore (bit-exact resume)
+- ``faults``      deterministic kill/delay/duplicate injection
+- ``coordinator`` the worker pool + recovery driver (``ClusterEngine``)
+
+Entry points: build a :class:`ClusterSpec` and hand it to
+``repro.lstsq(source, b, key, cluster=spec)`` or
+``StreamingSolver(source, cluster=spec)``.
+"""
+from .checkpoint import (
+    CheckpointMismatch,
+    latest_watermark,
+    op_digest,
+    restore_accumulator,
+    save_accumulator,
+)
+from .coordinator import ClusterEngine, ClusterFailure, ClusterSpec
+from .faults import (
+    DelayWorker,
+    DuplicateMerge,
+    FaultPlan,
+    KillWorker,
+    WorkerKilled,
+)
+from .shard import (
+    OwnershipMap,
+    RowRange,
+    RowRangeSource,
+    partition_rows,
+    split_range,
+)
+
+__all__ = [
+    "ClusterSpec",
+    "ClusterEngine",
+    "ClusterFailure",
+    "RowRange",
+    "OwnershipMap",
+    "RowRangeSource",
+    "partition_rows",
+    "split_range",
+    "op_digest",
+    "save_accumulator",
+    "restore_accumulator",
+    "latest_watermark",
+    "CheckpointMismatch",
+    "FaultPlan",
+    "KillWorker",
+    "DelayWorker",
+    "DuplicateMerge",
+    "WorkerKilled",
+]

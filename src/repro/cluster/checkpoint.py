@@ -1,0 +1,174 @@
+"""Mid-pass accumulator checkpoints: preemption loses a few tiles, not a pass.
+
+A :class:`~repro.streaming.accumulate.SketchAccumulator` is a pure fold
+over row tiles, so its full recovery state is tiny and exact:
+
+- the per-kind partial-state array (the (d, ncols) additive state, the
+  (k, d, ncols) sparse-sign per-pass partials, or SRHT's host-side
+  (m_pad, ncols) D-signed placement buffer),
+- the ``rows_seen`` / ``tiles_seen`` counters,
+- the **watermark** — the global row offset the stream has covered up to
+  (checkpoints are cut on tile boundaries, so the watermark is always a
+  tile edge and resuming re-reads nothing),
+- a digest of the operator draw, so a checkpoint can never be restored
+  against a different S (same defence ``SketchAccumulator.merge`` runs,
+  amortized into one blake2b at save time).
+
+Writes go through ``repro.train.checkpoint.save`` — the atomic
+tmp-then-rename layout with a manifest — under
+``<ckpt_dir>/<phase>/range_<start>_<stop>/step_<watermark>``, keyed by the
+row RANGE, not the worker: ranges are the unit of reassignment, so a
+replacement worker restores a dead worker's checkpoint by range alone.
+
+Resume is bit-exact against the uninterrupted stream for every kind:
+``np.savez`` round-trips float64/int32 arrays bitwise, and continuing the
+fold from a bitwise-equal partial state over the identical remaining tile
+sequence performs the identical arithmetic.  (The dense kinds' caveat vs
+the MONOLITHIC apply — blockwise gemm accumulation order — is unchanged;
+resume does not add to it.)
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..streaming.accumulate import SketchAccumulator, make_accumulator
+from ..train import checkpoint as ckpt_lib
+
+__all__ = [
+    "op_digest",
+    "save_accumulator",
+    "restore_accumulator",
+    "latest_watermark",
+    "CheckpointMismatch",
+]
+
+
+class CheckpointMismatch(ValueError):
+    """Checkpoint belongs to a different operator draw / stream layout."""
+
+
+def op_digest(op) -> bytes:
+    """Content digest of an operator DRAW (not just its shape).
+
+    Hashes the pytree structure plus every leaf's bytes — PRNG key leaves
+    via ``key_data`` (typed key arrays have no buffer protocol).  Two
+    operators digest equal iff they are the same draw, which is exactly
+    the merge-safety predicate.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(op)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(treedef).encode())
+    for leaf in leaves:
+        if isinstance(leaf, jax.Array) and jnp.issubdtype(
+            leaf.dtype, jax.dtypes.prng_key
+        ):
+            leaf = jax.random.key_data(leaf)
+        arr = np.asarray(leaf)
+        h.update(str((arr.shape, arr.dtype.str)).encode())
+        h.update(arr.tobytes())
+    return h.digest()
+
+
+def _range_dir(ckpt_dir: str, start: int, stop: int, phase: str = "pass1") -> str:
+    return os.path.join(ckpt_dir, phase, f"range_{start}_{stop}")
+
+
+def save_accumulator(
+    ckpt_dir: str,
+    acc: SketchAccumulator,
+    watermark: int,
+    *,
+    range_start: int,
+    range_stop: int,
+    phase: str = "pass1",
+) -> str:
+    """Atomic checkpoint of a partial accumulator at a tile boundary.
+
+    ``watermark`` is the exclusive global row offset covered so far; it
+    doubles as the checkpoint step, so ``latest_step`` naturally returns
+    the furthest-progressed checkpoint of the range.
+    """
+    tree = {
+        "state": np.asarray(acc.state),
+        "rows_seen": np.int64(acc.rows_seen),
+        "tiles_seen": np.int64(acc.tiles_seen),
+        "watermark": np.int64(watermark),
+        "range": np.asarray([range_start, range_stop], np.int64),
+        "op_digest": np.frombuffer(op_digest(acc.op), np.uint8),
+    }
+    return ckpt_lib.save(
+        _range_dir(ckpt_dir, range_start, range_stop, phase), int(watermark), tree
+    )
+
+
+def latest_watermark(
+    ckpt_dir: str, range_start: int, range_stop: int, *, phase: str = "pass1"
+) -> int | None:
+    """Watermark of the newest checkpoint for the range, or None."""
+    return ckpt_lib.latest_step(_range_dir(ckpt_dir, range_start, range_stop, phase))
+
+
+def restore_accumulator(
+    ckpt_dir: str,
+    op,
+    ncols: int,
+    *,
+    range_start: int,
+    range_stop: int,
+    phase: str = "pass1",
+    dtype=jnp.float64,
+    backend: str = "auto",
+) -> tuple[SketchAccumulator, int] | None:
+    """(accumulator, watermark) from the range's newest checkpoint, or
+    ``None`` when the range has never checkpointed (start from scratch).
+
+    Raises :class:`CheckpointMismatch` when the stored operator digest or
+    state shape disagrees with the live draw — restoring someone else's
+    partial sketch silently poisons the merge, so it is never best-effort.
+    """
+    rdir = _range_dir(ckpt_dir, range_start, range_stop, phase)
+    if ckpt_lib.latest_step(rdir) is None:
+        return None
+    fresh = make_accumulator(op, ncols, dtype=dtype, backend=backend)
+    template = np.asarray(fresh.state)
+    target = {
+        "state": jax.ShapeDtypeStruct(template.shape, template.dtype),
+        "rows_seen": jax.ShapeDtypeStruct((), np.int64),
+        "tiles_seen": jax.ShapeDtypeStruct((), np.int64),
+        "watermark": jax.ShapeDtypeStruct((), np.int64),
+        "range": jax.ShapeDtypeStruct((2,), np.int64),
+        "op_digest": jax.ShapeDtypeStruct((16,), np.uint8),
+    }
+    try:
+        tree, step = ckpt_lib.restore(rdir, target)
+    except ValueError as e:
+        raise CheckpointMismatch(
+            f"checkpoint for range [{range_start}, {range_stop}) does not "
+            f"match the live accumulator: {e}"
+        ) from e
+    stored = bytes(np.asarray(tree["op_digest"]))
+    live = op_digest(op)
+    if stored != live:
+        raise CheckpointMismatch(
+            f"checkpoint for range [{range_start}, {range_stop}) was written "
+            "by a different operator draw — refusing to resume into it"
+        )
+    if tuple(int(v) for v in np.asarray(tree["range"])) != (range_start, range_stop):
+        raise CheckpointMismatch(
+            f"checkpoint range metadata {np.asarray(tree['range'])} does not "
+            f"match [{range_start}, {range_stop})"
+        )
+    if isinstance(fresh.state, np.ndarray):
+        # SRHT keeps a host-side placement buffer updated in place — the
+        # restored state must be a WRITABLE numpy array, not a jax one.
+        fresh.state = np.array(tree["state"])
+    else:
+        fresh.state = jnp.asarray(tree["state"])
+    fresh.rows_seen = int(tree["rows_seen"])
+    fresh.tiles_seen = int(tree["tiles_seen"])
+    return fresh, int(tree["watermark"])

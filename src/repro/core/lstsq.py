@@ -372,6 +372,7 @@ def lstsq(
     history: bool = False,
     certified_rtol: float | None = None,
     certified_probes: int = 8,
+    cluster=None,
 ) -> SolveResult:
     """Solve min‖Ax − b‖₂ (+ λ‖x‖₂² with ``reg=λ``) with an auto-selected
     (or forced) solver.
@@ -403,6 +404,11 @@ def lstsq(
     forward-error target (``None`` → the adaptive QR-attainable default);
     ``certified_probes`` sets the distortion probe count.  The returned
     ``SolveResult.certificate`` carries the final posterior bound.
+
+    ``cluster=ClusterSpec(...)`` runs the streaming path across a
+    fault-tolerant multi-worker pool with checkpointable sketch state
+    (``repro.cluster``); it implies the streaming path, so a plain array
+    ``A`` is coerced to a row source first.
     """
     if accuracy not in ACCURACIES:
         raise ValueError(f"unknown accuracy {accuracy!r}; have {ACCURACIES}")
@@ -410,6 +416,11 @@ def lstsq(
         raise ValueError(
             f"unknown precision {precision!r}; have {backend_lib.PRECISIONS}"
         )
+    if cluster is not None and not callable(getattr(A, "tiles", None)):
+        # cluster solving is a streaming mode: coerce in-memory inputs
+        from ..streaming.sources import as_source as _as_source
+
+        A = _as_source(A)
     if callable(getattr(A, "tiles", None)):
         # Row-streamed (out-of-core) input: delegate to the two-pass
         # streaming drivers.  Lazy import — repro.streaming imports this
@@ -429,7 +440,7 @@ def lstsq(
             sketch_size=sketch_size, reg=reg, backend=backend,
             history=history, certify=accuracy == "certified",
             certified_rtol=certified_rtol, certified_probes=certified_probes,
-            **tol,
+            cluster=cluster, **tol,
         )
     A_in = linop.as_operator(A)
     if reg is not None:

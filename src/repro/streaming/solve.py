@@ -94,21 +94,44 @@ def stream_sketch(
     ncols = n + (1 if rhs is not None else 0)
     if rhs is not None and rhs.shape != (m,):
         raise ValueError(f"rhs must have shape ({m},), got {rhs.shape}")
-    acc = make_accumulator(op, ncols, dtype=jnp.dtype(source.dtype),
-                           backend=backend)
-    for offset, tile in source.tiles():
-        tile = jnp.asarray(tile)
-        if rhs is not None:
-            t = tile.shape[0]
-            tile = jnp.concatenate(
-                [tile, rhs[offset : offset + t][:, None].astype(tile.dtype)],
-                axis=1,
-            )
-        acc.update(tile, offset)
-    Bc = acc.finalize()
+    cluster_sketch = getattr(source, "cluster_sketch", None)
+    if callable(cluster_sketch):
+        # a ClusterEngine source: pass 1 fans out over the worker pool
+        # (checkpointed, fault-tolerant) and merges to the same sketch
+        Bc = cluster_sketch(op, rhs=rhs, backend=backend)
+    else:
+        acc = make_accumulator(op, ncols, dtype=jnp.dtype(source.dtype),
+                               backend=backend)
+        for offset, tile in source.tiles():
+            tile = jnp.asarray(tile)
+            if rhs is not None:
+                t = tile.shape[0]
+                tile = jnp.concatenate(
+                    [tile, rhs[offset : offset + t][:, None].astype(tile.dtype)],
+                    axis=1,
+                )
+            acc.update(tile, offset)
+        Bc = acc.finalize()
     if rhs is None:
         return Bc, op, None
     return Bc[:, :n], op, Bc[:, n]
+
+
+def _maybe_cluster(source, cluster, backend, counters=None):
+    """Wrap ``source`` in a ClusterEngine when a spec/engine was given.
+
+    Lazy import: ``repro.cluster`` imports the streaming layer, so the
+    dependency must point one way at module-import time.
+    """
+    if cluster is None:
+        return source
+    from ..cluster.coordinator import ClusterEngine
+
+    if isinstance(cluster, ClusterEngine):
+        if counters is not None and cluster.counters is None:
+            cluster.counters = counters
+        return cluster
+    return ClusterEngine(source, cluster, backend=backend, counters=counters)
 
 
 # --------------------------------------------------------------------------
@@ -117,13 +140,24 @@ def stream_sketch(
 
 
 def _stream_matvec(source, x):
-    """A @ x by placing per-tile products (exact placement, no summation)."""
+    """A @ x by placing per-tile products (exact placement, no summation).
+
+    Sources that distribute the product themselves (``ClusterEngine``)
+    expose a ``matvec`` method, which takes precedence over the serial
+    tile loop — same for ``rmatvec`` / ``residual_grad`` below.
+    """
+    mv = getattr(source, "matvec", None)
+    if callable(mv):
+        return mv(x)
     parts = [jnp.asarray(tile) @ x for _, tile in source.tiles()]
     return jnp.concatenate(parts, axis=0)
 
 
 def _stream_rmatvec(source, u):
     """Aᵀ @ u by accumulating per-tile adjoint products."""
+    rmv = getattr(source, "rmatvec", None)
+    if callable(rmv):
+        return rmv(u)
     n = source.shape[1]
     g = jnp.zeros((n,) + u.shape[1:], u.dtype)
     for offset, tile in source.tiles():
@@ -140,6 +174,9 @@ def _stream_residual_grad(source, b, x):
     iteration.  Generic over stacked right-hand sides (b (m, k), x (n, k)):
     the squared norms come back per column.
     """
+    rg = getattr(source, "residual_grad", None)
+    if callable(rg):
+        return rg(b, x)
     n = source.shape[1]
     g = jnp.zeros((n,) + b.shape[1:], b.dtype)
     rn2 = jnp.zeros(b.shape[1:], b.dtype)
@@ -417,6 +454,7 @@ def stream_lstsq(
     certify: bool = False,
     certified_rtol: float | None = None,
     certified_probes: int = 8,
+    cluster=None,
 ) -> SolveResult:
     """min‖Ax − b‖ (+ λ‖x‖² with ``reg=λ``) over a row-streamed A.
 
@@ -439,8 +477,14 @@ def stream_lstsq(
     escalation is attempted out-of-core — a failed certificate reports
     ``passed=False`` and the caller chooses between a larger
     ``sketch_size`` re-run or an in-memory method.
+
+    ``cluster=ClusterSpec(...)`` (or a prebuilt
+    :class:`~repro.cluster.coordinator.ClusterEngine`) runs every stream —
+    the pass-1 sketch and all pass-2 products — across a fault-tolerant
+    worker pool with checkpointable sketch state; see ``repro.cluster``.
     """
     source = as_source(source, tile_rows)
+    source = _maybe_cluster(source, cluster, backend)
     m, n = source.shape
     b = jnp.asarray(b)
     if b.shape != (m,):
@@ -577,7 +621,14 @@ def stream_lstsq(
 
 
 class _CountingSource(RowSource):
-    """Transparent wrapper that counts passes/tiles into a stats dict."""
+    """Transparent wrapper that counts passes/tiles into a stats dict.
+
+    Unknown attributes forward to the wrapped source, so the dispatch
+    probes in ``_stream_matvec`` et al. still find a ``ClusterEngine``'s
+    distributed methods through the wrapper (the engine then counts its
+    own passes/tiles via its ``counters`` hook — the serial counting here
+    only fires on the serial ``tiles()`` path, never both).
+    """
 
     def __init__(self, inner: RowSource, stats: dict):
         self.inner = inner
@@ -585,9 +636,19 @@ class _CountingSource(RowSource):
         self.shape = inner.shape
         self.dtype = inner.dtype
 
+    def __getattr__(self, name):
+        return getattr(self.__dict__["inner"], name)
+
     @property
     def tile_rows(self):
         return self.inner.tile_rows
+
+    @property
+    def supports_random_access(self):
+        return self.inner.supports_random_access
+
+    def read_rows(self, offset, length):
+        return self.inner.read_rows(offset, length)
 
     def tiles(self):
         self.stats["passes"] += 1
@@ -626,12 +687,17 @@ class StreamingSolver:
         steptol: float | None = None,
         iter_lim: int = 100,
         backend: str = "auto",
+        cluster=None,
     ):
         self.stats = {
             "sketches": 0, "qr_factorizations": 0, "solves": 0,
             "passes": 0, "tiles": 0,
         }
-        self.source = _CountingSource(as_source(source, tile_rows), self.stats)
+        inner = _maybe_cluster(
+            as_source(source, tile_rows), cluster, backend,
+            counters=self.stats,
+        )
+        self.source = _CountingSource(inner, self.stats)
         m, n = self.source.shape
         self.shape = (m, n)
         self.reg = reg

@@ -64,6 +64,19 @@ class RowSource:
         ``(t, n)`` array-like with 1 ≤ t ≤ ``tile_rows``."""
         raise NotImplementedError
 
+    # Optional random access: sources that can serve an arbitrary row
+    # window implement ``read_rows`` (Array/Memmap/Callback do).  The
+    # cluster shard views (``repro.cluster.shard.RowRangeSource``) prefer
+    # it — a worker then reads ONLY its own rows; sources without it fall
+    # back to filtering ``tiles()``, which is correct but streams the
+    # whole parent.  ``None`` here is the "not supported" marker probed
+    # via ``supports_random_access``.
+    read_rows = None
+
+    @property
+    def supports_random_access(self) -> bool:
+        return callable(self.read_rows)
+
     @property
     def tile_rows(self) -> int:
         return DEFAULT_TILE_ROWS
@@ -128,6 +141,9 @@ class ArraySource(RowSource):
         for a, b in zip(self._offsets[:-1], self._offsets[1:]):
             yield a, self.A[a:b]
 
+    def read_rows(self, offset: int, length: int):
+        return self.A[offset : offset + length]
+
 
 class CallbackSource(RowSource):
     """``fn(offset, length) -> (length, n) tile`` random-access producer."""
@@ -146,14 +162,17 @@ class CallbackSource(RowSource):
     def tiles(self):
         m, n = self.shape
         for o in range(0, m, self._tile_rows):
-            t = min(self._tile_rows, m - o)
-            tile = self.fn(o, t)
-            if tuple(tile.shape) != (t, n):
-                raise ValueError(
-                    f"callback returned shape {tuple(tile.shape)} for "
-                    f"(offset={o}, length={t}); expected ({t}, {n})"
-                )
-            yield o, tile
+            yield o, self.read_rows(o, min(self._tile_rows, m - o))
+
+    def read_rows(self, offset: int, length: int):
+        tile = self.fn(offset, length)
+        if tuple(tile.shape) != (length, self.shape[1]):
+            raise ValueError(
+                f"callback returned shape {tuple(tile.shape)} for "
+                f"(offset={offset}, length={length}); expected "
+                f"({length}, {self.shape[1]})"
+            )
+        return tile
 
 
 class GeneratorSource(RowSource):
@@ -227,6 +246,10 @@ class MemmapSource(RowSource):
             # pages can be dropped by the OS as soon as we move on.
             yield o, np.array(mm[o : o + t])
 
+    def read_rows(self, offset: int, length: int):
+        mm = np.load(self.path, mmap_mode="r")
+        return np.array(mm[offset : offset + length])
+
 
 class ShardedSource(RowSource):
     """Ordered concatenation of per-shard sources (multi-host ingest).
@@ -265,6 +288,26 @@ class ShardedSource(RowSource):
         for base, shard in zip(self.shard_offsets, self.shards):
             for o, tile in shard.tiles():
                 yield base + o, tile
+
+    @property
+    def supports_random_access(self) -> bool:
+        return all(s.supports_random_access for s in self.shards)
+
+    def read_rows(self, offset: int, length: int):
+        if not self.supports_random_access:
+            raise TypeError(
+                "ShardedSource.read_rows needs every shard to support "
+                "random access"
+            )
+        pieces = []
+        for base, shard in zip(self.shard_offsets, self.shards):
+            lo = max(offset, base)
+            hi = min(offset + length, base + shard.shape[0])
+            if lo < hi:
+                pieces.append(np.asarray(shard.read_rows(lo - base, hi - lo)))
+        if len(pieces) == 1:
+            return pieces[0]
+        return np.concatenate(pieces, axis=0)
 
 
 def as_source(A, tile_rows: int | None = None) -> RowSource:

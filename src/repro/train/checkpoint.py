@@ -10,7 +10,10 @@
 - Elastic restore: arrays are loaded on host and ``device_put`` against
   the *target* shardings — the restoring job may use a different mesh
   shape or device count than the writer (see repro.train.elastic).
-- keep_n garbage collection.
+- keep_n garbage collection, plus orphaned-``tmp.*`` cleanup: a writer
+  that crashes mid-write leaves its ``tmp.<step>.<pid>`` staging dir
+  behind; the next ``save()`` into the directory removes any staging dir
+  whose writer pid is gone (in-flight tmps of live writers are kept).
 """
 from __future__ import annotations
 
@@ -28,6 +31,34 @@ import numpy as np
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_RE = re.compile(r"^tmp\.(\d+)\.(\d+)$")
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True  # exists, owned by someone else
+    return True
+
+
+def _gc_orphan_tmps(ckpt_dir: str) -> list[str]:
+    """Remove ``tmp.<step>.<pid>`` staging dirs whose writer died.
+
+    A pid that no longer exists cannot complete its rename, so its
+    staging dir is garbage forever; a pid that is still alive may be
+    mid-write (another process, or this process's async worker) and its
+    tmp is left alone.  Returns the removed directory names.
+    """
+    removed = []
+    for d in os.listdir(ckpt_dir):
+        m = _TMP_RE.match(d)
+        if m and not _pid_alive(int(m.group(2))):
+            _rmtree(os.path.join(ckpt_dir, d))
+            removed.append(d)
+    return removed
 
 
 def _flatten(tree):
@@ -36,8 +67,13 @@ def _flatten(tree):
 
 
 def save(ckpt_dir: str, step: int, tree) -> str:
-    """Blocking atomic save.  Returns the checkpoint path."""
+    """Blocking atomic save.  Returns the checkpoint path.
+
+    Also sweeps staging dirs orphaned by crashed writers — the save that
+    follows a crash is the natural (and only safe) point to clean up.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
+    _gc_orphan_tmps(ckpt_dir)
     named, _ = _flatten(tree)
     host = {k: np.asarray(v) for k, v in named.items()}
     tmp = os.path.join(ckpt_dir, f"tmp.{step}.{os.getpid()}")

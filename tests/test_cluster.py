@@ -1,0 +1,405 @@
+"""repro.cluster: sharding, fault injection, and the coordinator engine.
+
+The load-bearing claims, in test order:
+
+- row-range partitioning is tile-aligned, balanced and deterministic, and
+  ownership reassignment after a death is too;
+- a :class:`RowRangeSource` yields exactly the parent's global-grid tiles
+  restricted to its window, for random-access and sequential parents;
+- the cluster engine's pass-1 sketch equals the single-stream sketch
+  (allclose at merge-grouping rounding for the additive kinds, bit-equal
+  for SRHT whose placement never sums across ranges), and its pass-2
+  products equal the dense ones;
+- a worker killed mid-pass is recovered from its accumulator checkpoint
+  and the faulted run's merged sketch is BIT-EQUAL to the unfaulted
+  cluster run's — resume adds no rounding;
+- zombie/duplicate submissions are deduped, heartbeat-stale workers are
+  evicted, and the recovery budget is enforced;
+- ``stream_lstsq`` / ``StreamingSolver`` / ``lstsq`` route through the
+  pool via ``cluster=``.
+
+The full kill-and-resume memmap solve (the ISSUE acceptance demo) is the
+``slow``-marked test at the bottom.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterEngine,
+    ClusterFailure,
+    ClusterSpec,
+    DelayWorker,
+    DuplicateMerge,
+    FaultPlan,
+    KillWorker,
+    OwnershipMap,
+    RowRange,
+    RowRangeSource,
+    partition_rows,
+    split_range,
+)
+from repro.core import generate_problem, lstsq, qr_solve
+from repro.streaming import (
+    ArraySource,
+    GeneratorSource,
+    MemmapSource,
+    StreamingSolver,
+    stream_lstsq,
+    stream_sketch,
+)
+
+M, N = 600, 12
+TILE = 50
+
+
+@pytest.fixture(scope="module")
+def prob():
+    key = jax.random.key(0)
+    A = jnp.asarray(
+        np.asarray(jax.random.normal(key, (M, N)), np.float64)
+    )
+    b = jnp.asarray(
+        np.asarray(jax.random.normal(jax.random.fold_in(key, 1), (M,)),
+                   np.float64)
+    )
+    return A, b
+
+
+def make_engine(A, *, workers=3, faults=None, ckpt_dir=None,
+                checkpoint_every=1, **kw):
+    spec = ClusterSpec(num_workers=workers, faults=faults, ckpt_dir=ckpt_dir,
+                       checkpoint_every=checkpoint_every, **kw)
+    return ClusterEngine(ArraySource(np.asarray(A), tile_rows=TILE), spec)
+
+
+# ---------------------------------------------------------------------------
+# sharding arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_partition_rows_tile_aligned_and_balanced():
+    ranges = partition_rows(1000, 3, 128)  # 8 tiles over 3 workers: 3/3/2
+    assert [r.tiles(128) for r in ranges] == [3, 3, 2]
+    assert ranges[0].start == 0 and ranges[-1].stop == 1000
+    for a, b in zip(ranges[:-1], ranges[1:]):
+        assert a.stop == b.start  # contiguous
+        assert a.stop % 128 == 0  # on the grid
+    # more workers than tiles: the surplus idles on empty ranges
+    ranges = partition_rows(100, 4, 64)
+    assert [r.rows for r in ranges] == [64, 36, 0, 0]
+    with pytest.raises(ValueError, match="need >= 1 worker"):
+        partition_rows(100, 0, 64)
+
+
+def test_split_range_reassignment_arithmetic():
+    rng = RowRange(128, 1000)
+    parts = split_range(rng, 2, 128)
+    assert parts[0].start == 128 and parts[-1].stop == 1000
+    assert sum(p.tiles(128) for p in parts) == rng.tiles(128)
+    for p in parts[:-1]:
+        assert p.stop % 128 == 0
+    assert split_range(RowRange(5, 5), 3, 2) == []
+    # never more pieces than tiles
+    assert len(split_range(RowRange(0, 100), 8, 50)) == 2
+
+
+def test_ownership_reassign_least_loaded_deterministic():
+    own = OwnershipMap.initial(1000, [0, 1, 2], 128)
+    assert own.remaining_tiles(0) == 3 and own.remaining_tiles(2) == 2
+    moved = own.reassign(0, [1, 2])
+    # worker 2 had the least work, so it takes the dead worker's range
+    assert moved == [(2, RowRange(0, 384))]
+    assert own.owner_of(RowRange(0, 384)) == 2
+    assert 0 not in own.assignments
+    with pytest.raises(RuntimeError, match="no live workers"):
+        own.reassign(1, [])
+
+
+def test_row_range_source_random_access(prob, tmp_path):
+    A, _ = prob
+    path = tmp_path / "a.npy"
+    np.save(path, np.asarray(A))
+    parent = MemmapSource(path, tile_rows=TILE)
+    sub = RowRangeSource(parent, 75, 300, tile_rows=TILE)
+    assert sub.shape == (225, N)
+    offs, tiles = zip(*sub.tiles())
+    # windows follow the PARENT grid: first a partial tile up to the next
+    # grid edge, then whole tiles, local offsets relative to start=75
+    assert list(offs) == [0, 25, 75, 125, 175]
+    assert np.array_equal(np.concatenate(tiles), np.asarray(A[75:300]))
+    assert np.array_equal(sub.read_rows(10, 5), np.asarray(A[85:90]))
+    with pytest.raises(ValueError, match="outside"):
+        sub.read_rows(220, 10)
+    with pytest.raises(ValueError, match="outside the parent"):
+        RowRangeSource(parent, 100, M + 1)
+
+
+def test_row_range_source_sequential_fallback(prob):
+    A, _ = prob
+    An = np.asarray(A)
+    parent = GeneratorSource(
+        lambda: (An[o : o + TILE] for o in range(0, M, TILE)),
+        A.shape, A.dtype, tile_rows=TILE,
+    )
+    assert not parent.supports_random_access
+    sub = RowRangeSource(parent, 75, 300, tile_rows=TILE)
+    offs, tiles = zip(*sub.tiles())
+    assert list(offs) == [0, 25, 75, 125, 175]
+    assert np.array_equal(np.concatenate(tiles), An[75:300])
+    with pytest.raises(TypeError, match="random access"):
+        sub.read_rows(0, 5)
+
+
+def test_fault_plan_fire_once_bookkeeping():
+    plan = FaultPlan(KillWorker(worker=1, at_tile=2), DuplicateMerge(worker=0))
+    plan.before_tile(1, "sketch", 0)  # no trigger
+    plan.before_tile(1, "matvec", 2)  # wrong phase
+    assert plan.fired == []
+    with pytest.raises(Exception, match="injected kill"):
+        plan.before_tile(1, "sketch", 2)
+    plan.before_tile(1, "sketch", 2)  # fire-once: second call is a no-op
+    assert plan.duplicate_submission(0) is True
+    assert plan.duplicate_submission(0) is False
+    assert len(plan.fired) == 2
+
+
+# ---------------------------------------------------------------------------
+# engine parity (no faults)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["countsketch", "srht", "gaussian"])
+def test_cluster_sketch_matches_single_stream(prob, tmp_path, kind):
+    A, b = prob
+    serial = ArraySource(np.asarray(A), tile_rows=TILE)
+    B0, op0, c0 = stream_sketch(serial, jax.random.key(7), sketch=kind,
+                                sketch_size=128, rhs=b)
+    eng = make_engine(A, ckpt_dir=str(tmp_path))
+    B1, op1, c1 = stream_sketch(eng, jax.random.key(7), sketch=kind,
+                                sketch_size=128, rhs=b)
+    eng.close()
+    if kind == "srht":
+        # placement semantics: ranges write disjoint buffer rows, the
+        # merge adds exact zeros — bit-equal even across the fan-out
+        assert jnp.array_equal(B0, B1) and jnp.array_equal(c0, c1)
+    else:
+        assert jnp.allclose(B0, B1, rtol=0, atol=1e-12)
+        assert jnp.allclose(c0, c1, rtol=0, atol=1e-12)
+    assert eng.stats["passes"] == 1
+    assert eng.stats["tiles"] == M // TILE
+
+
+def test_cluster_pass2_products_match_dense(prob):
+    A, b = prob
+    eng = make_engine(A, checkpoint_every=0)
+    x = jnp.asarray(np.linspace(0.0, 1.0, N))
+    u = jnp.asarray(np.linspace(0.0, 1.0, M))
+    assert jnp.allclose(eng.matvec(x), A @ x, rtol=0, atol=1e-12)
+    assert jnp.allclose(eng.rmatvec(u), A.T @ u, rtol=0, atol=1e-12)
+    rn2, g = eng.residual_grad(b, x)
+    r = b - A @ x
+    assert jnp.allclose(jnp.sqrt(rn2), jnp.linalg.norm(r), rtol=1e-12)
+    assert jnp.allclose(g, A.T @ r, rtol=0, atol=1e-10)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def _cluster_sketch(A, b, tmp, *, faults=None, workers=3,
+                    checkpoint_every=1, **kw):
+    eng = make_engine(A, workers=workers, faults=faults, ckpt_dir=tmp,
+                      checkpoint_every=checkpoint_every, **kw)
+    B, _, c = stream_sketch(eng, jax.random.key(7), sketch_size=128, rhs=b)
+    eng.close()
+    return B, c, eng.stats
+
+
+def test_kill_recovers_from_checkpoint_bit_equal(prob, tmp_path):
+    """Worker killed mid-pass: its range resumes from the accumulator
+    checkpoint on a surviving worker and the merged sketch is BIT-EQUAL
+    to the unfaulted cluster run (resume adds no arithmetic)."""
+    A, b = prob
+    B0, c0, st0 = _cluster_sketch(A, b, str(tmp_path / "clean"))
+    plan = FaultPlan(KillWorker(worker=1, at_tile=2))
+    B1, c1, st1 = _cluster_sketch(A, b, str(tmp_path / "kill"), faults=plan)
+    assert plan.fired, "the kill must actually have triggered"
+    assert st1["recoveries"] == 1
+    assert st1["reassignments"] == 1
+    assert st1["restores"] == 1, "recovery must resume from the checkpoint"
+    assert jnp.array_equal(B0, B1)
+    assert jnp.array_equal(c0, c1)
+
+
+def test_kill_without_checkpoints_restarts_range(prob, tmp_path):
+    A, b = prob
+    B0, c0, _ = _cluster_sketch(A, b, str(tmp_path / "clean"),
+                                checkpoint_every=0)
+    B1, c1, st = _cluster_sketch(
+        A, b, str(tmp_path / "kill"), checkpoint_every=0,
+        faults=[KillWorker(worker=0, at_tile=1)],
+    )
+    assert st["recoveries"] == 1 and st["restores"] == 0
+    assert jnp.array_equal(B0, B1) and jnp.array_equal(c0, c1)
+
+
+def test_duplicate_submission_deduped(prob, tmp_path):
+    A, b = prob
+    B0, c0, _ = _cluster_sketch(A, b, str(tmp_path / "clean"))
+    B1, c1, st = _cluster_sketch(A, b, str(tmp_path / "dup"),
+                                 faults=[DuplicateMerge(worker=0)])
+    assert st["duplicates_dropped"] == 1
+    assert jnp.array_equal(B0, B1) and jnp.array_equal(c0, c1)
+
+
+def test_heartbeat_eviction_of_stalled_worker(prob, tmp_path):
+    """A stalled (not dead) worker goes heartbeat-stale, is evicted, and
+    its range is recomputed elsewhere; the zombie's eventual submission
+    must not corrupt the merge."""
+    A, b = prob
+    B0, c0, _ = _cluster_sketch(A, b, str(tmp_path / "clean"))
+    B1, c1, st = _cluster_sketch(
+        A, b, str(tmp_path / "slow"),
+        faults=[DelayWorker(worker=2, seconds=1.5, at_tile=1)],
+        heartbeat_timeout=0.25, poll_interval=0.02,
+    )
+    assert st["heartbeat_evictions"] >= 1
+    assert st["recoveries"] >= 1
+    assert jnp.array_equal(B0, B1) and jnp.array_equal(c0, c1)
+
+
+def test_recovery_budget_enforced(prob, tmp_path):
+    A, b = prob
+    eng = make_engine(
+        A, workers=2, ckpt_dir=str(tmp_path),
+        faults=[KillWorker(worker=0, at_tile=0)], max_recoveries=0,
+    )
+    with pytest.raises(ClusterFailure, match="recovery budget"):
+        stream_sketch(eng, jax.random.key(7), sketch_size=128, rhs=b)
+    eng.close()
+
+
+def test_all_workers_dead_respawns(prob, tmp_path):
+    """Killing every pool member forces a respawned replacement worker."""
+    A, b = prob
+    B0, c0, _ = _cluster_sketch(A, b, str(tmp_path / "clean"), workers=2)
+    B1, c1, st = _cluster_sketch(
+        A, b, str(tmp_path / "wipe"), workers=2,
+        faults=[KillWorker(worker=0, at_tile=1),
+                KillWorker(worker=1, at_tile=1),
+                # replacement workers get fresh ids 2, 3, ...
+                ],
+        max_recoveries=4,
+    )
+    assert st["recoveries"] == 2
+    assert st["respawns"] >= 1
+    assert jnp.array_equal(B0, B1) and jnp.array_equal(c0, c1)
+
+
+# ---------------------------------------------------------------------------
+# routing: stream_lstsq / StreamingSolver / lstsq
+# ---------------------------------------------------------------------------
+
+
+def test_stream_lstsq_cluster_matches_serial(prob, tmp_path):
+    A, b = prob
+    res0 = stream_lstsq(ArraySource(np.asarray(A), tile_rows=TILE), b,
+                        jax.random.key(3), method="saa", sketch_size=128)
+    spec = ClusterSpec(num_workers=3, ckpt_dir=str(tmp_path),
+                       faults=[KillWorker(worker=0, at_tile=1)])
+    res1 = stream_lstsq(ArraySource(np.asarray(A), tile_rows=TILE), b,
+                        jax.random.key(3), method="saa", sketch_size=128,
+                        cluster=spec)
+    assert jnp.allclose(res0.x, res1.x, rtol=0, atol=1e-9)
+    assert res1.method == "stream_saa"
+
+
+def test_lstsq_cluster_coerces_plain_arrays(prob):
+    A, b = prob
+    x_qr = qr_solve(A, b)
+    res = lstsq(A, b, jax.random.key(3), method="saa", sketch_size=128,
+                cluster=ClusterSpec(num_workers=2, checkpoint_every=0))
+    assert res.method == "stream_saa"
+    assert float(jnp.linalg.norm(res.x - x_qr) / jnp.linalg.norm(x_qr)) < 1e-8
+
+
+def test_streaming_solver_cluster_session(prob, tmp_path):
+    A, b = prob
+    spec = ClusterSpec(num_workers=2, ckpt_dir=str(tmp_path),
+                       checkpoint_every=2)
+    solver = StreamingSolver(ArraySource(np.asarray(A), tile_rows=TILE),
+                             jax.random.key(3), sketch_size=128, cluster=spec)
+    serial = StreamingSolver(ArraySource(np.asarray(A), tile_rows=TILE),
+                             jax.random.key(3), sketch_size=128)
+    r0, r1 = serial.solve(b), solver.solve(b)
+    assert jnp.allclose(r0.x, r1.x, rtol=0, atol=1e-9)
+    # the engine's counters hook feeds the session's cost model
+    assert solver.stats["passes"] >= 2  # sketch + iteration streams
+    assert solver.stats["tiles"] >= 2 * (M // TILE)
+    assert solver.stats["solves"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the acceptance demo: out-of-core memmap, kill mid-pass, certified answer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_kill_and_resume_certified_memmap_solve(tmp_path):
+    """A memmapped problem larger than any single worker's tile budget,
+    solved across 4 workers with a worker killed mid-pass-1: the engine
+    restores the dead worker's accumulator checkpoint, reassigns the
+    remaining range, the merged sketch is bit-equal to the uninterrupted
+    cluster run's (scatter kind), and the final solution matches the
+    uninterrupted run's certificate-passing answer."""
+    m, n, tile = 12000, 40, 250
+    prob = generate_problem(jax.random.key(11), m, n, cond=1e6, beta=1e-4)
+    path = tmp_path / "A.npy"
+    np.save(path, np.asarray(prob.A))
+    b = prob.b
+
+    def solve(ckpt, faults):
+        eng = ClusterEngine(
+            MemmapSource(path, tile_rows=tile),
+            ClusterSpec(num_workers=4, ckpt_dir=str(ckpt), faults=faults,
+                        checkpoint_every=3),
+        )
+        # sketch first: the injected kill fires HERE, so the compared
+        # sketch is the one that went through kill-and-resume (the later
+        # lstsq pass simply runs on the surviving pool)
+        B, _, c = stream_sketch(eng, jax.random.key(5), sketch_size=8 * n,
+                                rhs=b)
+        res = lstsq(eng, b, jax.random.key(5), accuracy="certified",
+                    sketch_size=8 * n)
+        eng.close()
+        return res, B, c, eng.stats
+
+    res0, B0, c0, st0 = solve(tmp_path / "clean", None)
+    plan = FaultPlan(KillWorker(worker=2, at_tile=5))
+    res1, B1, c1, st1 = solve(tmp_path / "faulted", plan)
+
+    # each worker held ~1/4 of the tiles; the problem exceeds any single
+    # worker's budget by construction
+    assert m // tile > 4
+    assert plan.fired and st1["recoveries"] == 1 and st1["restores"] == 1
+    # the sketch after kill-and-resume is bit-equal (scatter kind)
+    assert jnp.array_equal(B0, B1) and jnp.array_equal(c0, c1)
+    # both certificates pass and the answers agree
+    assert res0.certificate is not None and bool(res0.certificate.passed)
+    assert res1.certificate is not None and bool(res1.certificate.passed)
+    assert jnp.allclose(res0.x, res1.x, rtol=0, atol=1e-9)
+    err = float(jnp.linalg.norm(res1.x - prob.x_true)
+                / jnp.linalg.norm(prob.x_true))
+    assert err < max(float(res1.certificate.rel_error_bound), 1e-6)
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(pytest.main([__file__, "-v"] + sys.argv[1:]))

