@@ -15,6 +15,7 @@ from .checkpoint import (
     CheckpointMismatch,
     latest_watermark,
     op_digest,
+    pass_namespace,
     restore_accumulator,
     save_accumulator,
 )
@@ -44,6 +45,7 @@ __all__ = [
     "partition_rows",
     "split_range",
     "op_digest",
+    "pass_namespace",
     "save_accumulator",
     "restore_accumulator",
     "latest_watermark",

@@ -41,6 +41,7 @@ from ..train import checkpoint as ckpt_lib
 
 __all__ = [
     "op_digest",
+    "pass_namespace",
     "save_accumulator",
     "restore_accumulator",
     "latest_watermark",
@@ -72,6 +73,24 @@ def op_digest(op) -> bytes:
         h.update(str((arr.shape, arr.dtype.str)).encode())
         h.update(arr.tobytes())
     return h.digest()
+
+
+def pass_namespace(op, rhs=None) -> str:
+    """Checkpoint namespace (a ``phase`` directory name) for ONE pass-1
+    sketch: a digest of the operator draw plus the rhs riding along.
+
+    A different draw — or the same draw over a different right-hand side
+    — lands in a different namespace, so leftovers from an earlier run in
+    a persistent ``ckpt_dir`` restore ``None`` (fresh start) instead of
+    raising :class:`CheckpointMismatch` (wrong draw) or, worse, silently
+    resuming a partial that folded in someone else's rhs column.
+    """
+    h = hashlib.blake2b(op_digest(op), digest_size=8)
+    if rhs is not None:
+        arr = np.asarray(rhs)
+        h.update(str((arr.shape, arr.dtype.str)).encode())
+        h.update(arr.tobytes())
+    return f"pass1-{h.hexdigest()}"
 
 
 def _range_dir(ckpt_dir: str, start: int, stop: int, phase: str = "pass1") -> str:

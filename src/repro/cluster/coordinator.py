@@ -43,7 +43,9 @@ cluster=...)`` all run their streams through the pool unchanged.
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
+import shutil
 import tempfile
 import threading
 import time
@@ -74,12 +76,17 @@ class ClusterSpec:
                            checkpoints (0/None disables — a killed range
                            then restarts from its first row).
     ``ckpt_dir``           checkpoint root (None → a fresh temp dir per
-                           engine).
+                           engine, removed again by ``close()``).
     ``heartbeat_timeout``  seconds without a worker heartbeat before the
-                           monitor declares it dead.
+                           monitor declares it dead.  Staleness is
+                           measured from the later of the worker's last
+                           beat and the task's dispatch time, so an idle
+                           pool between passes never goes stale.
     ``poll_interval``      monitor poll cadence in seconds.
-    ``max_recoveries``     total worker deaths tolerated per engine
-                           before :class:`ClusterFailure`.
+    ``max_recoveries``     worker deaths tolerated per PASS (each
+                           fan-out) before :class:`ClusterFailure`;
+                           ``stats["recoveries"]`` still counts engine
+                           lifetime totals.
     ``faults``             a :class:`~repro.cluster.faults.FaultPlan` (or
                            event list) injected into the worker loops.
     """
@@ -102,7 +109,8 @@ _STOP = object()
 
 
 class _Task:
-    __slots__ = ("rng", "fn", "epoch", "status", "result", "error", "done")
+    __slots__ = ("rng", "fn", "epoch", "status", "result", "error", "done",
+                 "dispatched_at")
 
     def __init__(self, rng: RowRange, fn, epoch: int = 0):
         self.rng = rng
@@ -112,6 +120,7 @@ class _Task:
         self.result = None
         self.error = None
         self.done = threading.Event()
+        self.dispatched_at = time.monotonic()  # re-stamped on submit
 
 
 class _Worker:
@@ -140,6 +149,7 @@ class _Worker:
         return self.thread.is_alive()
 
     def submit(self, task: _Task):
+        task.dispatched_at = time.monotonic()
         self.tasks.append(task)
         self.inbox.put(task)
 
@@ -188,9 +198,12 @@ class ClusterEngine(RowSource):
         self.counters = counters  # optional external pass/tile counters
         self._grid = int(self.spec.tile_rows or self.source.tile_rows)
         self._plan = as_plan(self.spec.faults)
+        self._owns_ckpt_dir = self.spec.ckpt_dir is None
         self._ckpt_dir = self.spec.ckpt_dir or tempfile.mkdtemp(
             prefix="repro-cluster-"
         )
+        self._closed = False
+        self._pass_recoveries = 0  # reset by every _execute fan-out
         self._workers: dict[int, _Worker] = {
             w: _Worker(w) for w in range(self.spec.num_workers)
         }
@@ -240,8 +253,20 @@ class ClusterEngine(RowSource):
         return self._ckpt_dir
 
     def close(self):
+        """Stop the pool; idempotent.  A temp checkpoint dir the engine
+        created for itself is removed with it (a caller-provided
+        ``spec.ckpt_dir`` is left untouched)."""
+        if self._closed:
+            return
+        self._closed = True
         for w in self._workers.values():
             w.stop()
+        for w in self._workers.values():
+            # bounded join: healthy workers exit on _STOP instantly;
+            # an injected zombie may still be sleeping — don't hang on it
+            w.thread.join(timeout=0.5)
+        if self._owns_ckpt_dir:
+            shutil.rmtree(self._ckpt_dir, ignore_errors=True)
 
     # ------------------------------------------------------------ plumbing
     def _live_ids(self) -> list[int]:
@@ -251,6 +276,7 @@ class ClusterEngine(RowSource):
         ]
 
     def _fault_gate(self, worker: _Worker, phase: str):
+        worker.beat()  # starting a tile is life, even if it computes long
         with self._lock:
             k = (worker.id, phase)
             tile = self._tile_counts.get(k, 0)
@@ -273,10 +299,11 @@ class ClusterEngine(RowSource):
                  pending: dict):
         """Declare ``victim`` dead and reassign its unfinished ranges."""
         self.stats["recoveries"] += 1
-        if self.stats["recoveries"] > self.spec.max_recoveries:
+        self._pass_recoveries += 1
+        if self._pass_recoveries > self.spec.max_recoveries:
             raise ClusterFailure(
-                f"recovery budget exhausted ({self.spec.max_recoveries}); "
-                f"last casualty: worker {victim}"
+                f"recovery budget exhausted ({self.spec.max_recoveries} "
+                f"per pass); last casualty: worker {victim}"
             )
         self._dead.add(victim)
         wk = self._workers[victim]
@@ -302,6 +329,9 @@ class ClusterEngine(RowSource):
         """Run ``make_fn(rng)(worker)`` for every range on the pool with
         heartbeat monitoring and kill/timeout recovery.  Returns
         {range: result} once every range has completed somewhere."""
+        if self._closed:
+            raise ClusterFailure("engine is closed")
+        self._pass_recoveries = 0
         live = self._live_ids()
         if not live:
             raise ClusterFailure("no live workers")
@@ -339,8 +369,13 @@ class ClusterEngine(RowSource):
                     raise task.error
                 elif owner is not None:
                     wk = self._workers[owner]
+                    # staleness from the later of the worker's last beat
+                    # and this task's dispatch: a pool that sat idle
+                    # between passes (or a queued task behind a long
+                    # tile) is not dead, it just hasn't started yet
+                    alive_ref = max(wk.last_beat, task.dispatched_at)
                     stale = (
-                        time.monotonic() - wk.last_beat
+                        time.monotonic() - alive_ref
                         > self.spec.heartbeat_timeout
                     )
                     if stale or not wk.thread_alive:
@@ -362,6 +397,11 @@ class ClusterEngine(RowSource):
         ncols = n + (1 if rhs is not None else 0)
         dtype = jnp.dtype(self.dtype)
         ckpt_every = self.spec.checkpoint_every or 0
+        # checkpoints are namespaced by (operator draw, rhs): leftovers in
+        # a persistent ckpt_dir from a DIFFERENT draw or rhs restore None
+        # (fresh start) instead of failing — or silently poisoning — the
+        # new pass
+        ns = cckpt.pass_namespace(op, rhs)
         self._count_pass()
         with self._lock:
             self._submissions = []
@@ -380,7 +420,7 @@ class ClusterEngine(RowSource):
                     got = cckpt.restore_accumulator(
                         self._ckpt_dir, op, ncols,
                         range_start=rng.start, range_stop=rng.stop,
-                        dtype=dtype, backend=backend,
+                        phase=ns, dtype=dtype, backend=backend,
                     )
                     if got is not None:
                         acc, wm = got
@@ -411,6 +451,7 @@ class ClusterEngine(RowSource):
                             cckpt.save_accumulator(
                                 self._ckpt_dir, acc, gl + t,
                                 range_start=rng.start, range_stop=rng.stop,
+                                phase=ns,
                             )
                         with self._lock:
                             self.stats["checkpoints"] += 1
@@ -441,7 +482,13 @@ class ClusterEngine(RowSource):
         if covered != m:
             raise ClusterFailure(f"pass-1 covered {covered} of {m} rows")
         merged = merge_all([chosen[rng] for rng in sorted(chosen)])
-        return merged.finalize()
+        out = merged.finalize()
+        # the pass succeeded: its mid-range checkpoints are spent — clear
+        # them so a persistent ckpt_dir doesn't grow without bound
+        if ckpt_every:
+            shutil.rmtree(os.path.join(self._ckpt_dir, ns),
+                          ignore_errors=True)
+        return out
 
     def _partition(self) -> list[RowRange]:
         live = self._live_ids()

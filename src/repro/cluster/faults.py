@@ -27,6 +27,7 @@ across resumes (a replacement worker gets a fresh count).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 __all__ = [
@@ -69,19 +70,23 @@ class FaultPlan:
     def __init__(self, *events):
         self.events = tuple(events)
         self.fired: list = []
+        self._lock = threading.Lock()  # every worker thread calls _take
 
     def __repr__(self):
         return f"FaultPlan({', '.join(map(repr, self.events))})"
 
     def _take(self, match) -> list:
-        out = []
-        for ev in self.events:
-            if ev in self.fired:
-                continue
-            if match(ev):
-                self.fired.append(ev)
-                out.append(ev)
-        return out
+        # check-then-append must be atomic: a fire-once event polled by
+        # two worker threads at the same tile would otherwise fire twice
+        with self._lock:
+            out = []
+            for ev in self.events:
+                if ev in self.fired:
+                    continue
+                if match(ev):
+                    self.fired.append(ev)
+                    out.append(ev)
+            return out
 
     def before_tile(self, worker: int, phase: str, tile: int) -> None:
         """Called by the worker loop before it starts a tile.  Applies

@@ -120,18 +120,26 @@ def stream_sketch(
 def _maybe_cluster(source, cluster, backend, counters=None):
     """Wrap ``source`` in a ClusterEngine when a spec/engine was given.
 
+    Returns ``(source, owned)`` where ``owned`` is the engine THIS call
+    constructed (the caller must ``close()`` it when done — its worker
+    threads and temp checkpoint dir outlive the solve otherwise), or
+    ``None`` when the source passed through or the engine was
+    caller-provided (caller-provided engines stay open for reuse).
+
     Lazy import: ``repro.cluster`` imports the streaming layer, so the
     dependency must point one way at module-import time.
     """
     if cluster is None:
-        return source
+        return source, None
     from ..cluster.coordinator import ClusterEngine
 
     if isinstance(cluster, ClusterEngine):
         if counters is not None and cluster.counters is None:
             cluster.counters = counters
-        return cluster
-    return ClusterEngine(source, cluster, backend=backend, counters=counters)
+        return cluster, None
+    engine = ClusterEngine(source, cluster, backend=backend,
+                           counters=counters)
+    return engine, engine
 
 
 # --------------------------------------------------------------------------
@@ -482,9 +490,31 @@ def stream_lstsq(
     :class:`~repro.cluster.coordinator.ClusterEngine`) runs every stream —
     the pass-1 sketch and all pass-2 products — across a fault-tolerant
     worker pool with checkpointable sketch state; see ``repro.cluster``.
+    An engine built HERE from a spec is torn down again before returning
+    (worker threads joined, temp checkpoint dir removed); a prebuilt
+    engine is left open for the caller to reuse and ``close()``.
     """
     source = as_source(source, tile_rows)
-    source = _maybe_cluster(source, cluster, backend)
+    source, owned = _maybe_cluster(source, cluster, backend)
+    try:
+        return _stream_lstsq_impl(
+            source, b, key, method=method, sketch=sketch,
+            sketch_size=sketch_size, reg=reg, atol=atol, btol=btol,
+            steptol=steptol, iter_lim=iter_lim, backend=backend,
+            history=history, certify=certify,
+            certified_rtol=certified_rtol,
+            certified_probes=certified_probes,
+        )
+    finally:
+        if owned is not None:
+            owned.close()
+
+
+def _stream_lstsq_impl(
+    source, b, key, *, method, sketch, sketch_size, reg, atol, btol,
+    steptol, iter_lim, backend, history, certify, certified_rtol,
+    certified_probes,
+) -> SolveResult:
     m, n = source.shape
     b = jnp.asarray(b)
     if b.shape != (m,):
@@ -693,37 +723,55 @@ class StreamingSolver:
             "sketches": 0, "qr_factorizations": 0, "solves": 0,
             "passes": 0, "tiles": 0,
         }
-        inner = _maybe_cluster(
+        inner, self._owned_engine = _maybe_cluster(
             as_source(source, tile_rows), cluster, backend,
             counters=self.stats,
         )
-        self.source = _CountingSource(inner, self.stats)
-        m, n = self.source.shape
-        self.shape = (m, n)
-        self.reg = reg
-        self.sketch_size = (
-            sketch_size if sketch_size is not None
-            else default_sketch_size(n, m)
-        )
-        self.backend = resolve_backend(backend).name
-        self._dtype = jnp.dtype(self.source.dtype)
-        if steptol is None:
-            steptol = 32 * float(jnp.finfo(self._dtype).eps)
-        self._kw = dict(atol=atol, btol=btol, steptol=steptol,
-                        iter_lim=iter_lim)
-
-        B, self._sketch_op, _ = stream_sketch(
-            self.source, key, sketch=sketch, sketch_size=self.sketch_size,
-            backend=self.backend,
-        )
-        self.stats["sketches"] += 1
-        if reg is not None:
-            sqrt_lam = jnp.sqrt(jnp.asarray(reg, B.dtype))
-            B = jnp.concatenate(
-                [B, sqrt_lam * jnp.eye(n, dtype=B.dtype)], axis=0
+        try:
+            self.source = _CountingSource(inner, self.stats)
+            m, n = self.source.shape
+            self.shape = (m, n)
+            self.reg = reg
+            self.sketch_size = (
+                sketch_size if sketch_size is not None
+                else default_sketch_size(n, m)
             )
-        self.factor = SketchedFactor.from_sketch(B)
-        self.stats["qr_factorizations"] += 1
+            self.backend = resolve_backend(backend).name
+            self._dtype = jnp.dtype(self.source.dtype)
+            if steptol is None:
+                steptol = 32 * float(jnp.finfo(self._dtype).eps)
+            self._kw = dict(atol=atol, btol=btol, steptol=steptol,
+                            iter_lim=iter_lim)
+
+            B, self._sketch_op, _ = stream_sketch(
+                self.source, key, sketch=sketch,
+                sketch_size=self.sketch_size, backend=self.backend,
+            )
+            self.stats["sketches"] += 1
+            if reg is not None:
+                sqrt_lam = jnp.sqrt(jnp.asarray(reg, B.dtype))
+                B = jnp.concatenate(
+                    [B, sqrt_lam * jnp.eye(n, dtype=B.dtype)], axis=0
+                )
+            self.factor = SketchedFactor.from_sketch(B)
+            self.stats["qr_factorizations"] += 1
+        except BaseException:
+            self.close()  # a failed build must not leak the worker pool
+            raise
+
+    def close(self):
+        """Release a cluster engine this solver built from a ``cluster=``
+        spec (worker threads + temp checkpoint dir); no-op otherwise and
+        on repeat calls.  A caller-provided engine is never touched."""
+        if self._owned_engine is not None:
+            self._owned_engine.close()
+            self._owned_engine = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # ------------------------------------------------------------- helpers
     def _sketch_rhs(self, B_rhs: jax.Array) -> jax.Array:

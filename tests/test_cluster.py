@@ -22,6 +22,8 @@ The full kill-and-resume memmap solve (the ISSUE acceptance demo) is the
 ``slow``-marked test at the bottom.
 """
 import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -152,6 +154,27 @@ def test_row_range_source_sequential_fallback(prob):
     assert np.array_equal(np.concatenate(tiles), An[75:300])
     with pytest.raises(TypeError, match="random access"):
         sub.read_rows(0, 5)
+
+
+def test_fault_plan_take_is_thread_safe():
+    """A fire-once event polled concurrently from many worker threads
+    must fire exactly once (the check-then-append is locked)."""
+    plan = FaultPlan(DuplicateMerge(worker=0))
+    n_threads = 8
+    barrier = threading.Barrier(n_threads)
+    results = []
+
+    def poll():
+        barrier.wait()
+        results.append(plan.duplicate_submission(0))
+
+    threads = [threading.Thread(target=poll) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(results) == 1
+    assert len(plan.fired) == 1
 
 
 def test_fault_plan_fire_once_bookkeeping():
@@ -302,6 +325,102 @@ def test_all_workers_dead_respawns(prob, tmp_path):
     assert jnp.array_equal(B0, B1) and jnp.array_equal(c0, c1)
 
 
+def test_idle_pool_is_not_heartbeat_evicted(prob, tmp_path):
+    """A healthy pool that sat idle longer than heartbeat_timeout —
+    before its first pass and between passes — must NOT be evicted:
+    staleness is measured from task dispatch, not pool construction."""
+    A, b = prob
+    eng = make_engine(A, ckpt_dir=str(tmp_path),
+                      heartbeat_timeout=0.25, poll_interval=0.02)
+    time.sleep(0.5)  # idle before the first pass
+    B1, _, c1 = stream_sketch(eng, jax.random.key(7), sketch_size=128, rhs=b)
+    time.sleep(0.5)  # idle between passes (a session between solves)
+    x = jnp.asarray(np.linspace(0.0, 1.0, N))
+    y = eng.matvec(x)
+    eng.close()
+    assert eng.stats["heartbeat_evictions"] == 0
+    assert eng.stats["recoveries"] == 0
+    serial = ArraySource(np.asarray(A), tile_rows=TILE)
+    B0, _, c0 = stream_sketch(serial, jax.random.key(7), sketch_size=128,
+                              rhs=b)
+    assert jnp.allclose(B0, B1, rtol=0, atol=1e-12)
+    assert jnp.allclose(c0, c1, rtol=0, atol=1e-12)
+    assert jnp.allclose(y, A @ x, rtol=0, atol=1e-12)
+
+
+def test_recovery_budget_is_per_pass(prob, tmp_path):
+    """One death per pass across two passes must fit max_recoveries=1:
+    the budget guards a single fan-out, not the engine lifetime (a
+    long-lived session would otherwise accumulate to certain failure)."""
+    A, b = prob
+    eng = make_engine(
+        A, ckpt_dir=str(tmp_path), max_recoveries=1,
+        faults=[KillWorker(worker=0, at_tile=1, phase="sketch"),
+                KillWorker(worker=1, at_tile=0, phase="matvec")],
+    )
+    B1, _, c1 = stream_sketch(eng, jax.random.key(7), sketch_size=128, rhs=b)
+    x = jnp.asarray(np.linspace(0.0, 1.0, N))
+    y = eng.matvec(x)  # second pass, second (budgeted-apart) death
+    eng.close()
+    assert eng.stats["recoveries"] == 2  # lifetime stat still accumulates
+    serial = ArraySource(np.asarray(A), tile_rows=TILE)
+    B0, _, c0 = stream_sketch(serial, jax.random.key(7), sketch_size=128,
+                              rhs=b)
+    assert jnp.allclose(B0, B1, rtol=0, atol=1e-12)
+    assert jnp.allclose(c0, c1, rtol=0, atol=1e-12)
+    assert jnp.allclose(y, A @ x, rtol=0, atol=1e-12)
+
+
+def test_stale_checkpoints_never_poison_a_new_run(prob, tmp_path):
+    """Leftover checkpoints in a persistent ckpt_dir: a rerun with the
+    SAME draw resumes from them; a rerun with a DIFFERENT draw starts
+    fresh (different namespace) instead of raising CheckpointMismatch;
+    a successful pass clears its own namespace."""
+    A, b = prob
+    serial = ArraySource(np.asarray(A), tile_rows=TILE)
+    ckpt = str(tmp_path)
+
+    # abort a run mid-pass, stranding mid-range checkpoints on disk
+    eng = make_engine(A, ckpt_dir=ckpt, max_recoveries=0,
+                      faults=[KillWorker(worker=0, at_tile=2)])
+    with pytest.raises(ClusterFailure):
+        stream_sketch(eng, jax.random.key(7), sketch_size=128, rhs=b)
+    eng.close()
+    assert any(d.startswith("pass1-") for d in os.listdir(ckpt))
+
+    # same draw + rhs: the rerun resumes from the stranded checkpoints
+    eng = make_engine(A, ckpt_dir=ckpt)
+    B1, _, c1 = stream_sketch(eng, jax.random.key(7), sketch_size=128, rhs=b)
+    eng.close()
+    assert eng.stats["restores"] >= 1
+    B0, _, c0 = stream_sketch(serial, jax.random.key(7), sketch_size=128,
+                              rhs=b)
+    assert jnp.allclose(B0, B1, rtol=0, atol=1e-12)
+    assert jnp.allclose(c0, c1, rtol=0, atol=1e-12)
+
+    # a different draw lands in a different namespace: fresh start, no
+    # CheckpointMismatch surfacing as a task error
+    eng = make_engine(A, ckpt_dir=ckpt)
+    B2, _, c2 = stream_sketch(eng, jax.random.key(8), sketch_size=128, rhs=b)
+    eng.close()
+    assert eng.stats["restores"] == 0
+    B0b, _, c0b = stream_sketch(serial, jax.random.key(8), sketch_size=128,
+                                rhs=b)
+    assert jnp.allclose(B0b, B2, rtol=0, atol=1e-12)
+    assert jnp.allclose(c0b, c2, rtol=0, atol=1e-12)
+
+    # both successful passes cleaned their namespaces up behind them
+    assert not any(d.startswith("pass1-") for d in os.listdir(ckpt))
+
+
+def _live_cluster_threads(before):
+    return [
+        t for t in threading.enumerate()
+        if t.name.startswith("repro-cluster-w") and t.is_alive()
+        and t not in before
+    ]
+
+
 # ---------------------------------------------------------------------------
 # routing: stream_lstsq / StreamingSolver / lstsq
 # ---------------------------------------------------------------------------
@@ -343,6 +462,66 @@ def test_streaming_solver_cluster_session(prob, tmp_path):
     assert solver.stats["passes"] >= 2  # sketch + iteration streams
     assert solver.stats["tiles"] >= 2 * (M // TILE)
     assert solver.stats["solves"] == 1
+    solver.close()
+
+
+def test_stream_lstsq_closes_engines_it_built(prob, monkeypatch):
+    """An engine built internally from a ClusterSpec must be torn down
+    when the solve returns: no leaked worker threads, no leaked temp
+    checkpoint dir (repeated solves would otherwise grow both forever)."""
+    import tempfile as tempfile_mod
+
+    A, b = prob
+    made = []
+    real_mkdtemp = tempfile_mod.mkdtemp
+
+    def recording_mkdtemp(*a, **kw):
+        d = real_mkdtemp(*a, **kw)
+        made.append(d)
+        return d
+
+    monkeypatch.setattr(tempfile_mod, "mkdtemp", recording_mkdtemp)
+    before = set(threading.enumerate())
+    res = stream_lstsq(
+        ArraySource(np.asarray(A), tile_rows=TILE), b, jax.random.key(3),
+        method="saa", sketch_size=128,
+        cluster=ClusterSpec(num_workers=2, checkpoint_every=2),
+    )
+    assert res.method == "stream_saa"
+    assert _live_cluster_threads(before) == []
+    assert made, "the spec path should have made a temp ckpt dir"
+    assert not any(os.path.exists(d) for d in made)
+
+
+def test_stream_lstsq_keeps_caller_engine_open(prob, tmp_path):
+    """A prebuilt engine passed via cluster= survives the solve for
+    reuse; its caller-provided ckpt_dir survives its own close()."""
+    A, b = prob
+    eng = make_engine(A, workers=2, ckpt_dir=str(tmp_path),
+                      checkpoint_every=0)
+    src = ArraySource(np.asarray(A), tile_rows=TILE)
+    r1 = stream_lstsq(src, b, jax.random.key(3), method="saa",
+                      sketch_size=128, cluster=eng)
+    r2 = stream_lstsq(src, b, jax.random.key(3), method="saa",
+                      sketch_size=128, cluster=eng)  # still open: reusable
+    assert jnp.allclose(r1.x, r2.x, rtol=0, atol=1e-12)
+    eng.close()
+    eng.close()  # idempotent
+    assert os.path.isdir(str(tmp_path))  # caller's dir is not the engine's
+
+
+def test_streaming_solver_close_releases_owned_engine(prob):
+    A, b = prob
+    before = set(threading.enumerate())
+    with StreamingSolver(
+        ArraySource(np.asarray(A), tile_rows=TILE), jax.random.key(3),
+        sketch_size=128,
+        cluster=ClusterSpec(num_workers=2, checkpoint_every=0),
+    ) as solver:
+        res = solver.solve(b)
+        assert jnp.isfinite(res.rnorm)
+    solver.close()  # second close is a no-op
+    assert _live_cluster_threads(before) == []
 
 
 # ---------------------------------------------------------------------------
