@@ -1,0 +1,98 @@
+"""Observability overhead: the cost of the instrumentation layer (PR 9).
+
+One row family, one contract:
+
+- ``obs_overhead`` — the same mid-size SAA solve timed with tracing
+  *disabled* (the shipped default: every ``obs_trace.span(...)`` call
+  site checks one module global and gets the shared no-op) versus a
+  *stripped* build (``obs_trace.stripped()`` swaps the entry points for
+  bare no-ops — the counterfactual of never having instrumented the
+  code).  ``overhead_x`` = disabled / stripped wall time; the perf gate
+  holds it to the ≤1.05x acceptance ceiling, i.e. tracing you did not
+  ask for must cost within noise of nothing at all.
+- ``traced_x`` (informational, same row) — the solve under an active
+  tracer over the stripped baseline.  Tracing *synchronizes* JAX's async
+  dispatch per span (``maybe_block`` — that is what makes the span
+  durations honest), so this is expected to be > 1 and is not gated.
+
+The two timed paths alternate round-robin (min over rounds) so clock
+drift and cache warmth land on both sides equally.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.lstsq import lstsq
+from repro.obs import trace as obs_trace
+
+from .common import emit
+
+
+def _timed(fn, repeats: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(m=8192, n=64, rounds=6, repeats=10, smoke=False):
+    if smoke:
+        m, n = 2048, 32
+    A = jax.random.normal(jax.random.key(0), (m, n))
+    b = jax.random.normal(jax.random.key(1), (m,))
+    key = jax.random.key(2)
+
+    def solve():
+        return lstsq(A, b, key, method="saa").x
+
+    def solve_traced():
+        return lstsq(A, b, key, method="saa", trace=True).x
+
+    # warm every path once (jit compiles, tracer machinery)
+    jax.block_until_ready(solve())
+    jax.block_until_ready(solve_traced())
+    with obs_trace.stripped():
+        jax.block_until_ready(solve())
+
+    t_disabled = t_stripped = t_traced = float("inf")
+    for _ in range(rounds):
+        t_disabled = min(t_disabled, _timed(solve, repeats))
+        with obs_trace.stripped():
+            t_stripped = min(t_stripped, _timed(solve, repeats))
+        t_traced = min(t_traced, _timed(solve_traced, repeats))
+
+    overhead = t_disabled / t_stripped
+    traced_x = t_traced / t_stripped
+    emit(
+        "obs/disabled", t_disabled,
+        f"overhead_x={overhead:.4f};m={m};n={n}",
+    )
+    emit("obs/stripped", t_stripped, f"m={m};n={n}")
+    emit(
+        "obs/traced", t_traced,
+        f"traced_x={traced_x:.3f};m={m};n={n}",
+    )
+    return [{
+        "name": "obs_overhead", "m": m, "n": n,
+        "wall_s": t_disabled, "wall_s_stripped": t_stripped,
+        "wall_s_traced": t_traced,
+        "overhead_x": overhead, "traced_x": traced_x,
+    }]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for the CI smoke lane")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        assert row["overhead_x"] <= 1.05, (
+            f"tracing-disabled overhead {row['overhead_x']:.3f}x — the "
+            "no-op path is doing real work"
+        )

@@ -37,6 +37,13 @@ Cluster rows (PR 8) add two more:
   resumes from the accumulator checkpoint, so it must never approach a
   full restart's ~2x).
 
+The obs row (PR 9) reuses ``overhead_x``: ``obs_overhead`` is the same
+solve timed with tracing disabled over a stripped build (instrumentation
+entry points swapped for bare no-ops), held to a hard ≤1.05x CEILING —
+observability nobody asked for must cost within noise of nothing.  The
+row's ``traced_x`` (tracing ON, which deliberately synchronizes async
+dispatch per span) is informational and not gated.
+
 Exit codes: 0 = no regression (or no committed baseline yet — the gate
 bootstraps quietly), 1 = at least one regressed cell or missed floor,
 2 = usage error.
@@ -71,7 +78,10 @@ FLOORS = {"serve_speedup": ("speedup", 5.0)}
 
 # Hard ceilings, same contract with the inequality flipped:
 # row name -> (metric, max).
-CEILINGS = {"cluster_resume_overhead": ("overhead_x", 1.5)}
+CEILINGS = {
+    "cluster_resume_overhead": ("overhead_x", 1.5),
+    "obs_overhead": ("overhead_x", 1.05),
+}
 
 
 def committed_baselines(root: Path = REPO_ROOT) -> list[tuple[int, Path]]:

@@ -9,6 +9,7 @@
   certified per-method wall time + certified-error columns (BENCH_5.json)
   serve     multi-tenant solve service: closed/open-loop load rows (PR 7)
   cluster   multi-worker pass-1 scaling + kill-and-resume overhead (PR 8)
+  obs       tracing-disabled overhead vs a stripped build (PR 9)
   roofline  per-cell roofline terms from the dry-run JSONs
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
@@ -35,9 +36,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,sketch,kernels,dist,stream,"
-                         "certified,serve,cluster,roofline")
+                         "certified,serve,cluster,obs,roofline")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
-    ap.add_argument("--tag", default="8",
+    ap.add_argument("--tag", default="9",
                     help="trajectory tag naming the default JSON path "
                          "BENCH_{tag}.json (current PR number, or 'ci')")
     ap.add_argument("--json", nargs="?", const="", default=None,
@@ -52,9 +53,10 @@ def main() -> None:
 
     def want(name):
         # --json implies the trajectory cells (certified + serve +
-        # cluster) run: BENCH_{tag}.json must always carry all three
-        # row families.
-        if name in ("certified", "serve", "cluster") and args.json is not None:
+        # cluster + obs) run: BENCH_{tag}.json must always carry all
+        # four row families.
+        if (name in ("certified", "serve", "cluster", "obs")
+                and args.json is not None):
             return True
         return only is None or name in only
 
@@ -89,6 +91,9 @@ def main() -> None:
     if want("cluster"):
         from . import cluster_bench
         rows += cluster_bench.run(m=65536 if args.full else 16384)
+    if want("obs"):
+        from . import obs_bench
+        rows += obs_bench.run()
     if args.json is not None:
         payload = {
             "bench": "certified_lstsq",

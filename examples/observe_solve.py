@@ -1,0 +1,139 @@
+"""One flag, four complete solve timelines: repro.obs end to end.
+
+    PYTHONPATH=src python examples/observe_solve.py [--out-dir traces]
+
+Runs the same observability pipeline over every subsystem and writes one
+Chrome-trace JSON per scenario (load them in chrome://tracing or
+https://ui.perfetto.dev):
+
+1. a certified ``lstsq`` — method selection, sketch/QR factor build,
+   certificate probes and the escalation rungs;
+2. a streamed out-of-core solve — pass-1 sketch tiles, the factor QR,
+   and every pass-2 streamed product of the iteration;
+3. a 4-worker cluster solve with an injected mid-pass worker kill — the
+   recovery is *visible*: kill → recover → reassign → checkpoint restore
+   events, and the restored task resuming from its watermark;
+4. a ``SolveService`` micro-batch — submit instants, the queue → dispatch
+   → solve → certify breakdown per batch.
+
+Each timeline is also printed as an indented tree, the exported JSON is
+re-parsed to prove validity, and the metrics registry the stats dicts
+mirror into is dumped in Prometheus text format at the end.
+"""
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster import ClusterSpec
+from repro.cluster.faults import FaultPlan, KillWorker
+from repro.core.lstsq import lstsq
+from repro.obs import prometheus_text, save_chrome_trace
+from repro.serve import SolveService
+from repro.streaming.solve import stream_lstsq
+
+
+def _check(path: str) -> int:
+    """Re-parse an exported trace; return its event count."""
+    with open(path) as f:
+        obj = json.load(f)
+    events = obj["traceEvents"]
+    assert events, f"{path}: empty trace"
+    for e in events:
+        assert {"name", "ph", "pid", "tid"} <= set(e), f"{path}: bad event {e}"
+    return len(events)
+
+
+def banner(title: str):
+    print(f"\n=== {title} " + "=" * max(0, 66 - len(title)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="traces",
+                    help="directory for the Chrome-trace JSON files")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+
+    # ---------------------------------------------------- 1. certified lstsq
+    banner("certified lstsq")
+    A = jnp.asarray(rng.standard_normal((4096, 48)))
+    b = jnp.asarray(rng.standard_normal(4096))
+    res = lstsq(A, b, key, accuracy="certified", trace=True)
+    print(res.timeline)
+    path = os.path.join(args.out_dir, "certified_lstsq.json")
+    res.timeline.save(path)
+    print(f"-> {path}: {_check(path)} events, certificate passed="
+          f"{bool(res.certificate.passed)}")
+
+    # ---------------------------------------------------- 2. streamed solve
+    banner("streamed out-of-core solve")
+    res = stream_lstsq(np.asarray(A), np.asarray(b), key, tile_rows=512,
+                       trace=True)
+    tiles = sum(1 for s in res.timeline.spans() if s["name"] == "stream.tile")
+    passes = sum(1 for s in res.timeline.spans()
+                 if s["name"] == "stream.pass2")
+    print(f"pass-1 tiles: {tiles}, pass-2 streamed products: {passes}")
+    path = os.path.join(args.out_dir, "streamed_solve.json")
+    res.timeline.save(path)
+    print(f"-> {path}: {_check(path)} events")
+
+    # ------------------------------------- 3. cluster solve + injected kill
+    banner("4-worker cluster solve with injected kill")
+    plan = FaultPlan(KillWorker(worker=1, at_tile=2))
+    spec = ClusterSpec(num_workers=4, tile_rows=256, checkpoint_every=1,
+                       faults=plan)
+    res = stream_lstsq(np.asarray(A), np.asarray(b), key, tile_rows=256,
+                       cluster=spec, trace=True)
+    fault_events = [e for e in res.timeline.instants()
+                    if e["name"] in ("cluster.recover", "cluster.reassign",
+                                     "cluster.restore", "cluster.eviction",
+                                     "cluster.respawn")]
+    assert plan.fired, "the injected kill must have triggered"
+    assert any(e["name"] == "cluster.restore" for e in fault_events), \
+        "expected a checkpoint restore in the timeline"
+    for e in fault_events:
+        print(f"  {e['name']:20s} {e['args']}")
+    path = os.path.join(args.out_dir, "cluster_kill_solve.json")
+    res.timeline.save(path)
+    print(f"-> {path}: {_check(path)} events")
+
+    # --------------------------------------------- 4. SolveService batch
+    banner("SolveService micro-batch")
+    from repro.obs import trace as obs_trace
+
+    svc = SolveService(key, max_delay_s=0.0, default_rtol=1e-8)
+    with obs_trace.tracing() as tr:
+        futs = [svc.submit(A, jnp.asarray(rng.standard_normal(4096)),
+                           mode="session")
+                for _ in range(8)]
+        svc.flush()
+    ok = sum(f.result().ok for f in futs)
+    tl = tr.timeline()
+    for stage in ("serve.submit", "serve.dispatch.session", "serve.solve",
+                  "serve.certify", "cache.build"):
+        evs = [e for e in tl.events
+               if e["name"] == stage and e["ph"] in ("X", "i")]
+        durs = sum(e.get("dur", 0.0) for e in evs) / 1e3
+        print(f"  {stage:24s} x{len(evs):<3d} {durs:8.3f} ms")
+    print(f"  {ok}/{len(futs)} ok; stats: "
+          f"{ {k: v for k, v in svc.stats().items() if k != 'cache'} }")
+    path = os.path.join(args.out_dir, "serve_batch.json")
+    save_chrome_trace(tr, path)
+    print(f"-> {path}: {_check(path)} events")
+
+    # ------------------------------------------------------- metrics dump
+    banner("metrics registry (Prometheus text format)")
+    print(prometheus_text().strip())
+    print("\nall traces parsed OK")
+
+
+if __name__ == "__main__":
+    main()

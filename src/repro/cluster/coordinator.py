@@ -52,6 +52,8 @@ import time
 
 import jax.numpy as jnp
 
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 from ..streaming.accumulate import make_accumulator, merge_all
 from ..streaming.sources import RowSource, as_source
 from . import checkpoint as cckpt
@@ -215,7 +217,7 @@ class ClusterEngine(RowSource):
         self._submissions: list = []
         self._sketch_seq = 0  # guards against zombie submissions from a
         # previous pass leaking into a later one
-        self.stats = {
+        self.stats = REGISTRY.stats_dict("cluster", {
             "workers": self.spec.num_workers,
             "recoveries": 0,
             "reassignments": 0,
@@ -226,7 +228,7 @@ class ClusterEngine(RowSource):
             "heartbeat_evictions": 0,
             "passes": 0,
             "tiles": 0,
-        }
+        })
 
     # ------------------------------------------------------- RowSource face
     @property
@@ -298,6 +300,7 @@ class ClusterEngine(RowSource):
     def _recover(self, ownership: OwnershipMap, victim: int, make_fn,
                  pending: dict):
         """Declare ``victim`` dead and reassign its unfinished ranges."""
+        obs_trace.instant("cluster.recover", victim=victim)
         self.stats["recoveries"] += 1
         self._pass_recoveries += 1
         if self._pass_recoveries > self.spec.max_recoveries:
@@ -315,11 +318,15 @@ class ClusterEngine(RowSource):
             nid = self._next_id
             self._next_id += 1
             self._workers[nid] = _Worker(nid)
+            obs_trace.instant("cluster.respawn", worker=nid)
             self.stats["respawns"] += 1
             live = [nid]
             ownership.assignments.setdefault(nid, [])
         moves = ownership.reassign(victim, live)
         for tgt, rng in moves:
+            obs_trace.instant(
+                "cluster.reassign", range=(rng.start, rng.stop), to=tgt
+            )
             self.stats["reassignments"] += 1
             task = _Task(rng, make_fn(rng), epoch=pending[rng].epoch + 1)
             pending[rng] = task
@@ -380,6 +387,10 @@ class ClusterEngine(RowSource):
                     )
                     if stale or not wk.thread_alive:
                         if stale and wk.thread_alive:
+                            obs_trace.instant(
+                                "cluster.eviction", worker=owner,
+                                stale_s=time.monotonic() - alive_ref,
+                            )
                             self.stats["heartbeat_evictions"] += 1
                         self._recover(ownership, owner, make_fn, pending)
                         progressed = True
@@ -415,74 +426,100 @@ class ClusterEngine(RowSource):
 
         def make_fn(rng):
             def fn(worker: _Worker):
-                acc, wm = None, rng.start
-                if ckpt_every:
-                    got = cckpt.restore_accumulator(
-                        self._ckpt_dir, op, ncols,
-                        range_start=rng.start, range_stop=rng.stop,
-                        phase=ns, dtype=dtype, backend=backend,
-                    )
-                    if got is not None:
-                        acc, wm = got
-                        with self._lock:
-                            self.stats["restores"] += 1
-                if acc is None:
-                    acc = make_accumulator(op, ncols, dtype=dtype,
-                                           backend=backend)
-                sub = RowRangeSource(self.source, wm, rng.stop,
-                                     tile_rows=self._grid)
-                since = 0
-                for local_o, tile in sub.tiles():
-                    self._fault_gate(worker, "sketch")
-                    gl = wm + local_o
-                    tile = jnp.asarray(tile)
-                    t = tile.shape[0]
-                    if rhs is not None:
-                        tile = jnp.concatenate(
-                            [tile, rhs[gl : gl + t][:, None].astype(tile.dtype)],
-                            axis=1,
+                with obs_trace.span(
+                    "cluster.task", phase="sketch", worker=worker.id,
+                    start=rng.start, stop=rng.stop,
+                ):
+                    acc, wm = None, rng.start
+                    if ckpt_every:
+                        got = cckpt.restore_accumulator(
+                            self._ckpt_dir, op, ncols,
+                            range_start=rng.start, range_stop=rng.stop,
+                            phase=ns, dtype=dtype, backend=backend,
                         )
-                    acc.update(tile, gl)
-                    worker.beat()
-                    self._count_tiles()
-                    since += 1
-                    if ckpt_every and since >= ckpt_every and gl + t < rng.stop:
-                        with self._ckpt_lock:
-                            cckpt.save_accumulator(
-                                self._ckpt_dir, acc, gl + t,
-                                range_start=rng.start, range_stop=rng.stop,
-                                phase=ns,
+                        if got is not None:
+                            acc, wm = got
+                            obs_trace.instant(
+                                "cluster.restore", worker=worker.id,
+                                watermark=wm, start=rng.start, stop=rng.stop,
                             )
-                        with self._lock:
-                            self.stats["checkpoints"] += 1
-                        since = 0
-                submit(rng, acc, worker.id)
-                if self._plan.duplicate_submission(worker.id):
-                    submit(rng, acc, worker.id)  # the dedup guard's moment
-                return True
+                            with self._lock:
+                                self.stats["restores"] += 1
+                    if acc is None:
+                        acc = make_accumulator(op, ncols, dtype=dtype,
+                                               backend=backend)
+                    sub = RowRangeSource(self.source, wm, rng.stop,
+                                         tile_rows=self._grid)
+                    since = 0
+                    for local_o, tile in sub.tiles():
+                        self._fault_gate(worker, "sketch")
+                        gl = wm + local_o
+                        tile = jnp.asarray(tile)
+                        t = tile.shape[0]
+                        if rhs is not None:
+                            tile = jnp.concatenate(
+                                [tile,
+                                 rhs[gl : gl + t][:, None].astype(tile.dtype)],
+                                axis=1,
+                            )
+                        acc.update(tile, gl)
+                        worker.beat()
+                        obs_trace.instant(
+                            "cluster.heartbeat", worker=worker.id, row=gl
+                        )
+                        self._count_tiles()
+                        since += 1
+                        if (
+                            ckpt_every and since >= ckpt_every
+                            and gl + t < rng.stop
+                        ):
+                            with self._ckpt_lock:
+                                cckpt.save_accumulator(
+                                    self._ckpt_dir, acc, gl + t,
+                                    range_start=rng.start,
+                                    range_stop=rng.stop,
+                                    phase=ns,
+                                )
+                            obs_trace.instant(
+                                "cluster.checkpoint", worker=worker.id,
+                                watermark=gl + t,
+                            )
+                            with self._lock:
+                                self.stats["checkpoints"] += 1
+                            since = 0
+                    submit(rng, acc, worker.id)
+                    if self._plan.duplicate_submission(worker.id):
+                        submit(rng, acc, worker.id)  # the dedup guard's moment
+                    return True
             return fn
 
-        ranges = self._partition()
-        self._execute(ranges, make_fn)
-        chosen: dict[RowRange, object] = {}
-        with self._lock:
-            submissions = list(self._submissions)
-        for rng, acc, _wid in submissions:
-            if rng in chosen:
-                self.stats["duplicates_dropped"] += 1
-                continue
-            chosen[rng] = acc
-        covered = 0
-        for rng in sorted(chosen):
-            if rng.start != covered:
-                raise ClusterFailure(
-                    f"pass-1 coverage gap at row {covered} (next range {rng})"
-                )
-            covered = rng.stop
-        if covered != m:
-            raise ClusterFailure(f"pass-1 covered {covered} of {m} rows")
-        merged = merge_all([chosen[rng] for rng in sorted(chosen)])
-        out = merged.finalize()
+        with obs_trace.span(
+            "cluster.pass1", rows=m, workers=len(self._live_ids())
+        ):
+            ranges = self._partition()
+            self._execute(ranges, make_fn)
+            chosen: dict[RowRange, object] = {}
+            with self._lock:
+                submissions = list(self._submissions)
+            for rng, acc, _wid in submissions:
+                if rng in chosen:
+                    self.stats["duplicates_dropped"] += 1
+                    continue
+                chosen[rng] = acc
+            covered = 0
+            for rng in sorted(chosen):
+                if rng.start != covered:
+                    raise ClusterFailure(
+                        f"pass-1 coverage gap at row {covered} "
+                        f"(next range {rng})"
+                    )
+                covered = rng.stop
+            if covered != m:
+                raise ClusterFailure(f"pass-1 covered {covered} of {m} rows")
+            with obs_trace.span("cluster.merge", ranges=len(chosen)):
+                merged = merge_all([chosen[rng] for rng in sorted(chosen)])
+                out = merged.finalize()
+                obs_trace.maybe_block(out)
         # the pass succeeded: its mid-range checkpoints are spent — clear
         # them so a persistent ckpt_dir doesn't grow without bound
         if ckpt_every:
@@ -498,21 +535,28 @@ class ClusterEngine(RowSource):
         return [r for r in ranges if r.rows > 0]
 
     # -------------------------------------------------------------- pass 2
-    def _map_ranges(self, per_range_fn):
+    def _map_ranges(self, per_range_fn, phase: str = "map"):
         """Fan a stateless per-range computation out and return the
         results in ascending range order (deterministic reduction)."""
         self._count_pass()
 
         def make_fn(rng):
             def fn(worker: _Worker):
-                sub = RowRangeSource(self.source, rng.start, rng.stop,
-                                     tile_rows=self._grid)
-                return per_range_fn(rng, sub, worker)
+                with obs_trace.span(
+                    "cluster.task", phase=phase, worker=worker.id,
+                    start=rng.start, stop=rng.stop,
+                ):
+                    sub = RowRangeSource(self.source, rng.start, rng.stop,
+                                         tile_rows=self._grid)
+                    return per_range_fn(rng, sub, worker)
             return fn
 
-        ranges = self._partition()
-        results = self._execute(ranges, make_fn)
-        return [results[rng] for rng in sorted(ranges)]
+        with obs_trace.span(
+            "cluster.pass2", phase=phase, workers=len(self._live_ids())
+        ):
+            ranges = self._partition()
+            results = self._execute(ranges, make_fn)
+            return [results[rng] for rng in sorted(ranges)]
 
     def matvec(self, x):
         """A @ x by per-range placement (exact — no cross-range sums)."""
@@ -527,7 +571,8 @@ class ClusterEngine(RowSource):
                 self._count_tiles()
             return jnp.concatenate(parts, axis=0)
 
-        return jnp.concatenate(self._map_ranges(per_range), axis=0)
+        return jnp.concatenate(
+            self._map_ranges(per_range, phase="matvec"), axis=0)
 
     def rmatvec(self, u):
         """Aᵀ @ u: per-range partial adjoint products summed in range
@@ -546,7 +591,7 @@ class ClusterEngine(RowSource):
                 self._count_tiles()
             return g
 
-        parts = self._map_ranges(per_range)
+        parts = self._map_ranges(per_range, phase="rmatvec")
         g = parts[0]
         for p in parts[1:]:
             g = g + p
@@ -572,7 +617,7 @@ class ClusterEngine(RowSource):
                 self._count_tiles()
             return rn2, g
 
-        parts = self._map_ranges(per_range)
+        parts = self._map_ranges(per_range, phase="residual_grad")
         rn2 = parts[0][0]
         g = parts[0][1]
         for p_rn2, p_g in parts[1:]:

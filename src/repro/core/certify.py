@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from . import linop
+from ..obs import trace as obs_trace
 from .precond import SketchedFactor
 
 __all__ = [
@@ -230,8 +231,10 @@ def certify(
     """
     A = linop.as_operator(A)
     dtype = factor.R.dtype
-    eps_hat = probe_distortion(A, factor, key, n_probes=n_probes)
-    smax, smin, cond_R = factor_spectrum(factor)
+    with obs_trace.span("certify.probe", n_probes=n_probes):
+        eps_hat = probe_distortion(A, factor, key, n_probes=n_probes)
+        smax, smin, cond_R = factor_spectrum(factor)
+        obs_trace.maybe_block(eps_hat)
     nan = jnp.asarray(jnp.nan, dtype)
     emb_ok = (eps_hat <= max_distortion) & jnp.isfinite(cond_R)
 
@@ -244,20 +247,22 @@ def certify(
             escalations=int(escalations), precision=precision,
         )
 
-    if precision == "mixed":
-        # Sampling probes cannot price a low-precision sketch: rounding
-        # noise floors R's trailing subspace, hiding A's weak directions
-        # in a span no O(1) probe set covers (isotropic probes dilute the
-        # collapse, R-aligned probes see only the noise).  Certifying a
-        # mixed factor therefore pays ONE exact whitened-spectrum pass —
-        # σ_min(A R⁻¹) by SVD, O(mn²), the same order as the full-
-        # precision apply the bf16 sketch skipped.  That is the honest
-        # price of trusting a cheap sketch at high cond; at moderate cond
-        # the check passes and the mixed saving stands.
-        Y = factor.materialize_whitened(A)
-        floor = jnp.linalg.svd(Y, compute_uv=False)[-1]
-    else:
-        floor = probe_spectrum_floor(A, factor)
+    with obs_trace.span("certify.floor", precision=precision):
+        if precision == "mixed":
+            # Sampling probes cannot price a low-precision sketch: rounding
+            # noise floors R's trailing subspace, hiding A's weak directions
+            # in a span no O(1) probe set covers (isotropic probes dilute the
+            # collapse, R-aligned probes see only the noise).  Certifying a
+            # mixed factor therefore pays ONE exact whitened-spectrum pass —
+            # σ_min(A R⁻¹) by SVD, O(mn²), the same order as the full-
+            # precision apply the bf16 sketch skipped.  That is the honest
+            # price of trusting a cheap sketch at high cond; at moderate cond
+            # the check passes and the mixed saving stands.
+            Y = factor.materialize_whitened(A)
+            floor = jnp.linalg.svd(Y, compute_uv=False)[-1]
+        else:
+            floor = probe_spectrum_floor(A, factor)
+        obs_trace.maybe_block(floor)
     rnorm, wg_norm, bound = _error_bound_parts(
         A, b, x, factor, eps_hat, smin, floor
     )

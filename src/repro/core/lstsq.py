@@ -78,6 +78,7 @@ import jax.numpy as jnp
 from . import backend as backend_lib
 from . import certify as certify_lib
 from . import linop
+from ..obs import trace as obs_trace
 from .direct import qr_solve
 from .iterative import (
     damping_momentum,
@@ -278,47 +279,58 @@ def _certified_lstsq(
         meth = CERTIFIED_LADDER[rung]
         k_probe, k_ext = jax.random.split(jax.random.fold_in(k_loop, attempt))
         attempt += 1
-        if meth == "direct":
-            if not dense_input:
-                # Sparse and matrix-free inputs stop at the fossils rung —
-                # the whole point of those input forms is that A is never
-                # densified (BCOO is technically materializable, but an
-                # 8 GB todense() is not a fallback).
-                break
-            res = _direct_result(
-                linop.ensure_dense(A_op, who="the certified QR fallback"),
-                b_solve,
-            )
-        elif meth == "saa":
-            c = op.apply(b_solve, backend=backend)
-            x, inner = _solve_with_factor(
-                A_op, b_solve, factor, c, materialize_y=dense_input,
-                atol=atol, btol=btol, iter_lim=iter_lim, steptol=steptol,
-                history=history,
-            )
-            res = inner._replace(x=x)
-        else:
-            alpha, beta = damping_momentum(s, n)
-            x0 = factor.sketch_and_solve(op.apply(b_solve, backend=backend))
-            if meth == "iterative":
-                res = heavy_ball_refine(
-                    A_op, b_solve, factor, x0, alpha, beta,
-                    atol=atol, btol=btol, steptol=steptol,
-                    iter_lim=iter_lim, history=history,
-                )
-            else:  # fossils
-                res = fossils_refine(
-                    A_op, b_solve, factor, op, x0, alpha, beta,
-                    inner_iter_lim=default_inner_iter_lim(beta, dtype),
-                    steptol=steptol, backend=backend, history=history,
-                )
-        cert = certify_lib.certify(
-            A_op, b_solve, res.x, factor, k_probe, n_probes=n_probes,
-            target=rtol, sketch_rows=s, escalations=escalations,
-            precision=prec_now,
+        rung_span = obs_trace.span(
+            "certified.rung", method=meth, attempt=attempt - 1,
+            sketch_rows=s, precision=prec_now,
         )
-        res = res._replace(certificate=cert)
-        if bool(cert.passed):
+        with rung_span:
+            if meth == "direct":
+                if not dense_input:
+                    # Sparse and matrix-free inputs stop at the fossils rung —
+                    # the whole point of those input forms is that A is never
+                    # densified (BCOO is technically materializable, but an
+                    # 8 GB todense() is not a fallback).
+                    break
+                res = _direct_result(
+                    linop.ensure_dense(A_op, who="the certified QR fallback"),
+                    b_solve,
+                )
+            elif meth == "saa":
+                c = op.apply(b_solve, backend=backend)
+                x, inner = _solve_with_factor(
+                    A_op, b_solve, factor, c, materialize_y=dense_input,
+                    atol=atol, btol=btol, iter_lim=iter_lim, steptol=steptol,
+                    history=history,
+                )
+                res = inner._replace(x=x)
+            else:
+                alpha, beta = damping_momentum(s, n)
+                x0 = factor.sketch_and_solve(op.apply(b_solve, backend=backend))
+                if meth == "iterative":
+                    res = heavy_ball_refine(
+                        A_op, b_solve, factor, x0, alpha, beta,
+                        atol=atol, btol=btol, steptol=steptol,
+                        iter_lim=iter_lim, history=history,
+                    )
+                else:  # fossils
+                    res = fossils_refine(
+                        A_op, b_solve, factor, op, x0, alpha, beta,
+                        inner_iter_lim=default_inner_iter_lim(beta, dtype),
+                        steptol=steptol, backend=backend, history=history,
+                    )
+            obs_trace.maybe_block(res.x)
+            cert = certify_lib.certify(
+                A_op, b_solve, res.x, factor, k_probe, n_probes=n_probes,
+                target=rtol, sketch_rows=s, escalations=escalations,
+                precision=prec_now,
+            )
+            res = res._replace(certificate=cert)
+            passed = bool(cert.passed)
+            if rung_span:
+                rung_span.set(
+                    passed=passed, bound=float(cert.rel_error_bound)
+                )
+        if passed:
             return res, meth
         bound = float(cert.rel_error_bound)
         if not math.isfinite(bound):
@@ -330,8 +342,10 @@ def _certified_lstsq(
             # precision (one sketch apply, no extra rows) and retry this
             # rung — the cheapest repair when bf16 rounding alone broke
             # the embedding.
-            B = op.apply_op(A_op, backend=backend)
-            factor = SketchedFactor.from_sketch(B)
+            with obs_trace.span("certified.precision_escalate", rows=s):
+                B = op.apply_op(A_op, backend=backend)
+                factor = SketchedFactor.from_sketch(B)
+                obs_trace.maybe_block(factor.R)
             prec_now = "full"
             escalations += 1
             continue
@@ -341,9 +355,11 @@ def _certified_lstsq(
         if rung + 1 < len(CERTIFIED_LADDER):
             extra = min(s, max(m_data - s, 0))
             if extra > 0 and CERTIFIED_LADDER[rung + 1] != "direct":
-                factor, op, B = factor.extend(
-                    A_op, op, k_ext, extra, B=B, backend=backend
-                )
+                with obs_trace.span("certified.escalate", extra=extra):
+                    factor, op, B = factor.extend(
+                        A_op, op, k_ext, extra, B=B, backend=backend
+                    )
+                    obs_trace.maybe_block(factor.R)
                 s += extra
                 escalations += 1
         rung += 1
@@ -373,9 +389,20 @@ def lstsq(
     certified_rtol: float | None = None,
     certified_probes: int = 8,
     cluster=None,
+    trace: bool | None = None,
 ) -> SolveResult:
     """Solve min‖Ax − b‖₂ (+ λ‖x‖₂² with ``reg=λ``) with an auto-selected
     (or forced) solver.
+
+    ``trace=True`` records a nested wall-clock span timeline for this call
+    (method selection, sketch vs QR, refinement, certificate rungs — and,
+    through the streaming/cluster delegations, tiles and worker tasks) and
+    attaches it as ``SolveResult.timeline`` (a
+    :class:`repro.obs.trace.Timeline`; ``str(...)`` renders the tree,
+    ``.save(path)`` writes Chrome-trace JSON).  With ``REPRO_TRACE=1`` (or
+    inside ``repro.obs.tracing()``) the timeline is attached without the
+    flag; ``trace=None`` (default) otherwise records nothing and costs
+    nothing.
 
     ``precision="mixed"`` sketches a bf16-rounded copy of (dense) A with
     ≥ f32 accumulation; refinement stays full-precision and recovers full
@@ -410,6 +437,45 @@ def lstsq(
     (``repro.cluster``); it implies the streaming path, so a plain array
     ``A`` is coerced to a row source first.
     """
+    scope = obs_trace.solve_scope(trace)
+    with scope:
+        root = obs_trace.span("lstsq", accuracy=accuracy)
+        with root:
+            res = _lstsq_impl(
+                A, b, key, method=method, accuracy=accuracy, sketch=sketch,
+                sketch_size=sketch_size, reg=reg, atol=atol, btol=btol,
+                steptol=steptol, iter_lim=iter_lim, backend=backend,
+                precision=precision, fused=fused, history=history,
+                certified_rtol=certified_rtol,
+                certified_probes=certified_probes, cluster=cluster,
+            )
+            if root and res.method:
+                root.set(method=res.method)
+    return scope.attach(res)
+
+
+def _lstsq_impl(
+    A,
+    b,
+    key,
+    *,
+    method,
+    accuracy,
+    sketch,
+    sketch_size,
+    reg,
+    atol,
+    btol,
+    steptol,
+    iter_lim,
+    backend,
+    precision,
+    fused,
+    history,
+    certified_rtol,
+    certified_probes,
+    cluster,
+) -> SolveResult:
     if accuracy not in ACCURACIES:
         raise ValueError(f"unknown accuracy {accuracy!r}; have {ACCURACIES}")
     if precision not in backend_lib.PRECISIONS:
@@ -486,10 +552,15 @@ def lstsq(
         return res._replace(method=used)
 
     if method == "auto":
-        method = select_method(
-            m, n, has_key=key is not None, accuracy=accuracy,
-            sketch_size=sketch_size, matrix_free=matrix_free,
-        )
+        with obs_trace.span(
+            "lstsq.select", m=m, n=n, accuracy=accuracy
+        ) as sel:
+            method = select_method(
+                m, n, has_key=key is not None, accuracy=accuracy,
+                sketch_size=sketch_size, matrix_free=matrix_free,
+            )
+            if sel:
+                sel.set(method=method)
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; have {('auto',) + METHODS}")
     if method in ("saa", "sap", "iterative", "fossils") and key is None:
@@ -519,19 +590,26 @@ def lstsq(
             )
         precision = "full"  # auto-selected a non-sketched method: run full
 
-    if method == "direct":
-        res = _direct_result(linop.ensure_dense(A_op, who="method='direct'"),
-                             b_solve)
-    elif method == "lsqr":
-        res = lsqr_operator(A_op, b_solve, history=history, **tol)
-    elif method == "saa":
-        res = saa_sas(A_op, b_solve, key, history=history, **sk, **tol)
-    elif method == "sap":
-        res = sap_sas(A_op, b_solve, key, history=history, **sk, **tol)
-    elif method == "iterative":
-        res = iterative_sketching(A_op, b_solve, key, history=history, **sk, **tol)
-    else:  # fossils (tol holds at most steptol after the audit above)
-        res = fossils(A_op, b_solve, key, history=history, **sk, **tol)
+    with obs_trace.span("lstsq.solve", method=method) as sp:
+        if method == "direct":
+            res = _direct_result(
+                linop.ensure_dense(A_op, who="method='direct'"), b_solve
+            )
+        elif method == "lsqr":
+            res = lsqr_operator(A_op, b_solve, history=history, **tol)
+        elif method == "saa":
+            res = saa_sas(A_op, b_solve, key, history=history, **sk, **tol)
+        elif method == "sap":
+            res = sap_sas(A_op, b_solve, key, history=history, **sk, **tol)
+        elif method == "iterative":
+            res = iterative_sketching(
+                A_op, b_solve, key, history=history, **sk, **tol
+            )
+        else:  # fossils (tol holds at most steptol after the audit above)
+            res = fossils(A_op, b_solve, key, history=history, **sk, **tol)
+        obs_trace.maybe_block(res.x)
+        if sp:
+            sp.set(itn=int(res.itn))
 
     if reg is not None:
         # Report diagnostics of the ORIGINAL problem, not the augmented one.

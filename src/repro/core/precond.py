@@ -32,6 +32,7 @@ from jax.scipy.linalg import solve_triangular
 from . import backend as backend_lib
 from . import linop
 from . import sketch as sketch_lib
+from ..obs import trace as obs_trace
 
 __all__ = ["SketchedFactor", "default_sketch_size", "distortion"]
 
@@ -200,10 +201,23 @@ class SketchedFactor(NamedTuple):
         if backend_lib.resolve_fused(fused):
             from ..kernels.tsqr import sketch_qr  # kernels import core
 
-            Q, R, B = sketch_qr(op, A, backend=backend, precision=precision)
+            with obs_trace.span("factor.build", sketch=sketch, rows=s,
+                                fused=True):
+                Q, R, B = sketch_qr(op, A, backend=backend,
+                                    precision=precision)
+                obs_trace.maybe_block(R)
             return cls(Q=Q, R=R), op, B
-        B = _sketch_apply(op, A, backend=backend, precision=precision)
-        return cls.from_sketch(B), op, B
+        with obs_trace.span("factor.build", sketch=sketch, rows=s,
+                            fused=False):
+            with obs_trace.span("sketch.apply", kind=sketch,
+                                precision=precision):
+                B = _sketch_apply(op, A, backend=backend,
+                                  precision=precision)
+                obs_trace.maybe_block(B)
+            with obs_trace.span("factor.qr", shape=tuple(B.shape)):
+                factor = cls.from_sketch(B)
+                obs_trace.maybe_block(factor.R)
+        return factor, op, B
 
     @classmethod
     def build_streaming(
@@ -256,11 +270,15 @@ class SketchedFactor(NamedTuple):
         apply plus one (d + extra) × n QR, never a full re-sketch.
         """
         A = linop.as_operator(A)
-        op_new = op.extend_rows(key, extra)
-        if B is None:
-            B = self.Q @ self.R
-        B_new = op_new.extend_sketch(B, A, backend=backend)
-        return SketchedFactor.from_sketch(B_new), op_new, B_new
+        with obs_trace.span("factor.extend", extra=extra):
+            op_new = op.extend_rows(key, extra)
+            if B is None:
+                B = self.Q @ self.R
+            B_new = op_new.extend_sketch(B, A, backend=backend)
+            with obs_trace.span("factor.qr", shape=tuple(B_new.shape)):
+                factor = SketchedFactor.from_sketch(B_new)
+                obs_trace.maybe_block(factor.R)
+        return factor, op_new, B_new
 
     # ------------------------------------------------------------ shape info
     @property

@@ -51,6 +51,9 @@ class SolveResult(NamedTuple):
     # Posterior trust report (repro.core.certify.Certificate) — attached by
     # the certified/adaptive paths outside jit; None everywhere else.
     certificate: object | None = None
+    # Per-solve span tree (repro.obs.trace.Timeline) — attached by the
+    # drivers outside jit when tracing is active; None otherwise.
+    timeline: object | None = None
 
     @property
     def converged(self):

@@ -51,6 +51,8 @@ import jax.numpy as jnp
 from . import certify as certify_lib
 from . import linop
 from . import sketch as sketch_lib
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 from .backend import resolve as resolve_backend
 from .lsqr import lsqr
 from .precond import SketchedFactor, default_sketch_size
@@ -179,15 +181,24 @@ class SketchedSolver:
         self.recertifications = 0  # auto-recertify probes taken so far
         self.escalations = 0  # sketch extensions taken by recertification
 
-        self.stats = {"sketches": 0, "qr_factorizations": 0, "solves": 0}
-        self._B = self._sketch_op.apply_op(self._solve_op, backend=self.backend)
-        self.stats["sketches"] += 1
-        self._refactor()
+        self.stats = REGISTRY.stats_dict(
+            "session", {"sketches": 0, "qr_factorizations": 0, "solves": 0}
+        )
+        with obs_trace.span("session.build", rows=self.sketch_size):
+            with obs_trace.span("sketch.apply", kind=sketch):
+                self._B = self._sketch_op.apply_op(
+                    self._solve_op, backend=self.backend
+                )
+                obs_trace.maybe_block(self._B)
+            self.stats["sketches"] += 1
+            self._refactor()
 
     # ------------------------------------------------------------------ build
     def _refactor(self):
         """(Re)build the QR factor — and Y, if materialized — from self._B."""
-        self.factor = SketchedFactor.from_sketch(self._B)
+        with obs_trace.span("factor.qr", shape=tuple(self._B.shape)):
+            self.factor = SketchedFactor.from_sketch(self._B)
+            obs_trace.maybe_block(self.factor.R)
         self._after_refactor()
 
     def _after_refactor(self):
@@ -272,12 +283,17 @@ class SketchedSolver:
                     "certify solve_many columns individually"
                 )
             b_solve = self._rhs(jnp.asarray(b, self.A.dtype))
-        cert = certify_lib.certify(
-            self._solve_op, b_solve, x, self.factor, self._next_probe_key(),
-            n_probes=self.certify_probes if n_probes is None else int(n_probes),
-            target=target, max_distortion=self.max_distortion,
-            sketch_rows=self._random_rows(), escalations=self.escalations,
-        )
+        with obs_trace.span("session.certify", with_solution=x is not None):
+            cert = certify_lib.certify(
+                self._solve_op, b_solve, x, self.factor,
+                self._next_probe_key(),
+                n_probes=(
+                    self.certify_probes if n_probes is None else int(n_probes)
+                ),
+                target=target, max_distortion=self.max_distortion,
+                sketch_rows=self._random_rows(),
+                escalations=self.escalations,
+            )
         if x is None:
             self.certificate = cert
         return cert
@@ -286,10 +302,11 @@ class SketchedSolver:
         """Append ``extra`` fresh rows to S and re-QR — the stored sketch
         is extended (never recomputed), exactly the certified driver's
         escalation move."""
-        self.factor, self._sketch_op, self._B = self.factor.extend(
-            self._solve_op, self._sketch_op, self._next_probe_key(), extra,
-            B=self._B, backend=self.backend,
-        )
+        with obs_trace.span("session.escalate", extra=extra):
+            self.factor, self._sketch_op, self._B = self.factor.extend(
+                self._solve_op, self._sketch_op, self._next_probe_key(),
+                extra, B=self._B, backend=self.backend,
+            )
         # extend() sketched the new rows and re-QRed internally
         self.stats["sketches"] += 1
         self._after_refactor()
@@ -352,10 +369,14 @@ class SketchedSolver:
     def solve(self, b: jax.Array, *, history: bool = False) -> SolveResult:
         """min‖Ax − b‖ against the stored factor (one whitened LSQR run)."""
         b = self._check_rhs(b, many=False)
-        res = _solve_one(
-            self._solve_op, self._Y, self.factor, self._sketch_op,
-            self._rhs(b), history=history, **self._kw,
-        )
+        with obs_trace.span("session.solve") as sp:
+            res = _solve_one(
+                self._solve_op, self._Y, self.factor, self._sketch_op,
+                self._rhs(b), history=history, **self._kw,
+            )
+            obs_trace.maybe_block(res.x)
+            if sp:
+                sp.set(itn=int(res.itn))
         self.stats["solves"] += 1
         return self._ridge_diagnostics(b, res)._replace(method="session")
 
@@ -371,10 +392,12 @@ class SketchedSolver:
         if self.reg is not None:
             n = self.A.shape[1]
             B = jnp.concatenate([B, jnp.zeros((n, B.shape[1]), B.dtype)], axis=0)
-        res = _solve_many(
-            self._solve_op, self._Y, self.factor, self._sketch_op, B,
-            history=False, **self._kw,
-        )
+        with obs_trace.span("session.solve_many", k=int(B.shape[1])):
+            res = _solve_many(
+                self._solve_op, self._Y, self.factor, self._sketch_op, B,
+                history=False, **self._kw,
+            )
+            obs_trace.maybe_block(res.x)
         self.stats["solves"] += int(B.shape[1])
         return self._ridge_diagnostics(B_orig, res)._replace(method="session")
 
@@ -404,33 +427,37 @@ class SketchedSolver:
             # stop matching S·A and poison every later solve
             raise ValueError("idx must contain unique row indices")
         A_new = self.A.A.at[idx].set(rows)
-        # Ridge sessions sketch through blockdiag(S, I); the updated rows
-        # all live in the data block, so restrict the INNER sketch and pad
-        # the delta-sketch with zero rows for the untouched identity block.
-        sk_op = self._sketch_op
-        tail = 0
-        if isinstance(sk_op, sketch_lib.AugmentedSketch):
-            sk_op, tail = sk_op.inner, sk_op.tail
-        # The sub-sketch S[:, idx] (shared with the streaming accumulators
-        # and the distributed per-shard assembly); None for SRHT.
-        sub = sk_op.restrict_cols(idx)
-        if sub is None:
-            # SRHT: no column restriction — re-sketch with the SAME S.
-            self._set_matrix(A_new)
-            self._B = self._sketch_op.apply_op(
-                self._solve_op, backend=self.backend
-            )
-            self.stats["sketches"] += 1
-        else:
-            delta = rows - self.A.A[idx]
-            d_sk = sub.apply(delta, backend=self.backend)
-            if tail:
-                d_sk = jnp.concatenate(
-                    [d_sk, jnp.zeros((tail, d_sk.shape[1]), d_sk.dtype)], axis=0
+        with obs_trace.span("session.update_rows", rows=int(idx.shape[0])):
+            # Ridge sessions sketch through blockdiag(S, I); the updated
+            # rows all live in the data block, so restrict the INNER sketch
+            # and pad the delta-sketch with zero rows for the untouched
+            # identity block.
+            sk_op = self._sketch_op
+            tail = 0
+            if isinstance(sk_op, sketch_lib.AugmentedSketch):
+                sk_op, tail = sk_op.inner, sk_op.tail
+            # The sub-sketch S[:, idx] (shared with the streaming
+            # accumulators and the distributed per-shard assembly); None
+            # for SRHT.
+            sub = sk_op.restrict_cols(idx)
+            if sub is None:
+                # SRHT: no column restriction — re-sketch with the SAME S.
+                self._set_matrix(A_new)
+                self._B = self._sketch_op.apply_op(
+                    self._solve_op, backend=self.backend
                 )
-            self._B = self._B + d_sk
-            self._set_matrix(A_new)
-        self._refactor()
+                self.stats["sketches"] += 1
+            else:
+                delta = rows - self.A.A[idx]
+                d_sk = sub.apply(delta, backend=self.backend)
+                if tail:
+                    d_sk = jnp.concatenate(
+                        [d_sk, jnp.zeros((tail, d_sk.shape[1]), d_sk.dtype)],
+                        axis=0,
+                    )
+                self._B = self._B + d_sk
+                self._set_matrix(A_new)
+            self._refactor()
         # The delta-sketch is exact, but S itself was drawn obliviously to
         # the ORIGINAL rows — its embedding quality for the new range(A)
         # must be re-established, not assumed.

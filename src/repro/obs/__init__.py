@@ -1,0 +1,48 @@
+"""repro.obs — tracing, metrics and export for the whole stack.
+
+One substrate, three layers:
+
+- :mod:`repro.obs.metrics` — the process-wide :data:`~repro.obs.metrics.REGISTRY`
+  of counters / gauges / bounded histograms that the session, streaming,
+  cluster and serve ``stats`` all feed (their dicts are unchanged;
+  the registry aggregates the same numbers across instances).
+- :mod:`repro.obs.trace` — nested wall-clock spans across method
+  selection, sketch/QR, certification rungs, streaming tiles, cluster
+  tasks and serve dispatch; opt-in via ``lstsq(..., trace=True)``,
+  ``REPRO_TRACE=1`` or ``with obs.tracing():``, exported as
+  Chrome-trace JSON and attached to ``SolveResult.timeline``.
+- :mod:`repro.obs.export` — Prometheus text exposition, JSON snapshots
+  and an optional ``jax.profiler`` hook.
+"""
+from .metrics import REGISTRY, MetricsRegistry, DEFAULT_BUCKETS
+from .trace import (
+    Timeline,
+    Tracer,
+    enabled,
+    enable,
+    disable,
+    instant,
+    maybe_block,
+    span,
+    tracing,
+)
+from .export import json_snapshot, prometheus_text, save_chrome_trace, jax_profile
+
+__all__ = [
+    "REGISTRY",
+    "MetricsRegistry",
+    "DEFAULT_BUCKETS",
+    "Timeline",
+    "Tracer",
+    "enabled",
+    "enable",
+    "disable",
+    "instant",
+    "maybe_block",
+    "span",
+    "tracing",
+    "json_snapshot",
+    "prometheus_text",
+    "save_chrome_trace",
+    "jax_profile",
+]

@@ -1,0 +1,99 @@
+"""Exporters: Prometheus text exposition, JSON snapshots, profiler hook.
+
+Everything here is pull-based and dependency-free: :func:`prometheus_text`
+renders the registry in the text exposition format (scrape it from any
+HTTP handler the embedding app already has), :func:`json_snapshot` is the
+same data as a plain dict for logs/tests, and :func:`jax_profile` wraps a
+traced region with ``jax.profiler`` so a repro span timeline and an XLA
+op-level profile can be captured in one shot.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import re
+import time
+
+from .metrics import REGISTRY, MetricsRegistry
+from . import trace as trace_lib
+
+__all__ = [
+    "prometheus_text",
+    "json_snapshot",
+    "save_chrome_trace",
+    "jax_profile",
+]
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    return _NAME_RE.sub("_", f"repro_{name}")
+
+
+def prometheus_text(registry: MetricsRegistry = REGISTRY) -> str:
+    """Render the registry in Prometheus text exposition format 0.0.4."""
+    snap = registry.snapshot()
+    out: list[str] = []
+    for name, value in sorted(snap["counters"].items()):
+        p = _prom_name(name)
+        out.append(f"# TYPE {p} counter")
+        out.append(f"{p} {value}")
+    for name, value in sorted(snap["gauges"].items()):
+        p = _prom_name(name)
+        out.append(f"# TYPE {p} gauge")
+        out.append(f"{p} {value}")
+    for name, h in sorted(snap["histograms"].items()):
+        p = _prom_name(name)
+        out.append(f"# TYPE {p} histogram")
+        cum = 0
+        for bound, count in zip(h["buckets"], h["counts"]):
+            cum += count
+            out.append(f'{p}_bucket{{le="{bound}"}} {cum}')
+        cum += h["counts"][-1] if h["counts"] else 0
+        out.append(f'{p}_bucket{{le="+Inf"}} {cum}')
+        out.append(f"{p}_sum {h['sum']}")
+        out.append(f"{p}_count {h['count']}")
+    return "\n".join(out) + "\n"
+
+
+def json_snapshot(registry: MetricsRegistry = REGISTRY) -> dict:
+    """Registry snapshot as a JSON-serializable dict (with a timestamp)."""
+    snap = registry.snapshot()
+    snap["ts_unix"] = time.time()
+    json.dumps(snap)  # guarantee serializability at the source
+    return snap
+
+
+def save_chrome_trace(obj, path: str) -> str:
+    """Write a :class:`Tracer` or :class:`Timeline` as Chrome-trace JSON."""
+    with open(path, "w") as f:
+        json.dump(obj.chrome_trace(), f)
+    return path
+
+
+@contextlib.contextmanager
+def jax_profile(logdir: str):
+    """Capture a jax/XLA profiler trace around a repro-traced region.
+
+    Best-effort: on builds where ``jax.profiler.trace`` is unavailable or
+    fails to start (no TensorBoard plugin, sandboxed filesystem) the
+    region still runs — with the repro span recorded — and the profiler
+    part is skipped.
+    """
+    import jax
+
+    with trace_lib.span("jax_profile", logdir=logdir):
+        try:
+            ctx = jax.profiler.trace(logdir)
+            ctx.__enter__()
+        except Exception:
+            ctx = None
+        try:
+            yield
+        finally:
+            if ctx is not None:
+                try:
+                    ctx.__exit__(None, None, None)
+                except Exception:
+                    pass

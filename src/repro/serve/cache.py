@@ -38,6 +38,8 @@ from typing import Callable
 import jax
 
 from ..core.session import SketchedSolver
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 from .fingerprint import Fingerprint, fingerprint
 
 __all__ = ["FactorCache", "CacheEntry", "session_nbytes"]
@@ -78,6 +80,16 @@ class FactorCache:
         self.misses = 0
         self.evictions = 0
         self.bytes = 0
+        self._m_hits = REGISTRY.counter("cache.hits")
+        self._m_misses = REGISTRY.counter("cache.misses")
+        self._m_evictions = REGISTRY.counter("cache.evictions")
+        self._m_bytes = REGISTRY.gauge("cache.bytes")
+        self._m_entries = REGISTRY.gauge("cache.entries")
+        self._m_build_s = REGISTRY.histogram("cache.build_s")
+
+    def _sync_gauges(self) -> None:
+        self._m_bytes.set(self.bytes)
+        self._m_entries.set(len(self._entries))
 
     # ------------------------------------------------------------- lookups
     def __len__(self) -> int:
@@ -94,10 +106,12 @@ class FactorCache:
             entry = self._entries.get(fp)
             if entry is None:
                 self.misses += 1
+                self._m_misses.inc()
                 return None
             self._entries.move_to_end(fp)
             entry.hits += 1
             self.hits += 1
+            self._m_hits.inc()
             return entry.solver
 
     def get_or_build(
@@ -108,8 +122,10 @@ class FactorCache:
         if solver is not None:
             return solver, True
         t0 = time.perf_counter()
-        solver = builder()  # outside the lock: builds can take seconds
+        with obs_trace.span("cache.build", fp=fp.short()):
+            solver = builder()  # outside the lock: builds can take seconds
         built_s = time.perf_counter() - t0
+        self._m_build_s.observe(built_s)
         with self._mu:
             entry = self._entries.get(fp)
             if entry is not None:
@@ -119,6 +135,7 @@ class FactorCache:
                 self._entries.move_to_end(fp)
                 entry.hits += 1
                 self.hits += 1
+                self._m_hits.inc()
                 return entry.solver, True
             self.put(fp, solver, built_s=built_s)
         return solver, False
@@ -137,6 +154,7 @@ class FactorCache:
             self._entries[fp] = entry
             self.bytes += entry.nbytes
             self._evict_to_budget(keep=fp)
+            self._sync_gauges()
             return entry
 
     def _drop(self, fp: Fingerprint) -> CacheEntry | None:
@@ -151,13 +169,19 @@ class FactorCache:
             if self._drop(fp) is None:
                 return False
             self.evictions += 1
+            self._m_evictions.inc()
+            obs_trace.instant("cache.eviction", fp=fp.short(), kind="explicit")
+            self._sync_gauges()
             return True
 
     def clear(self) -> None:
         with self._mu:
-            self.evictions += len(self._entries)
+            dropped = len(self._entries)
+            self.evictions += dropped
+            self._m_evictions.inc(dropped)
             self._entries.clear()
             self.bytes = 0
+            self._sync_gauges()
 
     def _evict_to_budget(self, keep: Fingerprint) -> None:
         # Evict LRU-first until under budget; the just-touched entry is
@@ -170,6 +194,9 @@ class FactorCache:
                 lru_fp = next(iter(self._entries))
             self._drop(lru_fp)
             self.evictions += 1
+            self._m_evictions.inc()
+            obs_trace.instant("cache.eviction", fp=lru_fp.short(),
+                              kind="budget")
 
     # ------------------------------------------------------ drift handling
     def update_rows(self, fp: Fingerprint, idx, rows) -> Fingerprint | None:
@@ -203,6 +230,7 @@ class FactorCache:
             self._entries[new_fp] = entry
             self.bytes += entry.nbytes
             self._evict_to_budget(keep=new_fp)
+            self._sync_gauges()
             return new_fp
 
     # ------------------------------------------------------------- reports

@@ -56,6 +56,8 @@ from ..core.lstsq import lstsq
 from ..core.precond import default_sketch_size
 from ..core.result import SolveResult
 from ..core.session import SketchedSolver
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 from .batching import (
     MicroBatcher,
     _next_pow2,
@@ -174,10 +176,12 @@ class SolveService:
         self.iter_lim = int(iter_lim)
         self.small_problem_flops = int(small_problem_flops)
         self.max_distortion = float(max_distortion)
-        self.counters = {
+        self.counters = REGISTRY.stats_dict("serve", {
             "requests": 0, "ok": 0, "rejected": 0, "slow_path": 0,
             "session_batches": 0, "bucket_batches": 0,
-        }
+        })
+        self._h_latency = REGISTRY.histogram("serve.latency_s")
+        self._h_queued = REGISTRY.histogram("serve.queued_s")
         self._bucket_keys: set = set()
         # _lock guards the queues/counters only and is held for
         # microseconds; _dispatch_lock serializes the dispatchers (pump
@@ -289,6 +293,7 @@ class SolveService:
                     tenant=tenant,
                 )
                 self.sessions.add(req.fp, req, now=now)
+        obs_trace.instant("serve.submit", mode=mode, m=m, n=n)
         return req.future
 
     def solve(self, A, b, **kw) -> SolveResponse:
@@ -333,7 +338,8 @@ class SolveService:
 
     def _dispatch_guarded(self, dispatch, key, reqs, path: str) -> int:
         try:
-            return dispatch(key, reqs)
+            with obs_trace.span(f"serve.dispatch.{path}", batch=len(reqs)):
+                return dispatch(key, reqs)
         except Exception as e:  # noqa: BLE001 — the pump must survive
             for r in reqs:
                 if not r.future.done():
@@ -501,22 +507,25 @@ class SolveService:
         # per problem shape; the duplicate columns ride the same gemms
         # nearly for free and are sliced off before certification.
         k_pad = min(_next_pow2(k), self.sessions.max_batch)
-        if k_pad == 1:
-            res = session.solve(live[0].b)
-            B_full = live[0].b[:, None]
-            X = res.x[:, None]
-        else:
-            B_full = jnp.stack(
-                [r.b for r in live] + [live[-1].b] * (k_pad - k), axis=1
-            )
-            res = session.solve_many(B_full)
-            X = res.x
+        with obs_trace.span("serve.solve", k=k, k_pad=k_pad, cache_hit=hit):
+            if k_pad == 1:
+                res = session.solve(live[0].b)
+                B_full = live[0].b[:, None]
+                X = res.x[:, None]
+            else:
+                B_full = jnp.stack(
+                    [r.b for r in live] + [live[-1].b] * (k_pad - k), axis=1
+                )
+                res = session.solve_many(B_full)
+                X = res.x
+            obs_trace.maybe_block(X)
         # Certify the PADDED width (duplicate columns certify redundantly
         # for free) so the jitted certify block shares the solve's
         # compile ladder instead of compiling per coalesced size.
-        certs = self._certify_columns(
-            session, B_full, X, [r.rtol for r in live]
-        )
+        with obs_trace.span("serve.certify", k=k):
+            certs = self._certify_columns(
+                session, B_full, X, [r.rtol for r in live]
+            )
         X_host = np.asarray(X)
         host = jax.device_get((res.istop, res.itn, res.rnorm, res.arnorm,
                                res.used_fallback))
@@ -569,10 +578,11 @@ class SolveService:
             return
         with self._lock:
             self.counters["slow_path"] += 1
-        res = lstsq(
-            r.A, r.b, self._next_key(), accuracy="certified",
-            certified_rtol=r.rtol, reg=r.reg, sketch=fp.sketch,
-        )
+        with obs_trace.span("serve.slow_path", rtol=r.rtol):
+            res = lstsq(
+                r.A, r.b, self._next_key(), accuracy="certified",
+                certified_rtol=r.rtol, reg=r.reg, sketch=fp.sketch,
+            )
         cert = res.certificate
         if cert is not None and bool(cert.passed):
             self._resolve(r, res, cert, "slow", cache_hit, batch_size)
@@ -607,7 +617,9 @@ class SolveService:
         A_stack = jnp.stack([p[0] for p in pads])
         b_stack = jnp.stack([p[1] for p in pads])
         lam = jnp.asarray([r.reg or 0.0 for r in live], A_stack.dtype)
-        out = solve_bucket(A_stack, b_stack, lam, certify=True)
+        with obs_trace.span("serve.solve", k=len(live), method="bucket"):
+            out = solve_bucket(A_stack, b_stack, lam, certify=True)
+            obs_trace.maybe_block(out["x"])
         k = len(live)
         dtype = A_stack.dtype
         for j, r in enumerate(live):
@@ -661,33 +673,52 @@ class SolveService:
         now = time.monotonic()
         with self._lock:
             self.counters["ok"] += 1
+        queued_s = self._queued_s(r, now)
+        latency_s = now - r.t_submit
+        self._h_queued.observe(queued_s)
+        self._h_latency.observe(latency_s)
         r.future.set_result(SolveResponse(
             status="ok", x=res.x, result=res, certificate=cert, reason=None,
             path=path, cache_hit=hit, batch_size=batch,
-            queued_s=self._queued_s(r, now), latency_s=now - r.t_submit,
+            queued_s=queued_s, latency_s=latency_s,
         ))
 
     def _reject(self, r, reason, path, hit, batch):
         now = time.monotonic()
         with self._lock:
             self.counters["rejected"] += 1
+        queued_s = self._queued_s(r, now)
+        latency_s = now - r.t_submit
+        self._h_queued.observe(queued_s)
+        self._h_latency.observe(latency_s)
+        obs_trace.instant("serve.reject", path=path, reason=reason)
         r.future.set_result(SolveResponse(
             status="rejected", x=None, result=None, certificate=None,
             reason=reason, path=path, cache_hit=hit, batch_size=batch,
-            queued_s=self._queued_s(r, now), latency_s=now - r.t_submit,
+            queued_s=queued_s, latency_s=latency_s,
         ))
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
+        # ONE consistent snapshot: the counters dict, both batchers'
+        # occupancy/pending and the bucket-key census are all read under a
+        # single acquisition of the service lock, so a stats() poll racing
+        # the pump never sees a batch counted in ``session_batches`` whose
+        # requests are still missing from ``ok``/``rejected``.  The cache
+        # keeps its own lock and is snapshotted after — its counters are
+        # internally consistent, just potentially a tick newer.
         with self._lock:
+            counters = dict(self.counters)
             occ = OrderedDict(
                 session_occupancy=self.sessions.mean_occupancy,
                 bucket_occupancy=self.buckets.mean_occupancy,
             )
-            return {
-                **self.counters,
-                **occ,
-                "pending": self.sessions.pending + self.buckets.pending,
-                "bucket_executables": len(self._bucket_keys),
-                "cache": self.cache.stats(),
-            }
+            pending = self.sessions.pending + self.buckets.pending
+            bucket_executables = len(self._bucket_keys)
+        return {
+            **counters,
+            **occ,
+            "pending": pending,
+            "bucket_executables": bucket_executables,
+            "cache": self.cache.stats(),
+        }

@@ -47,6 +47,8 @@ from ..core.backend import resolve as resolve_backend
 from ..core.iterative import _IMPROVE_FACTOR, _STALL_LIMIT, damping_momentum
 from ..core.precond import SketchedFactor, default_sketch_size
 from ..core.result import SolveResult
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 from .accumulate import make_accumulator
 from .sources import RowSource, as_source
 
@@ -98,20 +100,29 @@ def stream_sketch(
     if callable(cluster_sketch):
         # a ClusterEngine source: pass 1 fans out over the worker pool
         # (checkpointed, fault-tolerant) and merges to the same sketch
-        Bc = cluster_sketch(op, rhs=rhs, backend=backend)
+        with obs_trace.span("stream.pass1", mode="cluster", rows=m):
+            Bc = cluster_sketch(op, rhs=rhs, backend=backend)
+            obs_trace.maybe_block(Bc)
     else:
-        acc = make_accumulator(op, ncols, dtype=jnp.dtype(source.dtype),
-                               backend=backend)
-        for offset, tile in source.tiles():
-            tile = jnp.asarray(tile)
-            if rhs is not None:
-                t = tile.shape[0]
-                tile = jnp.concatenate(
-                    [tile, rhs[offset : offset + t][:, None].astype(tile.dtype)],
-                    axis=1,
-                )
-            acc.update(tile, offset)
-        Bc = acc.finalize()
+        with obs_trace.span("stream.pass1", mode="serial", rows=m):
+            acc = make_accumulator(op, ncols, dtype=jnp.dtype(source.dtype),
+                                   backend=backend)
+            for offset, tile in source.tiles():
+                with obs_trace.span("stream.tile", offset=offset):
+                    tile = jnp.asarray(tile)
+                    if rhs is not None:
+                        t = tile.shape[0]
+                        tile = jnp.concatenate(
+                            [tile,
+                             rhs[offset : offset + t][:, None].astype(
+                                 tile.dtype
+                             )],
+                            axis=1,
+                        )
+                    acc.update(tile, offset)
+                    obs_trace.maybe_block(tile)
+            Bc = acc.finalize()
+            obs_trace.maybe_block(Bc)
     if rhs is None:
         return Bc, op, None
     return Bc[:, :n], op, Bc[:, n]
@@ -155,23 +166,25 @@ def _stream_matvec(source, x):
     tile loop — same for ``rmatvec`` / ``residual_grad`` below.
     """
     mv = getattr(source, "matvec", None)
-    if callable(mv):
-        return mv(x)
-    parts = [jnp.asarray(tile) @ x for _, tile in source.tiles()]
-    return jnp.concatenate(parts, axis=0)
+    with obs_trace.span("stream.pass2", op="matvec"):
+        if callable(mv):
+            return obs_trace.maybe_block(mv(x))
+        parts = [jnp.asarray(tile) @ x for _, tile in source.tiles()]
+        return obs_trace.maybe_block(jnp.concatenate(parts, axis=0))
 
 
 def _stream_rmatvec(source, u):
     """Aᵀ @ u by accumulating per-tile adjoint products."""
     rmv = getattr(source, "rmatvec", None)
-    if callable(rmv):
-        return rmv(u)
-    n = source.shape[1]
-    g = jnp.zeros((n,) + u.shape[1:], u.dtype)
-    for offset, tile in source.tiles():
-        tile = jnp.asarray(tile)
-        g = g + tile.T @ u[offset : offset + tile.shape[0]]
-    return g
+    with obs_trace.span("stream.pass2", op="rmatvec"):
+        if callable(rmv):
+            return obs_trace.maybe_block(rmv(u))
+        n = source.shape[1]
+        g = jnp.zeros((n,) + u.shape[1:], u.dtype)
+        for offset, tile in source.tiles():
+            tile = jnp.asarray(tile)
+            g = g + tile.T @ u[offset : offset + tile.shape[0]]
+        return obs_trace.maybe_block(g)
 
 
 def _stream_residual_grad(source, b, x):
@@ -183,17 +196,21 @@ def _stream_residual_grad(source, b, x):
     the squared norms come back per column.
     """
     rg = getattr(source, "residual_grad", None)
-    if callable(rg):
-        return rg(b, x)
-    n = source.shape[1]
-    g = jnp.zeros((n,) + b.shape[1:], b.dtype)
-    rn2 = jnp.zeros(b.shape[1:], b.dtype)
-    for offset, tile in source.tiles():
-        tile = jnp.asarray(tile)
-        r_t = b[offset : offset + tile.shape[0]] - tile @ x
-        g = g + tile.T @ r_t
-        rn2 = rn2 + jnp.sum(r_t * r_t, axis=0)
-    return rn2, g
+    with obs_trace.span("stream.pass2", op="residual_grad"):
+        if callable(rg):
+            out = rg(b, x)
+            obs_trace.maybe_block(out)
+            return out
+        n = source.shape[1]
+        g = jnp.zeros((n,) + b.shape[1:], b.dtype)
+        rn2 = jnp.zeros(b.shape[1:], b.dtype)
+        for offset, tile in source.tiles():
+            tile = jnp.asarray(tile)
+            r_t = b[offset : offset + tile.shape[0]] - tile @ x
+            g = g + tile.T @ r_t
+            rn2 = rn2 + jnp.sum(r_t * r_t, axis=0)
+        obs_trace.maybe_block(g)
+        return rn2, g
 
 
 # --------------------------------------------------------------------------
@@ -275,50 +292,55 @@ def _lsqr_streamed(mv, rmv, b, x0, *, atol, btol, steptol, iter_lim,
     rhist = []
     while (istop == 0).any() and itn < iter_lim:
         itn += 1
-        U_raw = mv(V) - alfa * U
-        beta_k = cnorm(U_raw)
-        U = U_raw / safe(beta_k)
-        anorm2 = anorm2 + alfa**2 + beta_k**2
-        V_raw = rmv(U) - beta_k * V
-        alfa_k = cnorm(V_raw)
-        V = V_raw / safe(alfa_k)
+        with obs_trace.span("stream.iter", itn=itn, method="saa"):
+            U_raw = mv(V) - alfa * U
+            beta_k = cnorm(U_raw)
+            U = U_raw / safe(beta_k)
+            anorm2 = anorm2 + alfa**2 + beta_k**2
+            V_raw = rmv(U) - beta_k * V
+            alfa_k = cnorm(V_raw)
+            V = V_raw / safe(alfa_k)
 
-        rho = jnp.hypot(rhobar, beta_k)
-        c = jnp.where(rho > 0, rhobar / safe(rho), 1.0)
-        sn = jnp.where(rho > 0, beta_k / safe(rho), 0.0)
-        theta = sn * alfa_k
-        phi = c * phibar
-        arnorm = alfa_k * jnp.abs(sn * phibar)  # pre-update phibar
-        t1 = jnp.where(rho > 0, phi / safe(rho), 0.0)
-        t2 = jnp.where(rho > 0, -theta / safe(rho), 0.0)
-        step = jnp.abs(t1) * cnorm(W)
-        X = X + t1 * W
-        W = V + t2 * W
-        rhobar = -c * alfa_k
-        phibar = sn * phibar
-        alfa = alfa_k
+            rho = jnp.hypot(rhobar, beta_k)
+            c = jnp.where(rho > 0, rhobar / safe(rho), 1.0)
+            sn = jnp.where(rho > 0, beta_k / safe(rho), 0.0)
+            theta = sn * alfa_k
+            phi = c * phibar
+            arnorm = alfa_k * jnp.abs(sn * phibar)  # pre-update phibar
+            t1 = jnp.where(rho > 0, phi / safe(rho), 0.0)
+            t2 = jnp.where(rho > 0, -theta / safe(rho), 0.0)
+            step = jnp.abs(t1) * cnorm(W)
+            X = X + t1 * W
+            W = V + t2 * W
+            rhobar = -c * alfa_k
+            phibar = sn * phibar
+            alfa = alfa_k
 
-        rnorm = phibar
-        anorm = jnp.sqrt(anorm2)
-        xnorm = cnorm(X + X0)
-        test1 = np.asarray(rnorm / safe(bnorm))
-        test2 = np.asarray(arnorm / safe(anorm * rnorm))
-        rtol = np.asarray(btol + atol * anorm * xnorm / safe(bnorm))
-        relstep = np.asarray(step / jnp.maximum(xnorm, tiny))
-        stepn = np.asarray(step)
-        if history:
-            rhist.append(float(rnorm[0]) if vec else rnorm)
+            rnorm = phibar
+            anorm = jnp.sqrt(anorm2)
+            xnorm = cnorm(X + X0)
+            test1 = np.asarray(rnorm / safe(bnorm))
+            test2 = np.asarray(arnorm / safe(anorm * rnorm))
+            rtol = np.asarray(btol + atol * anorm * xnorm / safe(bnorm))
+            relstep = np.asarray(step / jnp.maximum(xnorm, tiny))
+            stepn = np.asarray(step)
+            if history:
+                rhist.append(float(rnorm[0]) if vec else rnorm)
 
-        n_small = np.where((steptol > 0) & (relstep <= steptol), n_small + 1, 0)
-        n_stall = np.where(stepn < _IMPROVE_FACTOR * min_step, 0, n_stall + 1)
-        min_step = np.minimum(min_step, stepn)
+            n_small = np.where(
+                (steptol > 0) & (relstep <= steptol), n_small + 1, 0
+            )
+            n_stall = np.where(
+                stepn < _IMPROVE_FACTOR * min_step, 0, n_stall + 1
+            )
+            min_step = np.minimum(min_step, stepn)
 
-        new = np.zeros(k, np.int32)
-        new[:] = 7 if itn >= iter_lim else 0
-        new = np.where((n_small >= 3) | (n_stall >= _STALL_LIMIT), 8, new)
-        new = np.where(test2 <= atol, 2, new)
-        new = np.where(test1 <= rtol, 1, new)
-        istop = np.where(istop == 0, new, istop)
+            new = np.zeros(k, np.int32)
+            new[:] = 7 if itn >= iter_lim else 0
+            new = np.where((n_small >= 3) | (n_stall >= _STALL_LIMIT), 8, new)
+            new = np.where(test2 <= atol, 2, new)
+            new = np.where(test1 <= rtol, 1, new)
+            istop = np.where(istop == 0, new, istop)
 
     X = X + X0
     istop = np.where(istop == -1, 0, istop)  # trivial columns: scipy's code 0
@@ -348,37 +370,38 @@ def _iterative_streamed(source, b, factor, x0, *, alpha, beta, reg, atol,
         return z, 0, 0, bnorm, 0.0, rhist
     while istop == 0 and itn < iter_lim:
         itn += 1
-        rn2, g = _stream_residual_grad(source, b, x)
-        if lam is not None:
-            # augmented system [A; √λI]x ≈ [b; 0]: the tail contributes
-            # −λx to the gradient and λ‖x‖² to the squared residual
-            rn2 = rn2 + lam * jnp.sum(x * x, axis=0)
-            g = g - lam * x
-        # block mode (stacked RHS): all norms are Frobenius — the iteration
-        # runs until the slowest column's floor
-        rnorm = float(jnp.sqrt(jnp.sum(rn2)))
-        arnorm = float(jnp.linalg.norm(g))
-        d = factor.normal_solve(g)
-        dx = alpha * d + beta * (x - x_prev)
-        x_prev, x = x, x + dx
+        with obs_trace.span("stream.iter", itn=itn, method="iterative"):
+            rn2, g = _stream_residual_grad(source, b, x)
+            if lam is not None:
+                # augmented system [A; √λI]x ≈ [b; 0]: the tail contributes
+                # −λx to the gradient and λ‖x‖² to the squared residual
+                rn2 = rn2 + lam * jnp.sum(x * x, axis=0)
+                g = g - lam * x
+            # block mode (stacked RHS): all norms are Frobenius — the
+            # iteration runs until the slowest column's floor
+            rnorm = float(jnp.sqrt(jnp.sum(rn2)))
+            arnorm = float(jnp.linalg.norm(g))
+            d = factor.normal_solve(g)
+            dx = alpha * d + beta * (x - x_prev)
+            x_prev, x = x, x + dx
 
-        xnorm = float(jnp.linalg.norm(x))
-        stepnorm = float(jnp.linalg.norm(dx))
-        relstep = stepnorm / max(xnorm, tiny)
-        test1 = rnorm / bnorm if bnorm > 0 else rnorm
-        denom = anorm * rnorm if anorm * rnorm > 0 else 1.0
-        test2 = arnorm / denom
-        rtol = btol + atol * anorm * xnorm / (bnorm if bnorm > 0 else 1.0)
-        if history:
-            rhist.append(rnorm)
-        if itn >= iter_lim:
-            istop = 7
-        if floor.update(stepnorm, relstep, steptol):
-            istop = 8
-        if test2 <= atol:
-            istop = 2
-        if test1 <= rtol:
-            istop = 1
+            xnorm = float(jnp.linalg.norm(x))
+            stepnorm = float(jnp.linalg.norm(dx))
+            relstep = stepnorm / max(xnorm, tiny)
+            test1 = rnorm / bnorm if bnorm > 0 else rnorm
+            denom = anorm * rnorm if anorm * rnorm > 0 else 1.0
+            test2 = arnorm / denom
+            rtol = btol + atol * anorm * xnorm / (bnorm if bnorm > 0 else 1.0)
+            if history:
+                rhist.append(rnorm)
+            if itn >= iter_lim:
+                istop = 7
+            if floor.update(stepnorm, relstep, steptol):
+                istop = 8
+            if test2 <= atol:
+                istop = 2
+            if test1 <= rtol:
+                istop = 1
     return x, istop, itn, None, None, rhist
 
 
@@ -415,31 +438,34 @@ def _certify_streamed(source, b, x, factor, key, *, lam, sketch_rows,
     """
     n = source.shape[1]
     dtype = b.dtype
-    W = jax.random.normal(key, (n, int(n_probes)), dtype)
-    V = factor.precondition(W)
-    AV = _stream_matvec(source, V)  # one pass serves every probe
-    yn2 = jnp.sum(AV * AV, axis=0)
-    if lam is not None:
-        yn2 = yn2 + lam * jnp.sum(V * V, axis=0)
-    wn = jnp.linalg.norm(W, axis=0)
-    ratios = wn / jnp.maximum(jnp.sqrt(yn2), jnp.finfo(dtype).tiny)
-    eps_hat = jnp.max(jnp.abs(ratios - 1.0))
+    with obs_trace.span("certify.streamed", n_probes=int(n_probes)):
+        W = jax.random.normal(key, (n, int(n_probes)), dtype)
+        V = factor.precondition(W)
+        AV = _stream_matvec(source, V)  # one pass serves every probe
+        yn2 = jnp.sum(AV * AV, axis=0)
+        if lam is not None:
+            yn2 = yn2 + lam * jnp.sum(V * V, axis=0)
+        wn = jnp.linalg.norm(W, axis=0)
+        ratios = wn / jnp.maximum(jnp.sqrt(yn2), jnp.finfo(dtype).tiny)
+        eps_hat = jnp.max(jnp.abs(ratios - 1.0))
 
-    rn2, g = _stream_residual_grad(source, b, x)
-    rn2_aug = rn2
-    if lam is not None:
-        rn2_aug = rn2 + lam * jnp.sum(x * x)
-        g = g - lam * x  # the ridge gradient — also the augmented system's
-    wg = factor.rt_solve(g)
-    cert = certify_lib.build_certificate(
-        factor,
-        distortion=eps_hat,
-        rnorm=jnp.sqrt(rn2_aug),
-        whitened_arnorm=jnp.linalg.norm(wg),
-        xnorm=jnp.linalg.norm(x),
-        target=target,
-        sketch_rows=sketch_rows,
-    )
+        rn2, g = _stream_residual_grad(source, b, x)
+        rn2_aug = rn2
+        if lam is not None:
+            rn2_aug = rn2 + lam * jnp.sum(x * x)
+            # the ridge gradient — also the augmented system's
+            g = g - lam * x
+        wg = factor.rt_solve(g)
+        cert = certify_lib.build_certificate(
+            factor,
+            distortion=eps_hat,
+            rnorm=jnp.sqrt(rn2_aug),
+            whitened_arnorm=jnp.linalg.norm(wg),
+            xnorm=jnp.linalg.norm(x),
+            target=target,
+            sketch_rows=sketch_rows,
+        )
+        obs_trace.maybe_block(cert.passed)
     return cert, jnp.sqrt(rn2), jnp.linalg.norm(g)
 
 
@@ -463,6 +489,7 @@ def stream_lstsq(
     certified_rtol: float | None = None,
     certified_probes: int = 8,
     cluster=None,
+    trace: bool | None = None,
 ) -> SolveResult:
     """min‖Ax − b‖ (+ λ‖x‖² with ``reg=λ``) over a row-streamed A.
 
@@ -495,19 +522,22 @@ def stream_lstsq(
     engine is left open for the caller to reuse and ``close()``.
     """
     source = as_source(source, tile_rows)
-    source, owned = _maybe_cluster(source, cluster, backend)
-    try:
-        return _stream_lstsq_impl(
-            source, b, key, method=method, sketch=sketch,
-            sketch_size=sketch_size, reg=reg, atol=atol, btol=btol,
-            steptol=steptol, iter_lim=iter_lim, backend=backend,
-            history=history, certify=certify,
-            certified_rtol=certified_rtol,
-            certified_probes=certified_probes,
-        )
-    finally:
-        if owned is not None:
-            owned.close()
+    scope = obs_trace.solve_scope(trace)
+    with scope, obs_trace.span("stream_lstsq"):
+        source, owned = _maybe_cluster(source, cluster, backend)
+        try:
+            res = _stream_lstsq_impl(
+                source, b, key, method=method, sketch=sketch,
+                sketch_size=sketch_size, reg=reg, atol=atol, btol=btol,
+                steptol=steptol, iter_lim=iter_lim, backend=backend,
+                history=history, certify=certify,
+                certified_rtol=certified_rtol,
+                certified_probes=certified_probes,
+            )
+        finally:
+            if owned is not None:
+                owned.close()
+    return scope.attach(res)
 
 
 def _stream_lstsq_impl(
@@ -549,7 +579,9 @@ def _stream_lstsq_impl(
         sqrt_lam = jnp.sqrt(lam)
         B = jnp.concatenate([B, sqrt_lam * jnp.eye(n, dtype=B.dtype)], axis=0)
         c = jnp.concatenate([c, jnp.zeros((n,), c.dtype)])
-    factor = SketchedFactor.from_sketch(B)
+    with obs_trace.span("factor.qr", shape=tuple(B.shape)):
+        factor = SketchedFactor.from_sketch(B)
+        obs_trace.maybe_block(factor.R)
     x0 = factor.sketch_and_solve(c)
 
     def _maybe_certificate(x):
@@ -586,11 +618,12 @@ def _stream_lstsq_impl(
         )
     if method == "iterative":
         alpha, beta = damping_momentum(s, n)
-        x, istop, itn, _, _, hist = _iterative_streamed(
-            source, b, factor, x0, alpha=alpha, beta=beta, reg=lam,
-            atol=atol, btol=btol, steptol=steptol, iter_lim=iter_lim,
-            history=history,
-        )
+        with obs_trace.span("stream.solve", method="iterative"):
+            x, istop, itn, _, _, hist = _iterative_streamed(
+                source, b, factor, x0, alpha=alpha, beta=beta, reg=lam,
+                atol=atol, btol=btol, steptol=steptol, iter_lim=iter_lim,
+                history=history,
+            )
         cert, rnorm_c, arnorm_c = _maybe_certificate(x)
         if cert is not None:
             rnorm, arnorm = rnorm_c, arnorm_c
@@ -618,10 +651,11 @@ def _stream_lstsq_impl(
 
             b_solve = jnp.concatenate([b, jnp.zeros((n,), b.dtype)])
         z0 = factor.warm_start(c)
-        z, istop, itn, rnorm, arnorm, hist = _lsqr_streamed(
-            mv, rmv, b_solve, z0, atol=atol, btol=btol, steptol=steptol,
-            iter_lim=iter_lim, history=history,
-        )
+        with obs_trace.span("stream.solve", method="saa"):
+            z, istop, itn, rnorm, arnorm, hist = _lsqr_streamed(
+                mv, rmv, b_solve, z0, atol=atol, btol=btol, steptol=steptol,
+                iter_lim=iter_lim, history=history,
+            )
         x = factor.precondition(z)
         cert, rnorm_c, arnorm_c = _maybe_certificate(x)
         if cert is not None:
@@ -719,10 +753,10 @@ class StreamingSolver:
         backend: str = "auto",
         cluster=None,
     ):
-        self.stats = {
+        self.stats = REGISTRY.stats_dict("streaming", {
             "sketches": 0, "qr_factorizations": 0, "solves": 0,
             "passes": 0, "tiles": 0,
-        }
+        })
         inner, self._owned_engine = _maybe_cluster(
             as_source(source, tile_rows), cluster, backend,
             counters=self.stats,
@@ -842,37 +876,39 @@ class StreamingSolver:
         if b.shape != (m,):
             raise ValueError(f"b must have shape ({m},), got {b.shape}")
         method = _ALIASES.get(method, method)
-        c = self._sketch_rhs(b)
-        x0 = self.factor.sketch_and_solve(c)
-        lam = None if self.reg is None else jnp.asarray(self.reg, b.dtype)
-        hist = []
-        if method == "sketch_and_solve":
-            nan = jnp.asarray(jnp.nan, b.dtype)
-            self.stats["solves"] += 1
-            return SolveResult(
-                x=x0, istop=jnp.asarray(1, jnp.int32),
-                itn=jnp.asarray(0, jnp.int32), rnorm=nan, arnorm=nan,
-                used_fallback=jnp.asarray(False),
-                method="stream_sketch_and_solve",
-            )
-        if method == "iterative":
-            alpha, beta = damping_momentum(self.sketch_size, n)
-            x, istop, itn, _, _, hist = _iterative_streamed(
-                self.source, b, self.factor, x0, alpha=alpha, beta=beta,
-                reg=lam, history=history, **self._kw,
-            )
-        elif method == "saa":
-            mv, rmv = self._whitened_ops()
-            z, istop, itn, _, _, hist = _lsqr_streamed(
-                mv, rmv, self._augment_rhs(b), self.factor.warm_start(c),
-                history=history, **self._kw,
-            )
-            x = self.factor.precondition(z)
-        else:
-            raise ValueError(
-                f"unknown streaming method {method!r}; have {STREAM_METHODS}"
-            )
-        rnorm, arnorm = self._diagnose(b, x)
+        with obs_trace.span("streaming.solve", method=method):
+            c = self._sketch_rhs(b)
+            x0 = self.factor.sketch_and_solve(c)
+            lam = None if self.reg is None else jnp.asarray(self.reg, b.dtype)
+            hist = []
+            if method == "sketch_and_solve":
+                nan = jnp.asarray(jnp.nan, b.dtype)
+                self.stats["solves"] += 1
+                return SolveResult(
+                    x=x0, istop=jnp.asarray(1, jnp.int32),
+                    itn=jnp.asarray(0, jnp.int32), rnorm=nan, arnorm=nan,
+                    used_fallback=jnp.asarray(False),
+                    method="stream_sketch_and_solve",
+                )
+            if method == "iterative":
+                alpha, beta = damping_momentum(self.sketch_size, n)
+                x, istop, itn, _, _, hist = _iterative_streamed(
+                    self.source, b, self.factor, x0, alpha=alpha, beta=beta,
+                    reg=lam, history=history, **self._kw,
+                )
+            elif method == "saa":
+                mv, rmv = self._whitened_ops()
+                z, istop, itn, _, _, hist = _lsqr_streamed(
+                    mv, rmv, self._augment_rhs(b), self.factor.warm_start(c),
+                    history=history, **self._kw,
+                )
+                x = self.factor.precondition(z)
+            else:
+                raise ValueError(
+                    f"unknown streaming method {method!r}; "
+                    f"have {STREAM_METHODS}"
+                )
+            rnorm, arnorm = self._diagnose(b, x)
         self.stats["solves"] += 1
         return SolveResult(
             x=x, istop=jnp.asarray(istop, jnp.int32),
@@ -899,31 +935,34 @@ class StreamingSolver:
                 f"solve_many needs B of shape ({m}, k), got {B.shape}"
             )
         method = _ALIASES.get(method, method)
-        C = self._sketch_rhs(B)
-        lam = None if self.reg is None else jnp.asarray(self.reg, B.dtype)
-        if method == "saa":
-            mv, rmv = self._whitened_ops()
-            Z, istop, itn, _, _, _ = _lsqr_streamed(
-                mv, rmv, self._augment_rhs(B), self.factor.warm_start(C),
-                **self._kw,
-            )
-            X = self.factor.precondition(Z)
-        elif method == "iterative":
-            X0 = self.factor.sketch_and_solve(C)
-            alpha, beta = damping_momentum(self.sketch_size, n)
-            X, istop, itn, _, _, _ = _iterative_streamed(
-                self.source, B, self.factor, X0, alpha=alpha, beta=beta,
-                reg=lam, **self._kw,
-            )
-            istop = jnp.full((B.shape[1],), istop, jnp.int32)
-        else:
-            raise ValueError(
-                f"solve_many supports methods ('saa', 'iterative'); "
-                f"got {method!r}"
-            )
-        rn2, G = _stream_residual_grad(self.source, B, X)
-        if lam is not None:
-            G = G - lam * X
+        with obs_trace.span(
+            "streaming.solve_many", method=method, k=int(B.shape[1])
+        ):
+            C = self._sketch_rhs(B)
+            lam = None if self.reg is None else jnp.asarray(self.reg, B.dtype)
+            if method == "saa":
+                mv, rmv = self._whitened_ops()
+                Z, istop, itn, _, _, _ = _lsqr_streamed(
+                    mv, rmv, self._augment_rhs(B), self.factor.warm_start(C),
+                    **self._kw,
+                )
+                X = self.factor.precondition(Z)
+            elif method == "iterative":
+                X0 = self.factor.sketch_and_solve(C)
+                alpha, beta = damping_momentum(self.sketch_size, n)
+                X, istop, itn, _, _, _ = _iterative_streamed(
+                    self.source, B, self.factor, X0, alpha=alpha, beta=beta,
+                    reg=lam, **self._kw,
+                )
+                istop = jnp.full((B.shape[1],), istop, jnp.int32)
+            else:
+                raise ValueError(
+                    f"solve_many supports methods ('saa', 'iterative'); "
+                    f"got {method!r}"
+                )
+            rn2, G = _stream_residual_grad(self.source, B, X)
+            if lam is not None:
+                G = G - lam * X
         self.stats["solves"] += int(B.shape[1])
         return SolveResult(
             x=X, istop=jnp.asarray(istop, jnp.int32),
