@@ -1,0 +1,59 @@
+"""reprolint — repo-native static analysis for the invariants tests can't see.
+
+The repo's own history motivates every rule: the PR 7/PR 8 review-fix
+commits were all concurrency and lifecycle bugs (a check-then-append
+race in ``FaultPlan``, serve dispatch under the submission lock, leaked
+worker threads, unguarded ``FactorCache`` mutation).  With eight-plus
+locks and daemon threads live in one process, those bug classes recur
+structurally — so they are caught structurally, by an AST pass that
+runs in CI, not by reviewers re-deriving the locking design per PR.
+
+Four rules (see the rule modules for the precise semantics):
+
+- **R1 lock discipline** (:mod:`.locks`) — attributes named in a class's
+  ``GUARDED_BY = {"attr": "_lock"}`` map may only be written (and, for
+  attrs in ``GUARDED_READS``, read) lexically inside ``with
+  self._lock:`` or inside a method declared ``@guarded_by("_lock")``
+  (whose call sites are then checked instead).  R1 also builds a static
+  lock-acquisition-order graph across modules and fails on cycles — the
+  ``_lock`` vs ``_dispatch_lock`` inversion class.
+- **R2 jit purity** (:mod:`.jitpurity`) — side-effecting calls
+  (``print``, ``np.*`` host ops, ``.item()``, ``time.*``, tracer spans,
+  metric increments) are flagged inside any function reachable under
+  ``jax.jit`` / ``vmap`` / ``lax.while_loop``-family tracing, unless
+  lexically guarded by a ``trace_state_clean()`` check or the callee is
+  a declared self-guarding entry point (``obs.trace.span`` checks the
+  trace state internally).
+- **R3 thread lifecycle** (:mod:`.threads`) — every
+  ``threading.Thread(...)`` must be constructed ``daemon=True`` or
+  provably joined (``.join`` on the binding name somewhere in the
+  owning class / function).
+- **R4 pytree completeness** (:mod:`.pytrees`) — a dataclass constructed
+  in jit-reachable code must be a registered pytree, registration must
+  wrap the ``@dataclass`` decorator in the right order, and an explicit
+  ``data_fields``/``meta_fields`` split must cover every declared field.
+
+Suppression syntax (justification is REQUIRED — an ignore without one
+is itself reported)::
+
+    self._tally += 1  # reprolint: ignore[R1]: only the monitor thread writes
+
+Run it::
+
+    python -m repro.analysis src/            # gate: exit 1 on findings
+    python -m repro.analysis src/ --graph    # print the lock-order graph
+
+``reprolint-baseline.json`` (repo root) carries tolerated pre-existing
+findings; ``--write-baseline`` refreshes it.  The package is pure
+stdlib — the CI gate needs a Python interpreter and nothing else.
+"""
+from .driver import AnalysisResult, run_analysis
+from .findings import Finding, load_baseline, write_baseline
+
+__all__ = [
+    "AnalysisResult",
+    "Finding",
+    "load_baseline",
+    "run_analysis",
+    "write_baseline",
+]

@@ -1,0 +1,34 @@
+"""Runtime-side annotation vocabulary reprolint checks against.
+
+Everything here is free at runtime — the annotations exist so the AST
+checker (and readers) can see the locking design in the code itself:
+
+- ``GUARDED_BY = {"attr": "_lock"}`` — class attribute mapping shared
+  mutable attributes to the lock that must be held to write them.
+- ``GUARDED_READS = frozenset({"attr"})`` — attrs whose *reads* must
+  also hold the lock (for state where a torn read matters, e.g. a list
+  snapshotted while another thread appends).
+- ``@guarded_by("_lock")`` — marks a helper method as "caller already
+  holds ``self._lock``": writes inside it are considered guarded, and
+  reprolint instead checks that every call site of the method sits
+  inside ``with self._lock:`` (or another method guarded by the same
+  lock).
+
+The decorator is intentionally a no-op wrapper (it only stamps the
+function) so annotating a hot path costs nothing.
+"""
+from __future__ import annotations
+
+__all__ = ["guarded_by"]
+
+GUARDED_BY_ATTR = "__reprolint_guarded_by__"
+
+
+def guarded_by(lock: str):
+    """Declare that a method must only be called with ``self.<lock>`` held."""
+
+    def mark(fn):
+        setattr(fn, GUARDED_BY_ATTR, lock)
+        return fn
+
+    return mark

@@ -1,0 +1,90 @@
+"""``python -m repro.analysis`` — the reprolint CLI and CI gate.
+
+Exit status: 0 when every finding is suppressed (with justification) or
+baselined, 1 when unsuppressed findings remain, 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .driver import run_analysis
+from .findings import RULES, write_baseline
+
+__all__ = ["main"]
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: lock discipline (R1), jit purity (R2), "
+                    "thread lifecycle (R3), pytree completeness (R4).",
+    )
+    p.add_argument("paths", nargs="+", help="files or directories to check")
+    p.add_argument("--rules", default=",".join(RULES),
+                   help="comma-separated subset, e.g. R1,R3")
+    p.add_argument("--baseline", default="reprolint-baseline.json",
+                   help="baseline file of tolerated findings "
+                        "(default: ./reprolint-baseline.json)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline file entirely")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write current findings to the baseline and exit 0")
+    p.add_argument("--graph", action="store_true",
+                   help="print the static lock-order graph")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable output")
+    p.add_argument("--root", default=".",
+                   help="repo root findings paths are relative to")
+    return p
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    rules = tuple(r.strip() for r in args.rules.split(",") if r.strip())
+    bad = [r for r in rules if r not in RULES]
+    if bad:
+        print(f"unknown rule(s): {bad} (known: {', '.join(RULES)})",
+              file=sys.stderr)
+        return 2
+
+    baseline = None if args.no_baseline else args.baseline
+    result = run_analysis(
+        args.paths, rules=rules, baseline_path=baseline, root=args.root,
+    )
+
+    if args.write_baseline:
+        write_baseline(args.baseline, result.findings)
+        print(f"wrote {len(result.findings)} finding(s) to {args.baseline}")
+        return 0
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.key() + (f.line,) for f in result.findings],
+            "suppressed": len(result.suppressed),
+            "baselined": len(result.baselined),
+            "files": len(result.files),
+            "lock_edges": {
+                a: sorted(b) for a, b in result.lock_graph.edges.items()
+            },
+        }, indent=2, default=list))
+        return 0 if result.ok else 1
+
+    for f in result.findings:
+        print(f.render())
+    if args.graph:
+        print(result.lock_graph.render())
+    n, ns, nb = len(result.findings), len(result.suppressed), len(result.baselined)
+    checked = len(result.files)
+    print(
+        f"reprolint: {checked} file(s), rules {','.join(rules)}: "
+        f"{n} finding(s), {ns} suppressed, {nb} baselined"
+        + (" — OK" if result.ok else " — FAIL")
+    )
+    if not result.ok and not Path(args.baseline).exists():
+        print("hint: suppress inline with 'reprolint: ignore[<rule>]: why' "
+              "comments or record tolerated findings with --write-baseline",
+              file=sys.stderr)
+    return 0 if result.ok else 1

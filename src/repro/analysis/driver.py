@@ -1,0 +1,98 @@
+"""Orchestration: discover files, index once, run rules, apply
+suppressions and the baseline, return a structured result."""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+from .findings import (
+    Finding,
+    load_baseline,
+    scan_suppressions,
+    suppression_for,
+)
+from .index import RepoIndex
+from .jitpurity import check_jit_purity
+from .locks import LockGraph, build_lock_graph, check_locks
+from .pytrees import check_pytrees
+from .threads import check_threads
+
+__all__ = ["AnalysisResult", "run_analysis", "discover_files"]
+
+RULE_CHECKS = {
+    "R1": check_locks,
+    "R2": check_jit_purity,
+    "R3": check_threads,
+    "R4": check_pytrees,
+}
+
+_SKIP_PARTS = {"__pycache__", ".git", "fixtures"}
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: list  # active (unsuppressed, un-baselined), render-ordered
+    suppressed: list  # (Finding, Suppression)
+    baselined: list
+    lock_graph: "LockGraph"
+    files: list
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def discover_files(paths) -> list:
+    files: list = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(
+                f for f in sorted(p.rglob("*.py"))
+                if not (_SKIP_PARTS & set(f.parts))
+            )
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def run_analysis(paths, rules=None, baseline_path=None, root=None):
+    root = Path(root) if root is not None else Path.cwd()
+    files = discover_files(paths)
+    index = RepoIndex(files, root=root)
+    rules = tuple(rules) if rules else tuple(RULE_CHECKS)
+
+    raw: list = []
+    for rule in rules:
+        raw.extend(RULE_CHECKS[rule](index))
+    for path, msg in index.parse_errors:
+        raw.append(Finding("R0", path, 1, "parse", msg))
+
+    sup_tables = {
+        mod.path: scan_suppressions(mod.source)
+        for mod in index.modules.values()
+    }
+    for path, (_table, bad) in sup_tables.items():
+        for line, msg in bad:
+            raw.append(Finding("R0", path, line, "suppression", msg))
+
+    baseline = set()
+    if baseline_path is not None and Path(baseline_path).exists():
+        baseline = load_baseline(baseline_path)
+
+    active, suppressed, baselined = [], [], []
+    for f in sorted(set(raw), key=lambda f: (f.path, f.line, f.rule)):
+        table = sup_tables.get(f.path, ({}, []))[0]
+        sup = suppression_for(table, f) if f.rule != "R0" else None
+        if sup is not None:
+            suppressed.append((f, sup))
+        elif f.key() in baseline:
+            baselined.append(f)
+        else:
+            active.append(f)
+
+    graph = build_lock_graph(index)
+    return AnalysisResult(
+        findings=active, suppressed=suppressed, baselined=baselined,
+        lock_graph=graph, files=[str(f) for f in files],
+    )

@@ -1,0 +1,119 @@
+"""Findings, suppressions and the committed baseline.
+
+A :class:`Finding` identifies itself by ``(rule, path, context,
+message)`` — deliberately *not* by line number, so the baseline survives
+unrelated edits that shift code up or down a file.
+
+Suppression grammar, checked per physical line (the finding's line or
+the line directly above it)::
+
+    # reprolint: ignore[R1]: why this unguarded access is safe
+    # reprolint: ignore[R1,R2]: one comment may cover several rules
+
+The justification after the second colon is mandatory: an ignore
+without one becomes an ``R0`` finding itself, so every suppression in
+the tree documents its reasoning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+__all__ = [
+    "Finding",
+    "Suppression",
+    "scan_suppressions",
+    "load_baseline",
+    "write_baseline",
+]
+
+RULES = ("R1", "R2", "R3", "R4")
+
+_IGNORE_RE = re.compile(
+    r"#\s*reprolint:\s*ignore\[(?P<rules>[^\]]*)\]\s*(?::\s*(?P<why>.*))?\s*$"
+)
+# A looser "tried to write a suppression" matcher so typos are reported
+# rather than silently doing nothing.
+_ATTEMPT_RE = re.compile(r"#\s*reprolint\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str  # "R1".."R4" (or "R0" for a malformed suppression)
+    path: str  # repo-relative posix path
+    line: int
+    context: str  # qualified symbol the finding is anchored to
+    message: str
+
+    def key(self) -> tuple:
+        return (self.rule, self.path, self.context, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.context}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int
+    rules: tuple  # rule ids, or ("*",) for a bare ignore[]
+    justification: str
+
+    def covers(self, rule: str) -> bool:
+        return "*" in self.rules or rule in self.rules
+
+
+def scan_suppressions(source: str):
+    """``{line_number: Suppression}`` for one file, plus R0 findings for
+    malformed suppressions (unknown rule id / missing justification)."""
+    table: dict[int, Suppression] = {}
+    bad: list[tuple[int, str]] = []
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = _IGNORE_RE.search(text)
+        if m is None:
+            if _ATTEMPT_RE.search(text):
+                bad.append((lineno, "malformed suppression (expected "
+                                    "'reprolint: ignore[<rule>]: why' "
+                                    "after a comment marker)"))
+            continue
+        raw = [r.strip() for r in m.group("rules").split(",") if r.strip()]
+        rules = tuple(raw) if raw else ("*",)
+        unknown = [r for r in rules if r not in RULES and r != "*"]
+        if unknown:
+            bad.append((lineno, f"suppression names unknown rule(s) {unknown}"))
+            continue
+        why = (m.group("why") or "").strip()
+        if not why:
+            bad.append((lineno, "suppression without a justification — add "
+                                "': <why this is safe>'"))
+            continue
+        table[lineno] = Suppression(lineno, rules, why)
+    return table, bad
+
+
+def suppression_for(table: dict, finding: Finding) -> Suppression | None:
+    """A finding is suppressed by an ignore on its own line or the line
+    directly above (the conventional comment position)."""
+    for ln in (finding.line, finding.line - 1):
+        sup = table.get(ln)
+        if sup is not None and sup.covers(finding.rule):
+            return sup
+    return None
+
+
+def load_baseline(path) -> set:
+    with open(path) as f:
+        data = json.load(f)
+    return {tuple(entry) for entry in data.get("findings", [])}
+
+
+def write_baseline(path, findings) -> None:
+    data = {
+        "comment": "reprolint baseline: tolerated pre-existing findings "
+                   "(rule, path, context, message). Keep this empty; "
+                   "prefer inline 'reprolint: ignore[<rule>]: why' comments.",
+        "findings": sorted([list(f.key()) for f in findings]),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -1,0 +1,511 @@
+"""AST indexing shared by every reprolint rule.
+
+One parse of the analyzed file set produces:
+
+- **modules** — AST + source + import table (aliases resolved to dotted
+  module / symbol names, relative imports resolved against the module's
+  own dotted name),
+- **classes** — ``GUARDED_BY`` / ``GUARDED_READS`` annotations, the
+  lock attributes discovered from ``self._x = threading.Lock()`` /
+  ``make_lock(...)`` assignments (with reentrancy), ``@guarded_by``
+  method declarations, and ``self.<attr> → class`` type bindings
+  inferred from ``__init__`` (constructor calls and annotated
+  parameters),
+- **functions** — every ``def`` (nested ones included, under their
+  lexical scope path) with its resolved call and method-reference
+  edges,
+- **jit roots + reachability** — functions decorated with ``jax.jit``
+  (incl. ``partial(jax.jit, ...)``) or passed to ``jax.jit`` /
+  ``jax.vmap`` / the ``lax`` control-flow combinators, closed over the
+  call graph.  Reference edges (``self._dispatch_session`` passed as a
+  value) are followed too — a bound method handed to a dispatcher runs
+  just as surely as one called by name.
+
+Everything is best-effort and *lexical*: aliasing through containers or
+higher-order indirection is out of scope by design — the rules target
+the disciplined annotation conventions this repo actually uses, and a
+blind spot is a missed warning, never a false one.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+__all__ = ["RepoIndex", "ModuleInfo", "ClassInfo", "FunctionInfo", "LockInfo"]
+
+LOCK_FACTORIES = {"Lock": False, "RLock": True, "make_lock": False,
+                  "make_rlock": True}
+LAX_COMBINATORS = {"while_loop", "fori_loop", "scan", "cond", "switch",
+                   "map", "associative_scan", "custom_root"}
+JIT_WRAPPERS = {"jit", "vmap", "pmap"}
+
+
+def is_tracing_combinator(mod, chain) -> bool:
+    """``lax.while_loop``-family call heads.  Requires the ``lax``
+    qualification (or a bare name imported from ``jax.lax``) so that
+    unrelated ``.map`` attrs — ``jax.tree.map`` — don't collide."""
+    if not chain or chain[-1] not in LAX_COMBINATORS:
+        return False
+    if len(chain) >= 2:
+        return chain[-2] == "lax"
+    return mod.imports.get(chain[0], "").startswith("jax.lax")
+
+FuncId = tuple  # (modname, scope path tuple)
+
+
+@dataclasses.dataclass
+class LockInfo:
+    attr: str
+    reentrant: bool
+    line: int
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    fid: FuncId
+    node: ast.AST  # FunctionDef / AsyncFunctionDef
+    module: "ModuleInfo"
+    cls: "ClassInfo | None"  # set when this is a direct method of a class
+    guarded_lock: str | None = None  # @guarded_by("<lock>") declaration
+    jit_root: bool = False
+    calls: set = dataclasses.field(default_factory=set)  # resolved FuncIds
+    refs: set = dataclasses.field(default_factory=set)  # method refs passed as values
+    param_types: dict = dataclasses.field(default_factory=dict)  # name -> class FQN
+
+    @property
+    def name(self) -> str:
+        return self.fid[1][-1]
+
+    @property
+    def qualname(self) -> str:
+        return f"{self.fid[0]}.{'.'.join(self.fid[1])}"
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    module: "ModuleInfo"
+    node: ast.ClassDef
+    bases: list
+    guarded_by: dict = dataclasses.field(default_factory=dict)
+    guarded_reads: set = dataclasses.field(default_factory=set)
+    locks: dict = dataclasses.field(default_factory=dict)  # attr -> LockInfo
+    attr_types: dict = dataclasses.field(default_factory=dict)  # attr -> FQN
+    methods: dict = dataclasses.field(default_factory=dict)  # name -> FunctionInfo
+    fields: list = dataclasses.field(default_factory=list)  # annotated names
+
+    @property
+    def fqn(self) -> str:
+        return f"{self.module.modname}.{self.name}"
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: str  # analysis-relative posix path (what findings report)
+    modname: str
+    tree: ast.Module
+    source: str
+    imports: dict = dataclasses.field(default_factory=dict)  # alias -> dotted FQN
+    classes: dict = dataclasses.field(default_factory=dict)  # name -> ClassInfo
+    functions: dict = dataclasses.field(default_factory=dict)  # scope tuple -> FunctionInfo
+    parents: dict = dataclasses.field(default_factory=dict)  # node -> parent node
+
+
+def _module_name(relpath: Path) -> str:
+    parts = list(relpath.with_suffix("").parts)
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    if "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    return ".".join(p.replace("-", "_") for p in parts) or "module"
+
+
+def _resolve_relative(modname: str, level: int, module: str | None) -> str:
+    if level == 0:
+        return module or ""
+    base = modname.split(".")
+    base = base[: max(0, len(base) - level)]
+    if module:
+        base += module.split(".")
+    return ".".join(base)
+
+
+def attr_chain(node: ast.AST) -> list | None:
+    """``a.b.c`` → ["a", "b", "c"]; None for non-trivial bases."""
+    parts: list = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def is_self_attr(node: ast.AST, attr: str | None = None):
+    """The ``self.<attr>`` pattern; returns the attr name or None."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        if attr is None or node.attr == attr:
+            return node.attr
+    return None
+
+
+class RepoIndex:
+    def __init__(self, files, root: Path):
+        self.root = Path(root)
+        self.modules: dict[str, ModuleInfo] = {}
+        self.classes_by_fqn: dict[str, ClassInfo] = {}
+        self.functions: dict[FuncId, FunctionInfo] = {}
+        self.parse_errors: list = []  # (path, message)
+        for f in files:
+            self._index_file(Path(f))
+        self._second_pass()
+        self.jit_reachable = self._close_jit_reachability()
+
+    # ----------------------------------------------------------- first pass
+    def _index_file(self, path: Path) -> None:
+        try:
+            rel = path.resolve().relative_to(self.root.resolve())
+        except ValueError:
+            rel = Path(path.name)
+        source = path.read_text()
+        try:
+            tree = ast.parse(source, filename=str(path))
+        except SyntaxError as e:
+            self.parse_errors.append((rel.as_posix(), f"syntax error: {e}"))
+            return
+        mod = ModuleInfo(
+            path=rel.as_posix(), modname=_module_name(rel), tree=tree,
+            source=source,
+        )
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                mod.parents[child] = parent
+        self._index_imports(mod)
+        self._index_scopes(mod, tree, scope=(), cls=None)
+        self.modules[mod.modname] = mod
+        for c in mod.classes.values():
+            self.classes_by_fqn[c.fqn] = c
+
+    def _index_imports(self, mod: ModuleInfo) -> None:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mod.imports[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom):
+                base = _resolve_relative(mod.modname, node.level, node.module)
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    mod.imports[a.asname or a.name] = (
+                        f"{base}.{a.name}" if base else a.name
+                    )
+
+    def _index_scopes(self, mod, node, scope, cls) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                info = self._index_class(mod, child)
+                mod.classes[child.name] = info
+                self._index_scopes(mod, child, scope + (child.name,), info)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fid = (mod.modname, scope + (child.name,))
+                # cls is the lexically-enclosing class even for closures
+                # nested inside methods (their `self` is the method's);
+                # only direct methods register in cls.methods below.
+                fi = FunctionInfo(fid=fid, node=child, module=mod, cls=cls)
+                fi.guarded_lock = self._guarded_by_decorator(child)
+                fi.jit_root = self._is_jit_decorated(child)
+                fi.param_types = self._param_types(mod, child)
+                mod.functions[fid[1]] = fi
+                self.functions[fid] = fi
+                if cls is not None and isinstance(node, ast.ClassDef):
+                    cls.methods[child.name] = fi
+                self._index_scopes(mod, child, scope + (child.name,), cls)
+            else:
+                self._index_scopes(mod, child, scope, cls)
+
+    def _index_class(self, mod, node: ast.ClassDef) -> ClassInfo:
+        info = ClassInfo(
+            name=node.name, module=mod, node=node,
+            bases=[attr_chain(b) or [] for b in node.bases],
+        )
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                t = stmt.targets[0]
+                if isinstance(t, ast.Name) and t.id == "GUARDED_BY":
+                    info.guarded_by = self._const_dict(stmt.value)
+                elif isinstance(t, ast.Name) and t.id == "GUARDED_READS":
+                    info.guarded_reads = self._const_set(stmt.value)
+            elif isinstance(stmt, ast.AnnAssign) and isinstance(
+                stmt.target, ast.Name
+            ):
+                if stmt.target.id in ("GUARDED_BY", "GUARDED_READS"):
+                    continue
+                info.fields.append(stmt.target.id)
+        return info
+
+    @staticmethod
+    def _const_dict(node) -> dict:
+        out = {}
+        if isinstance(node, ast.Dict):
+            for k, v in zip(node.keys, node.values):
+                if isinstance(k, ast.Constant) and isinstance(v, ast.Constant):
+                    out[str(k.value)] = str(v.value)
+        return out
+
+    @staticmethod
+    def _const_set(node) -> set:
+        if isinstance(node, ast.Call) and node.args:  # frozenset({...})
+            node = node.args[0]
+        vals = getattr(node, "elts", [])
+        return {
+            str(e.value) for e in vals if isinstance(e, ast.Constant)
+        }
+
+    @staticmethod
+    def _guarded_by_decorator(node) -> str | None:
+        for dec in node.decorator_list:
+            if (
+                isinstance(dec, ast.Call)
+                and (attr_chain(dec.func) or [""])[-1] == "guarded_by"
+                and dec.args
+                and isinstance(dec.args[0], ast.Constant)
+            ):
+                return str(dec.args[0].value)
+        return None
+
+    @staticmethod
+    def _is_jit_decorated(node) -> bool:
+        for dec in node.decorator_list:
+            for sub in ast.walk(dec):
+                chain = attr_chain(sub)
+                if chain and chain[-1] in JIT_WRAPPERS:
+                    return True
+        return False
+
+    def _param_types(self, mod, node) -> dict:
+        out = {}
+        args = node.args
+        for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
+            if a.annotation is None:
+                continue
+            ann = a.annotation
+            if isinstance(ann, ast.Constant):  # string annotation
+                try:
+                    ann = ast.parse(str(ann.value), mode="eval").body
+                except SyntaxError:
+                    continue
+            chain = attr_chain(ann)
+            if chain:
+                fqn = self._class_fqn_for(mod, chain[-1])
+                if fqn:
+                    out[a.arg] = fqn
+        return out
+
+    def _class_fqn_for(self, mod: ModuleInfo, name: str) -> str | None:
+        if name in mod.classes:
+            return f"{mod.modname}.{name}"
+        target = mod.imports.get(name)
+        return target  # verified against classes_by_fqn at use time
+
+    # ---------------------------------------------------------- second pass
+    def _second_pass(self) -> None:
+        for mod in self.modules.values():
+            for cls in mod.classes.values():
+                self._infer_init_bindings(mod, cls)
+        for fi in self.functions.values():
+            self._index_calls(fi)
+
+    def _infer_init_bindings(self, mod, cls: ClassInfo) -> None:
+        init = cls.methods.get("__init__")
+        scan = [init.node] if init else [cls.node]
+        for top in scan:
+            for node in ast.walk(top):
+                if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                    continue
+                attr = is_self_attr(node.targets[0])
+                if attr is None:
+                    continue
+                val = node.value
+                if isinstance(val, ast.Call):
+                    chain = attr_chain(val.func) or [""]
+                    leaf = chain[-1]
+                    if leaf in LOCK_FACTORIES:
+                        cls.locks[attr] = LockInfo(
+                            attr, LOCK_FACTORIES[leaf], node.lineno
+                        )
+                        continue
+                    fqn = self._class_fqn_for(mod, leaf)
+                    if fqn and fqn in self.classes_by_fqn:
+                        cls.attr_types[attr] = fqn
+                elif isinstance(val, ast.Name) and init is not None:
+                    fqn = init.param_types.get(val.id)
+                    if fqn and fqn in self.classes_by_fqn:
+                        cls.attr_types[attr] = fqn
+
+    # ------------------------------------------------------ call resolution
+    def resolve_callable(self, fi: FunctionInfo, func) -> FuncId | None:
+        """Resolve a call/reference expression to an indexed function."""
+        mod = fi.module
+        if isinstance(func, ast.Name):
+            scope = fi.fid[1]
+            for i in range(len(scope), -1, -1):
+                cand = scope[:i] + (func.id,)
+                if cand in mod.functions:
+                    return (mod.modname, cand)
+            target = mod.imports.get(func.id)
+            if target:
+                return self._fqn_to_fid(target)
+            return None
+        if not isinstance(func, ast.Attribute):
+            return None
+        base, attr = func.value, func.attr
+        if isinstance(base, ast.Name) and base.id == "self" and fi.cls:
+            return self._method_fid(fi.cls, attr)
+        inner = is_self_attr(base)
+        if inner and fi.cls is not None:
+            fqn = fi.cls.attr_types.get(inner)
+            cls = self.classes_by_fqn.get(fqn or "")
+            if cls:
+                return self._method_fid(cls, attr)
+            return None
+        if isinstance(base, ast.Name):
+            fqn = fi.param_types.get(base.id)
+            cls = self.classes_by_fqn.get(fqn or "")
+            if cls:
+                return self._method_fid(cls, attr)
+            target = mod.imports.get(base.id)
+            if target:
+                return self._fqn_to_fid(f"{target}.{attr}")
+        return None
+
+    def _method_fid(self, cls: ClassInfo, name: str) -> FuncId | None:
+        fi = cls.methods.get(name)
+        return fi.fid if fi else None
+
+    def _fqn_to_fid(self, fqn: str) -> FuncId | None:
+        parts = fqn.split(".")
+        for split in range(len(parts) - 1, 0, -1):
+            modname = ".".join(parts[:split])
+            mod = self.modules.get(modname)
+            if mod is None:
+                continue
+            scope = tuple(parts[split:])
+            if scope in mod.functions:
+                return (modname, scope)
+            if len(scope) == 1 and scope[0] in mod.classes:
+                return self._method_fid(mod.classes[scope[0]], "__init__")
+        return None
+
+    def resolve_class(self, mod: ModuleInfo, name: str) -> ClassInfo | None:
+        fqn = self._class_fqn_for(mod, name)
+        return self.classes_by_fqn.get(fqn or "")
+
+    def _index_calls(self, fi: FunctionInfo) -> None:
+        for node in self._own_nodes(fi.node):
+            if isinstance(node, ast.Call):
+                target = self.resolve_callable(fi, node.func)
+                if target is not None:
+                    fi.calls.add(target)
+                self._mark_traced_callees(fi, node)
+            elif isinstance(node, ast.Attribute) and isinstance(
+                node.ctx, ast.Load
+            ):
+                if is_self_attr(node) and fi.cls is not None:
+                    parent = fi.module.parents.get(node)
+                    called = (
+                        isinstance(parent, ast.Call) and parent.func is node
+                    )
+                    if not called:
+                        target = self._method_fid(fi.cls, node.attr)
+                        if target is not None:
+                            fi.refs.add(target)
+            elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                parent = fi.module.parents.get(node)
+                if isinstance(parent, ast.Call) and parent.func is node:
+                    continue
+                scope = fi.fid[1]
+                for i in range(len(scope), -1, -1):
+                    cand = scope[:i] + (node.id,)
+                    if cand in fi.module.functions and cand != scope:
+                        fi.refs.add((fi.module.modname, cand))
+                        break
+
+    def _mark_traced_callees(self, fi: FunctionInfo, call: ast.Call) -> None:
+        """Functions handed to jit/vmap/lax combinators become jit roots."""
+        chain = attr_chain(call.func) or [""]
+        leaf = chain[-1]
+        if leaf in JIT_WRAPPERS:
+            cand = call.args[:1]
+        elif is_tracing_combinator(fi.module, chain):
+            cand = list(call.args)
+        elif leaf == "partial":
+            inner = [attr_chain(a) or [""] for a in call.args[:1]]
+            cand = call.args[1:2] if inner and inner[0][-1] in JIT_WRAPPERS else []
+        else:
+            return
+        for arg in cand:
+            if isinstance(arg, ast.Call):  # partial(body, ...) etc.
+                pchain = attr_chain(arg.func) or [""]
+                if pchain[-1] == "partial" and arg.args:
+                    arg = arg.args[0]
+            target = self.resolve_callable(fi, arg) if not isinstance(
+                arg, ast.Lambda
+            ) else None
+            if target is not None and target in self.functions:
+                self.functions[target].jit_root = True
+
+    @staticmethod
+    def _own_nodes(func_node):
+        """Walk a function body without descending into nested defs."""
+        stack = list(ast.iter_child_nodes(func_node))
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+
+    # --------------------------------------------------------- reachability
+    def _close_jit_reachability(self) -> set:
+        reachable = {
+            fid for fid, fi in self.functions.items() if fi.jit_root
+        }
+        frontier = list(reachable)
+        while frontier:
+            fi = self.functions.get(frontier.pop())
+            if fi is None:
+                continue
+            for nxt in fi.calls | fi.refs:
+                if nxt not in reachable and nxt in self.functions:
+                    reachable.add(nxt)
+                    frontier.append(nxt)
+        return reachable
+
+    # ------------------------------------------------------------- helpers
+    def enclosing_function(self, mod: ModuleInfo, node) -> FunctionInfo | None:
+        cur = node
+        while cur is not None:
+            cur = mod.parents.get(cur)
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for fi in mod.functions.values():
+                    if fi.node is cur:
+                        return fi
+        return None
+
+    def guard_path(self, mod: ModuleInfo, node):
+        """Ancestors of ``node`` up to (not crossing) the nearest enclosing
+        function definition — the lexical region a ``with`` guard spans."""
+        out = []
+        cur = mod.parents.get(node)
+        while cur is not None and not isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            out.append(cur)
+            cur = mod.parents.get(cur)
+        return out, cur  # (ancestors, enclosing function node or None)

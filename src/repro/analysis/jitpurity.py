@@ -1,0 +1,176 @@
+"""R2 — jit purity: no host side effects in traced code.
+
+A function is *jit-reachable* when it is decorated with ``jax.jit`` /
+``vmap`` (incl. via ``partial``), passed to ``jax.jit``/``jax.vmap`` or
+a ``lax`` control-flow combinator, or reachable from such a root over
+the call/reference graph.  Inside jit-reachable code these are flagged:
+
+- ``print(...)`` — traces once at compile time, silent afterwards;
+- ``np.<anything>(...)`` where ``np`` is a numpy import — a host op
+  that forces abstract tracers concrete (``TracerArrayConversionError``
+  at best, silently-baked constants at worst);
+- ``<expr>.item()`` / ``float(tracer)``-style host sync via ``.item``;
+- ``time.monotonic()`` & friends — wall clock evaluated at trace time;
+- ``<metric>.inc(...)`` / ``<metric>.observe(...)`` — metric writes
+  would count traces, not executions;
+- tracer spans/instants — **unless** the callee is self-guarding: a
+  resolved callee whose own body consults ``trace_state_clean`` (the
+  ``obs.trace.span`` pattern) is exempt, as is any call lexically under
+  an ``if ... trace_state_clean ...:`` check.
+
+Lambdas passed straight to ``vmap``/``lax`` combinators are scanned as
+part of their enclosing function; a banned call inside one is reported
+even when the enclosing function is itself unreachable by name.
+"""
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+from .index import RepoIndex, FunctionInfo, attr_chain
+
+__all__ = ["check_jit_purity"]
+
+_TIME_FUNCS = {"monotonic", "perf_counter", "time", "time_ns",
+               "process_time", "sleep"}
+# Scalar dtype constructors are trace-time constant construction
+# (np.uint32(0x1BD11BDA) in kernel code) — benign and ubiquitous; a
+# tracer passed to one fails loudly on its own, so exempting them
+# costs nothing.  Everything else np.* is a host op.
+_NP_SCALAR_CTORS = {
+    "bool_", "uint8", "uint16", "uint32", "uint64", "int8", "int16",
+    "int32", "int64", "float16", "float32", "float64", "complex64",
+    "complex128",
+}
+_METRIC_WRITES = {"inc", "observe"}
+_TRACER_EFFECTS = {"span", "instant", "maybe_block"}
+_GUARD_NAMES = ("trace_state_clean", "_trace_state_clean")
+
+
+def _is_numpy_alias(mod, name: str) -> bool:
+    fqn = mod.imports.get(name, "")
+    return fqn == "numpy" or fqn.startswith("numpy.")
+
+
+def _is_time_alias(mod, name: str) -> bool:
+    return mod.imports.get(name, "") == "time"
+
+
+def _self_guarding(index: RepoIndex, fid) -> bool:
+    """Callee body consults trace_state_clean itself (span/instant do)."""
+    fi = index.functions.get(fid)
+    if fi is None:
+        return False
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Name) and node.id in _GUARD_NAMES:
+            return True
+        if isinstance(node, ast.Attribute) and node.attr in _GUARD_NAMES:
+            return True
+    return False
+
+
+def _lexically_guarded(index: RepoIndex, fi: FunctionInfo, node) -> bool:
+    """``node`` sits under an ``if`` whose test mentions trace_state_clean."""
+    ancestors, fdef = index.guard_path(fi.module, node)
+    if fdef is not fi.node:
+        return False
+    for anc in ancestors:
+        if isinstance(anc, ast.If):
+            for sub in ast.walk(anc.test):
+                if isinstance(sub, ast.Name) and sub.id in _GUARD_NAMES:
+                    return True
+                if isinstance(sub, ast.Attribute) and sub.attr in _GUARD_NAMES:
+                    return True
+    return False
+
+
+def _classify_call(index: RepoIndex, fi: FunctionInfo, call: ast.Call):
+    """Return a finding message for a banned call, or None."""
+    func = call.func
+    mod = fi.module
+    if isinstance(func, ast.Name):
+        if func.id == "print":
+            return "print() in jit-reachable code runs at trace time only"
+        target = index.resolve_callable(fi, func)
+        if target is not None and target[1][-1] in _TRACER_EFFECTS:
+            if not _self_guarding(index, target):
+                return (f"tracer effect {func.id}() in jit-reachable code "
+                        "without a trace_state_clean guard")
+        return None
+    if not isinstance(func, ast.Attribute):
+        return None
+    attr = func.attr
+    if attr == "item" and not call.args:
+        return ".item() forces host sync and fails on abstract tracers"
+    chain = attr_chain(func)
+    if chain and len(chain) >= 2:
+        head = chain[0]
+        if _is_numpy_alias(mod, head) and not (
+            len(chain) == 2 and attr in _NP_SCALAR_CTORS
+        ):
+            dotted = ".".join(chain)
+            return (f"host numpy call {dotted}() in jit-reachable "
+                    "code; use jnp or hoist out of the traced region")
+        if _is_time_alias(mod, head) and attr in _TIME_FUNCS:
+            return (f"time.{attr}() in jit-reachable code is evaluated at "
+                    "trace time, not per call")
+    if attr in _METRIC_WRITES:
+        return (f".{attr}() metric write in jit-reachable code would count "
+                "traces, not executions")
+    if attr in _TRACER_EFFECTS:
+        target = index.resolve_callable(fi, func)
+        if target is not None and not _self_guarding(index, target):
+            return (f"tracer effect .{attr}() in jit-reachable code "
+                    "without a trace_state_clean guard")
+    return None
+
+
+def _scan_function(index: RepoIndex, fi: FunctionInfo, out: list) -> None:
+    for node in index._own_nodes(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        msg = _classify_call(index, fi, node)
+        if msg is None:
+            continue
+        if _lexically_guarded(index, fi, node):
+            continue
+        out.append(Finding(
+            rule="R2", path=fi.module.path, line=node.lineno,
+            context=fi.qualname, message=msg,
+        ))
+
+
+def _lambda_args_of_traced_calls(index: RepoIndex, fi: FunctionInfo):
+    """Lambdas passed inline to jit/vmap/lax combinators inside ``fi``."""
+    from .index import JIT_WRAPPERS, is_tracing_combinator
+    for node in index._own_nodes(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func) or [""]
+        if chain[-1] not in JIT_WRAPPERS and not is_tracing_combinator(
+            fi.module, chain
+        ):
+            continue
+        for arg in node.args:
+            if isinstance(arg, ast.Lambda):
+                yield arg
+
+
+def check_jit_purity(index: RepoIndex) -> list:
+    out: list = []
+    for fid in sorted(index.jit_reachable):
+        fi = index.functions.get(fid)
+        if fi is not None:
+            _scan_function(index, fi, out)
+    # Lambdas handed straight to tracing combinators, wherever they live.
+    for fi in index.functions.values():
+        for lam in _lambda_args_of_traced_calls(index, fi):
+            for node in ast.walk(lam.body):
+                if isinstance(node, ast.Call):
+                    msg = _classify_call(index, fi, node)
+                    if msg is not None:
+                        out.append(Finding(
+                            rule="R2", path=fi.module.path, line=node.lineno,
+                            context=f"{fi.qualname}.<lambda>", message=msg,
+                        ))
+    return out

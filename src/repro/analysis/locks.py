@@ -1,0 +1,372 @@
+"""R1 — lock discipline and the static lock-acquisition-order graph.
+
+Write discipline
+    Every write to an attribute named in a class's ``GUARDED_BY`` map
+    must sit lexically inside ``with self.<lock>:`` for the mapped
+    lock, or inside a method declared ``@guarded_by("<lock>")`` (the
+    declaration shifts the obligation to call sites: each resolved call
+    of such a method must itself be guarded).  Reads are checked too
+    for attrs listed in ``GUARDED_READS``.  ``__init__`` is exempt —
+    the object is not shared before construction completes.  A ``with``
+    guard never extends into a nested ``def``/``lambda``: a closure
+    outlives the critical section that created it.
+
+Lock-order graph
+    Nodes are ``Class.lockattr``.  An edge A → B is recorded when a
+    ``with`` on A lexically contains a ``with`` on B, or contains a
+    call (or method reference — bound methods handed to dispatchers run
+    too) whose transitive acquisition set includes B.  Acquisition sets
+    are a fixpoint over the call graph.  Self-edges are legal on
+    reentrant locks (RLock) and a deadlock finding on plain Locks;
+    cycles between distinct locks are findings, reported once with the
+    full cycle path.
+"""
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+from .index import RepoIndex, FunctionInfo, is_self_attr
+
+__all__ = ["check_locks", "build_lock_graph", "LockGraph"]
+
+
+def _lock_with_target(index: RepoIndex, fi: FunctionInfo, item):
+    """If ``with`` item acquires an indexed lock, return (Class, attr)."""
+    expr = item.context_expr
+    attr = is_self_attr(expr)
+    if attr is not None and fi.cls is not None and attr in fi.cls.locks:
+        return (fi.cls, attr)
+    # cross-object: with other._mu: / with self.cache._mu:
+    if isinstance(expr, ast.Attribute):
+        base = expr.value
+        inner = is_self_attr(base)
+        fqn = None
+        if inner and fi.cls is not None:
+            fqn = fi.cls.attr_types.get(inner)
+        elif isinstance(base, ast.Name):
+            fqn = fi.param_types.get(base.id)
+        cls = index.classes_by_fqn.get(fqn or "")
+        if cls is not None and expr.attr in cls.locks:
+            return (cls, expr.attr)
+    return None
+
+
+def _owning_class_for_method(index: RepoIndex, fid):
+    fi = index.functions.get(fid)
+    return fi.cls if fi else None
+
+
+def _enclosing_locks(index: RepoIndex, fi: FunctionInfo, node):
+    """Locks held lexically at ``node`` inside ``fi`` (own-class attrs),
+    as a set of lock attr names on ``fi.cls``."""
+    held = set()
+    ancestors, fdef = index.guard_path(fi.module, node)
+    if fdef is not fi.node:  # crossed into/out of a nested def: no guard
+        return held
+    for anc in ancestors:
+        if isinstance(anc, (ast.With, ast.AsyncWith)):
+            for item in anc.items:
+                tgt = _lock_with_target(index, fi, item)
+                if tgt is not None and tgt[0] is fi.cls:
+                    held.add(tgt[1])
+    return held
+
+
+def _function_for_node(index: RepoIndex, mod, node) -> FunctionInfo | None:
+    cur = node
+    while cur is not None:
+        for fi in mod.functions.values():
+            if fi.node is cur:
+                return fi
+        cur = mod.parents.get(cur)
+    return None
+
+
+# --------------------------------------------------------------------- R1 core
+def check_locks(index: RepoIndex) -> list:
+    findings = []
+    findings += _check_guarded_attrs(index)
+    findings += _check_guarded_by_callsites(index)
+    graph = build_lock_graph(index)
+    findings += graph.findings
+    return findings
+
+
+def _check_guarded_attrs(index: RepoIndex) -> list:
+    out = []
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            attr = is_self_attr(node)
+            if attr is None:
+                continue
+            is_write = isinstance(node.ctx, (ast.Store, ast.Del))
+            parent = mod.parents.get(node)
+            # self.stats["k"] += 1 / self.events.append(...) mutate through
+            # a Load of the container; treat subscript-store and known
+            # mutator calls as writes.
+            if not is_write and isinstance(parent, ast.Subscript):
+                gp_ctx = getattr(parent, "ctx", None)
+                is_write = isinstance(gp_ctx, (ast.Store, ast.Del))
+            if not is_write and isinstance(parent, ast.Attribute):
+                gp = mod.parents.get(parent)
+                if (
+                    isinstance(gp, ast.Call)
+                    and gp.func is parent
+                    and parent.attr in _MUTATORS
+                ):
+                    is_write = True
+            fi = _function_for_node(index, mod, node)
+            if fi is None or fi.cls is None:
+                continue
+            cls = fi.cls
+            lock = cls.guarded_by.get(attr)
+            if lock is None:
+                continue
+            if fi.name == "__init__":
+                continue
+            if not is_write and attr not in cls.guarded_reads:
+                continue
+            if fi.guarded_lock == lock:
+                continue  # caller-holds contract; call sites are checked
+            if lock in _enclosing_locks(index, fi, node):
+                continue
+            kind = "write to" if is_write else "read of"
+            out.append(Finding(
+                rule="R1", path=mod.path, line=node.lineno,
+                context=f"{cls.name}.{fi.name}",
+                message=(
+                    f"{kind} guarded attribute 'self.{attr}' outside "
+                    f"'with self.{lock}:' (declared in {cls.name}.GUARDED_BY)"
+                ),
+            ))
+    return out
+
+
+_MUTATORS = {
+    "append", "extend", "insert", "pop", "remove", "clear", "add",
+    "discard", "update", "popitem", "setdefault", "appendleft",
+    "popleft", "sort",
+}
+
+
+def _check_guarded_by_callsites(index: RepoIndex) -> list:
+    """Every resolved call of a ``@guarded_by(L)`` method must hold L."""
+    out = []
+    guarded = {
+        fid: fi for fid, fi in index.functions.items()
+        if fi.guarded_lock is not None and fi.cls is not None
+    }
+    if not guarded:
+        return out
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fi = _function_for_node(index, mod, node)
+            if fi is None:
+                continue
+            target = index.resolve_callable(fi, node.func)
+            tgt = guarded.get(target)
+            if tgt is None:
+                continue
+            lock = tgt.guarded_lock
+            if fi.name == "__init__" and fi.cls is tgt.cls:
+                continue
+            if fi.cls is tgt.cls and fi.guarded_lock == lock:
+                continue  # guarded helper calling a sibling helper
+            if fi.cls is tgt.cls and lock in _enclosing_locks(index, fi, node):
+                continue
+            if fi.cls is not tgt.cls:
+                # cross-class call: require a lexical with on the target
+                # object's lock (e.g. with self.cache._mu: self.cache._drop())
+                ancestors, fdef = index.guard_path(fi.module, node)
+                held_cross = False
+                if fdef is fi.node:
+                    for anc in ancestors:
+                        if isinstance(anc, (ast.With, ast.AsyncWith)):
+                            for item in anc.items:
+                                t = _lock_with_target(index, fi, item)
+                                if t is not None and t[0] is tgt.cls and t[1] == lock:
+                                    held_cross = True
+                if held_cross:
+                    continue
+            out.append(Finding(
+                rule="R1", path=mod.path, line=node.lineno,
+                context=f"{fi.cls.name + '.' if fi.cls else ''}{fi.name}",
+                message=(
+                    f"call of {tgt.cls.name}.{tgt.name}() requires "
+                    f"'{tgt.cls.name}.{lock}' held "
+                    f"(declared @guarded_by(\"{lock}\"))"
+                ),
+            ))
+    return out
+
+
+# --------------------------------------------------------------- lock ordering
+class LockGraph:
+    """Static acquisition-order graph.  ``edges[a][b]`` is a list of
+    human-readable witness sites for the ordered pair a → b."""
+
+    def __init__(self):
+        self.nodes: set = set()
+        self.reentrant: dict = {}
+        self.edges: dict = {}
+        self.findings: list = []
+
+    def add_edge(self, a: str, b: str, site: str) -> None:
+        self.nodes.update((a, b))
+        self.edges.setdefault(a, {}).setdefault(b, []).append(site)
+
+    def cycles(self) -> list:
+        """All elementary cycles found by DFS (deduplicated by node set)."""
+        found, seen_sets = [], []
+        def dfs(start, node, path, on_path):
+            for nxt in sorted(self.edges.get(node, ())):
+                if nxt == start and len(path) > 1:
+                    key = frozenset(path)
+                    if key not in seen_sets:
+                        seen_sets.append(key)
+                        found.append(path[:] + [start])
+                elif nxt not in on_path and nxt > start:
+                    on_path.add(nxt)
+                    dfs(start, nxt, path + [nxt], on_path)
+                    on_path.discard(nxt)
+        for start in sorted(self.nodes):
+            dfs(start, start, [start], {start})
+        return found
+
+    def render(self) -> str:
+        lines = ["lock-order graph (A -> B: A held while acquiring B):"]
+        for a in sorted(self.edges):
+            for b, sites in sorted(self.edges[a].items()):
+                lines.append(f"  {a} -> {b}   [{sites[0]}"
+                             + (f" +{len(sites) - 1} more]" if len(sites) > 1
+                                else "]"))
+        lonely = self.nodes - set(self.edges) - {
+            b for tgts in self.edges.values() for b in tgts
+        }
+        for n in sorted(lonely):
+            lines.append(f"  {n}   (leaf: never nested)")
+        return "\n".join(lines)
+
+
+def _acquisition_sets(index: RepoIndex):
+    """Fixpoint: locks a function may acquire, directly or transitively."""
+    direct: dict = {}
+    for fid, fi in index.functions.items():
+        acq = set()
+        for node in index._own_nodes(fi.node):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    tgt = _lock_with_target(index, fi, item)
+                    if tgt is not None:
+                        acq.add(f"{tgt[0].name}.{tgt[1]}")
+        if fi.guarded_lock is None and fi.cls is not None:
+            pass
+        direct[fid] = acq
+    closed = {fid: set(s) for fid, s in direct.items()}
+    changed = True
+    while changed:
+        changed = False
+        for fid, fi in index.functions.items():
+            acc = closed[fid]
+            before = len(acc)
+            for nxt in fi.calls | fi.refs:
+                acc |= closed.get(nxt, set())
+            if len(acc) != before:
+                changed = True
+    return direct, closed
+
+
+def build_lock_graph(index: RepoIndex) -> LockGraph:
+    graph = LockGraph()
+    for cls in index.classes_by_fqn.values():
+        for attr, li in cls.locks.items():
+            node = f"{cls.name}.{attr}"
+            graph.nodes.add(node)
+            graph.reentrant[node] = li.reentrant
+    _direct, closed = _acquisition_sets(index)
+
+    for fid, fi in index.functions.items():
+        for node in index._own_nodes(fi.node):
+            if not isinstance(node, (ast.With, ast.AsyncWith)):
+                continue
+            for item in node.items:
+                tgt = _lock_with_target(index, fi, item)
+                if tgt is None:
+                    continue
+                held = f"{tgt[0].name}.{tgt[1]}"
+                site = f"{fi.module.path}:{node.lineno} {fi.qualname}"
+                for inner in _body_acquisitions(index, fi, node):
+                    if inner == held:
+                        if not graph.reentrant.get(held, False):
+                            graph.findings.append(Finding(
+                                rule="R1", path=fi.module.path,
+                                line=node.lineno, context=fi.qualname,
+                                message=(
+                                    f"non-reentrant lock '{held}' may be "
+                                    "re-acquired while held (self-deadlock); "
+                                    "use make_rlock() or hoist the inner "
+                                    "acquisition"
+                                ),
+                            ))
+                        continue
+                    graph.add_edge(held, inner, site)
+
+    for cyc in graph.cycles():
+        pretty = " -> ".join(cyc)
+        graph.findings.append(Finding(
+            rule="R1", path=_cycle_witness(graph, cyc), line=1,
+            context="lock-order",
+            message=(
+                f"lock-acquisition-order cycle: {pretty}; threads taking "
+                "these locks in different orders can deadlock — pick one "
+                "global order"
+            ),
+        ))
+    return graph
+
+
+def _body_acquisitions(index: RepoIndex, fi: FunctionInfo, with_node):
+    """Locks acquired inside a ``with`` body: nested withs plus the
+    transitive acquisition sets of calls/references made in the body
+    (not crossing into nested function definitions)."""
+    _direct, closed = getattr(index, "_acq_cache", (None, None))
+    if closed is None:
+        index._acq_cache = _acquisition_sets(index)
+        _direct, closed = index._acq_cache
+    out = set()
+    stack = [n for item in [with_node.body] for n in item]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                tgt = _lock_with_target(index, fi, item)
+                if tgt is not None:
+                    out.add(f"{tgt[0].name}.{tgt[1]}")
+        if isinstance(node, ast.Call):
+            target = index.resolve_callable(fi, node.func)
+            if target is not None:
+                out |= closed.get(target, set())
+        if isinstance(node, ast.Attribute) and isinstance(node.ctx, ast.Load):
+            if is_self_attr(node) and fi.cls is not None:
+                parent = fi.module.parents.get(node)
+                if not (isinstance(parent, ast.Call) and parent.func is node):
+                    ref = index._method_fid(fi.cls, node.attr)
+                    if ref is not None:
+                        out |= closed.get(ref, set())
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def _cycle_witness(graph: LockGraph, cyc) -> str:
+    for a, b in zip(cyc, cyc[1:]):
+        sites = graph.edges.get(a, {}).get(b)
+        if sites:
+            return sites[0].split(":", 1)[0]
+    return "<graph>"

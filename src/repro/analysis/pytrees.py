@@ -1,0 +1,169 @@
+"""R4 — pytree completeness for dataclasses crossing the jit boundary.
+
+Three checks:
+
+1. **Registration** — a ``@dataclass`` constructed inside jit-reachable
+   code must be a registered pytree: decorated with
+   ``register_dataclass``, registered via a module-level
+   ``register_pytree_node(_class)`` call, or a ``NamedTuple`` (auto
+   pytree).  An unregistered dataclass silently becomes a leaf and jax
+   raises (or worse, constant-folds) on first trace.
+2. **Decorator order** — ``@register_dataclass`` must sit *above*
+   ``@dataclass`` in the decorator list: decorators apply bottom-up, so
+   the registration must receive the finished dataclass.  The reversed
+   order registers a plain class and the flatten silently sees no
+   fields.
+3. **Field coverage** — when registration names explicit
+   ``data_fields`` / ``meta_fields``, their union must cover every
+   annotated field of the class.  A field missing from both lists is
+   dropped by flatten/unflatten: it survives construction, then
+   vanishes on the first tree_map — the classic silent-state-loss bug.
+"""
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+from .index import RepoIndex, ClassInfo, attr_chain
+
+__all__ = ["check_pytrees"]
+
+_REGISTER_DECOS = {"register_dataclass", "register_pytree_node_class"}
+_REGISTER_CALLS = {"register_pytree_node", "register_pytree_with_keys"}
+
+
+def _deco_leaf(dec) -> str:
+    node = dec.func if isinstance(dec, ast.Call) else dec
+    chain = attr_chain(node)
+    return chain[-1] if chain else ""
+
+
+def _is_dataclass_deco(dec) -> bool:
+    return _deco_leaf(dec) == "dataclass"
+
+
+def _is_register_deco(dec) -> bool:
+    return _deco_leaf(dec) in _REGISTER_DECOS
+
+
+def _is_namedtuple(cls: ClassInfo) -> bool:
+    return any(chain and chain[-1] == "NamedTuple" for chain in cls.bases)
+
+
+def _module_registered_names(mod) -> set:
+    """Classes registered via register_pytree_node(Cls, ...) at module level."""
+    out = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func) or [""]
+        if chain[-1] in _REGISTER_CALLS and node.args:
+            first = node.args[0]
+            if isinstance(first, ast.Name):
+                out.add(first.id)
+    return out
+
+
+def _registration(cls: ClassInfo):
+    """('deco', idx_register, idx_dataclass, deco_node) | 'call' | 'namedtuple'
+    | None."""
+    idx_reg = idx_dc = None
+    reg_node = None
+    for i, dec in enumerate(cls.node.decorator_list):
+        if _is_register_deco(dec) and idx_reg is None:
+            idx_reg, reg_node = i, dec
+        if _is_dataclass_deco(dec) and idx_dc is None:
+            idx_dc = i
+    if idx_reg is not None:
+        return ("deco", idx_reg, idx_dc, reg_node)
+    if _is_namedtuple(cls):
+        return ("namedtuple", None, None, None)
+    if cls.name in _module_registered_names(cls.module):
+        return ("call", None, None, None)
+    return None
+
+
+def _explicit_fields(reg_node) -> tuple | None:
+    """(data_fields, meta_fields) from register_dataclass kwargs, if given."""
+    if not isinstance(reg_node, ast.Call):
+        return None
+    got = {}
+    for kw in reg_node.keywords:
+        if kw.arg in ("data_fields", "meta_fields"):
+            vals = getattr(kw.value, "elts", None)
+            if vals is None:
+                return None  # computed — can't check statically
+            got[kw.arg] = [
+                str(e.value) for e in vals if isinstance(e, ast.Constant)
+            ]
+    if not got:
+        return None
+    return (got.get("data_fields", []), got.get("meta_fields", []))
+
+
+def _is_dataclass(cls: ClassInfo) -> bool:
+    return any(_is_dataclass_deco(d) for d in cls.node.decorator_list)
+
+
+def check_pytrees(index: RepoIndex) -> list:
+    out: list = []
+
+    # Checks 2 & 3 run for every registered dataclass, reachable or not —
+    # a broken registration is broken wherever it is first traced.
+    for cls in index.classes_by_fqn.values():
+        reg = _registration(cls)
+        if reg is None or reg[0] != "deco":
+            continue
+        _, idx_reg, idx_dc, reg_node = reg
+        if idx_dc is not None and idx_reg > idx_dc:
+            out.append(Finding(
+                rule="R4", path=cls.module.path, line=cls.node.lineno,
+                context=cls.name,
+                message=(
+                    "@register_dataclass must be listed ABOVE @dataclass "
+                    "(decorators apply bottom-up; this order registers the "
+                    "bare class and flatten sees no fields)"
+                ),
+            ))
+        explicit = _explicit_fields(reg_node)
+        if explicit is not None and cls.fields:
+            covered = set(explicit[0]) | set(explicit[1])
+            missing = [f for f in cls.fields if f not in covered]
+            if missing:
+                out.append(Finding(
+                    rule="R4", path=cls.module.path, line=cls.node.lineno,
+                    context=cls.name,
+                    message=(
+                        f"pytree registration drops field(s) {missing}: not "
+                        "in data_fields or meta_fields — they vanish on the "
+                        "first tree_map/unflatten"
+                    ),
+                ))
+
+    # Check 1: unregistered dataclasses constructed in jit-reachable code.
+    for fid in sorted(index.jit_reachable):
+        fi = index.functions.get(fid)
+        if fi is None:
+            continue
+        for node in index._own_nodes(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = attr_chain(node.func)
+            if not chain:
+                continue
+            cls = index.resolve_class(fi.module, chain[-1])
+            if cls is None or not _is_dataclass(cls):
+                continue
+            if _registration(cls) is not None:
+                continue
+            out.append(Finding(
+                rule="R4", path=fi.module.path, line=node.lineno,
+                context=fi.qualname,
+                message=(
+                    f"dataclass {cls.name} constructed in jit-reachable code "
+                    "but is not a registered pytree "
+                    "(@jax.tree_util.register_dataclass above @dataclass, or "
+                    "register_pytree_node)"
+                ),
+            ))
+    return out

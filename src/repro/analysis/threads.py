@@ -1,0 +1,141 @@
+"""R3 — thread lifecycle: no silently leaked threads.
+
+Every ``threading.Thread(...)`` construction must either:
+
+- pass ``daemon=True`` at the constructor (or set ``<binding>.daemon =
+  True`` before ``start()``), so the interpreter can exit without the
+  thread pinning the process, or
+- be *provably joined*: the construction's binding target (``self._t =
+  Thread(...)`` or ``t = Thread(...)``) has a ``.join(...)`` call on
+  the same name somewhere in the owning class (any method — ``close()``
+  / ``stop()`` teardown paths) or, for a local, in the same function.
+
+This is lexical, not flow-sensitive: a ``join`` on an error-free path
+only is accepted.  The rule targets the PR 8 bug class — workers
+constructed non-daemon and forgotten — not exhaustive escape analysis.
+"""
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+from .index import RepoIndex, attr_chain, is_self_attr
+
+__all__ = ["check_threads"]
+
+
+def _is_thread_ctor(mod, call: ast.Call) -> bool:
+    chain = attr_chain(call.func)
+    if not chain:
+        return False
+    if chain[-1] != "Thread":
+        return False
+    if len(chain) == 1:  # bare Thread — only if imported from threading
+        return mod.imports.get("Thread", "").startswith("threading")
+    base = mod.imports.get(chain[0], chain[0])
+    return base == "threading" or base.startswith("threading.")
+
+
+def _daemon_kwarg_true(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "daemon":
+            return isinstance(kw.value, ast.Constant) and kw.value.value is True
+    return False
+
+
+def _binding_target(mod, call: ast.Call):
+    """('self', attr) / ('local', name) binding of the constructed thread."""
+    parent = mod.parents.get(call)
+    if isinstance(parent, ast.Assign) and len(parent.targets) == 1:
+        t = parent.targets[0]
+        a = is_self_attr(t)
+        if a is not None:
+            return ("self", a)
+        if isinstance(t, ast.Name):
+            return ("local", t.id)
+    if isinstance(parent, ast.AnnAssign):
+        a = is_self_attr(parent.target)
+        if a is not None:
+            return ("self", a)
+        if isinstance(parent.target, ast.Name):
+            return ("local", parent.target.id)
+    return None
+
+
+def _name_has_call(scope_node, kind, name, method) -> bool:
+    """Is there a ``<binding>.<method>(...)`` call under ``scope_node``?"""
+    for node in ast.walk(scope_node):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not (isinstance(f, ast.Attribute) and f.attr == method):
+            continue
+        if kind == "self" and is_self_attr(f.value, name):
+            return True
+        if kind == "local" and isinstance(f.value, ast.Name) and f.value.id == name:
+            return True
+    return False
+
+
+def _daemon_set_later(scope_node, kind, name) -> bool:
+    """``<binding>.daemon = True`` anywhere in scope."""
+    for node in ast.walk(scope_node):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not (isinstance(node.value, ast.Constant) and node.value.value is True):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Attribute) and t.attr == "daemon":
+                if kind == "self" and is_self_attr(t.value, name):
+                    return True
+                if (kind == "local" and isinstance(t.value, ast.Name)
+                        and t.value.id == name):
+                    return True
+    return False
+
+
+def check_threads(index: RepoIndex) -> list:
+    out = []
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or not _is_thread_ctor(mod, node):
+                continue
+            if _daemon_kwarg_true(node):
+                continue
+            binding = _binding_target(mod, node)
+            fi = None
+            for cand in mod.functions.values():
+                for sub in ast.walk(cand.node):
+                    if sub is node:
+                        fi = cand if fi is None or _contains(fi.node, cand.node) \
+                            else fi
+            context = fi.qualname if fi else mod.modname
+            if binding is not None:
+                kind, name = binding
+                if kind == "self" and fi is not None and fi.cls is not None:
+                    scope = fi.cls.node
+                else:
+                    scope = fi.node if fi is not None else mod.tree
+                if _daemon_set_later(scope, kind, name):
+                    continue
+                if _name_has_call(scope, kind, name, "join"):
+                    continue
+                where = (f"self.{name}" if kind == "self" else name)
+                msg = (
+                    f"Thread bound to '{where}' is neither daemon=True nor "
+                    f"joined anywhere in its owning "
+                    f"{'class' if kind == 'self' and fi and fi.cls else 'scope'}"
+                    " — a leaked non-daemon thread pins the process at exit"
+                )
+            else:
+                msg = ("unbound threading.Thread(...) without daemon=True "
+                       "can never be joined — assign it or daemonize it")
+            out.append(Finding(
+                rule="R3", path=mod.path, line=node.lineno,
+                context=context, message=msg,
+            ))
+    return out
+
+
+def _contains(outer, inner) -> bool:
+    return any(n is inner for n in ast.walk(outer))

@@ -53,6 +53,7 @@ import time
 import jax.numpy as jnp
 
 from ..obs import trace as obs_trace
+from ..obs.lockcheck import make_lock
 from ..obs.metrics import REGISTRY
 from ..streaming.accumulate import make_accumulator, merge_all
 from ..streaming.sources import RowSource, as_source
@@ -190,6 +191,17 @@ class ClusterEngine(RowSource):
     ``matvec`` / ``rmatvec`` / ``residual_grad`` methods by probing.
     """
 
+    # Checked by reprolint R1.  Worker threads and the coordinator both
+    # write these; everything else (_workers, _dead, _next_id,
+    # _pass_recoveries, _closed) is coordinator-thread-private by
+    # construction and deliberately unlisted.
+    GUARDED_BY = {
+        "stats": "_lock",
+        "_tile_counts": "_lock",
+        "_submissions": "_lock",
+        "_sketch_seq": "_lock",
+    }
+
     def __init__(self, source, spec: ClusterSpec | None = None, *,
                  backend: str = "auto", counters: dict | None = None):
         self.source = as_source(source)
@@ -211,8 +223,8 @@ class ClusterEngine(RowSource):
         }
         self._dead: set[int] = set()
         self._next_id = self.spec.num_workers
-        self._lock = threading.Lock()  # tile counters + submissions
-        self._ckpt_lock = threading.Lock()  # serialize checkpoint writes
+        self._lock = make_lock("ClusterEngine._lock")  # counters + submissions
+        self._ckpt_lock = make_lock("ClusterEngine._ckpt_lock")  # ckpt writes
         self._tile_counts: dict[tuple[int, str], int] = {}
         self._submissions: list = []
         self._sketch_seq = 0  # guards against zombie submissions from a
@@ -301,7 +313,8 @@ class ClusterEngine(RowSource):
                  pending: dict):
         """Declare ``victim`` dead and reassign its unfinished ranges."""
         obs_trace.instant("cluster.recover", victim=victim)
-        self.stats["recoveries"] += 1
+        with self._lock:
+            self.stats["recoveries"] += 1
         self._pass_recoveries += 1
         if self._pass_recoveries > self.spec.max_recoveries:
             raise ClusterFailure(
@@ -319,7 +332,8 @@ class ClusterEngine(RowSource):
             self._next_id += 1
             self._workers[nid] = _Worker(nid)
             obs_trace.instant("cluster.respawn", worker=nid)
-            self.stats["respawns"] += 1
+            with self._lock:
+                self.stats["respawns"] += 1
             live = [nid]
             ownership.assignments.setdefault(nid, [])
         moves = ownership.reassign(victim, live)
@@ -327,7 +341,8 @@ class ClusterEngine(RowSource):
             obs_trace.instant(
                 "cluster.reassign", range=(rng.start, rng.stop), to=tgt
             )
-            self.stats["reassignments"] += 1
+            with self._lock:
+                self.stats["reassignments"] += 1
             task = _Task(rng, make_fn(rng), epoch=pending[rng].epoch + 1)
             pending[rng] = task
             self._workers[tgt].submit(task)
@@ -391,7 +406,8 @@ class ClusterEngine(RowSource):
                                 "cluster.eviction", worker=owner,
                                 stale_s=time.monotonic() - alive_ref,
                             )
-                            self.stats["heartbeat_evictions"] += 1
+                            with self._lock:
+                                self.stats["heartbeat_evictions"] += 1
                         self._recover(ownership, owner, make_fn, pending)
                         progressed = True
             if not progressed:
@@ -503,7 +519,8 @@ class ClusterEngine(RowSource):
                 submissions = list(self._submissions)
             for rng, acc, _wid in submissions:
                 if rng in chosen:
-                    self.stats["duplicates_dropped"] += 1
+                    with self._lock:
+                        self.stats["duplicates_dropped"] += 1
                     continue
                 chosen[rng] = acc
             covered = 0

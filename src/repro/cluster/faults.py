@@ -27,8 +27,9 @@ across resumes (a replacement worker gets a fresh count).
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
+
+from ..obs.lockcheck import make_lock
 
 __all__ = [
     "WorkerKilled",
@@ -67,10 +68,15 @@ class DuplicateMerge:
 class FaultPlan:
     """An immutable event list with fire-once trigger bookkeeping."""
 
+    # Checked by reprolint R1: ``fired`` is the check-then-append state
+    # whose unguarded version was the PR 8 double-fire race.
+    GUARDED_BY = {"fired": "_lock"}
+    GUARDED_READS = frozenset({"fired"})
+
     def __init__(self, *events):
         self.events = tuple(events)
         self.fired: list = []
-        self._lock = threading.Lock()  # every worker thread calls _take
+        self._lock = make_lock("FaultPlan._lock")  # every worker calls _take
 
     def __repr__(self):
         return f"FaultPlan({', '.join(map(repr, self.events))})"

@@ -14,6 +14,12 @@ One substrate, three layers:
 - :mod:`repro.obs.export` — Prometheus text exposition, JSON snapshots
   and an optional ``jax.profiler`` hook.
 """
+from .lockcheck import (
+    LockOrderError,
+    make_lock,
+    make_rlock,
+    lockcheck_enabled,
+)
 from .metrics import REGISTRY, MetricsRegistry, DEFAULT_BUCKETS
 from .trace import (
     Timeline,
@@ -29,6 +35,10 @@ from .trace import (
 from .export import json_snapshot, prometheus_text, save_chrome_trace, jax_profile
 
 __all__ = [
+    "LockOrderError",
+    "make_lock",
+    "make_rlock",
+    "lockcheck_enabled",
     "REGISTRY",
     "MetricsRegistry",
     "DEFAULT_BUCKETS",

@@ -24,7 +24,8 @@ cumulative-bucket convention by :mod:`repro.obs.export`.
 from __future__ import annotations
 
 import os
-import threading
+
+from .lockcheck import make_lock
 
 __all__ = [
     "Counter",
@@ -46,10 +47,11 @@ class Counter:
     """Monotone counter.  ``inc`` only; negative increments are rejected."""
 
     __slots__ = ("name", "_mu", "_value")
+    GUARDED_BY = {"_value": "_mu"}
 
     def __init__(self, name: str):
         self.name = name
-        self._mu = threading.Lock()
+        self._mu = make_lock("Counter._mu")
         self._value = 0
 
     def inc(self, n: int | float = 1) -> None:
@@ -68,10 +70,11 @@ class Gauge:
     """Point-in-time value: ``set`` or ``inc`` (either sign)."""
 
     __slots__ = ("name", "_mu", "_value")
+    GUARDED_BY = {"_value": "_mu"}
 
     def __init__(self, name: str):
         self.name = name
-        self._mu = threading.Lock()
+        self._mu = make_lock("Gauge._mu")
         self._value = 0
 
     def set(self, v) -> None:
@@ -97,11 +100,12 @@ class Histogram:
     """
 
     __slots__ = ("name", "buckets", "_mu", "_counts", "_sum", "_count")
+    GUARDED_BY = {"_counts": "_mu", "_sum": "_mu", "_count": "_mu"}
 
     def __init__(self, name: str, buckets=DEFAULT_BUCKETS):
         self.name = name
         self.buckets = tuple(sorted(float(b) for b in buckets))
-        self._mu = threading.Lock()
+        self._mu = make_lock("Histogram._mu")
         self._counts = [0] * (len(self.buckets) + 1)
         self._sum = 0.0
         self._count = 0
@@ -195,11 +199,21 @@ class MetricsRegistry:
     hands out a shared null instrument and records nothing.
     """
 
+    # The name tables are created once here and only ever mutated under
+    # _mu — note the one deliberate blind spot: _get() writes through its
+    # `table` alias, which a lexical checker cannot tie back to these
+    # attrs.  The alias write is inside `with self._mu:` all the same.
+    GUARDED_BY = {
+        "_counters": "_mu",
+        "_gauges": "_mu",
+        "_histograms": "_mu",
+    }
+
     def __init__(self, enabled: bool | None = None):
         if enabled is None:
             enabled = os.environ.get("REPRO_METRICS", "1") != "0"
         self.enabled = bool(enabled)
-        self._mu = threading.Lock()
+        self._mu = make_lock("MetricsRegistry._mu")
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}

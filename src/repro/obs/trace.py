@@ -36,6 +36,8 @@ import time
 
 import jax
 
+from .lockcheck import make_lock
+
 try:  # suppress spans during jit tracing (abstract, zero-work "execution")
     from jax.core import trace_state_clean as _trace_state_clean
 except ImportError:  # pragma: no cover - older/newer jax layouts
@@ -71,23 +73,35 @@ def _depth() -> int:
 class Tracer:
     """Event sink: an append-only list of Chrome-trace event dicts.
 
-    ``list.append`` is atomic under the GIL, so worker threads record
-    without a lock; the tid table (thread ident → small sequential id +
-    thread-name metadata event) is the only guarded state.
+    All event appends and snapshot reads go through ``self._mu``.  The
+    old scheme relied on CPython's GIL making ``list.append`` atomic —
+    true, but a reader iterating ``events`` concurrently with an append
+    could still observe a resize mid-copy, and the GIL contract is
+    explicitly not portable (free-threaded builds).  One short lock per
+    recorded event is noise next to the ``perf_counter`` calls either
+    side of it.
     """
+
+    GUARDED_BY = {"events": "_mu", "_tids": "_mu"}
+    GUARDED_READS = frozenset({"events"})
 
     def __init__(self):
         self.t0 = time.perf_counter()
         self.events: list[dict] = []
-        self._mu = threading.Lock()
+        self._mu = make_lock("Tracer._mu")
         self._tids: dict[int, int] = {}
 
     def now_us(self) -> float:
         return (time.perf_counter() - self.t0) * 1e6
 
+    def record(self, ev: dict) -> None:
+        """Append one Chrome-trace event dict (thread-safe)."""
+        with self._mu:
+            self.events.append(ev)
+
     def tid(self) -> int:
         ident = threading.get_ident()
-        t = self._tids.get(ident)
+        t = self._tids.get(ident)  # racy fast path, settled under _mu below
         if t is None:
             with self._mu:
                 t = self._tids.get(ident)
@@ -101,14 +115,17 @@ class Tracer:
         return t
 
     def chrome_trace(self) -> dict:
-        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+        with self._mu:
+            events = list(self.events)
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump(self.chrome_trace(), f)
 
     def timeline(self, start: int = 0) -> "Timeline":
-        return Timeline(list(self.events[start:]))
+        with self._mu:
+            return Timeline(list(self.events[start:]))
 
 
 class Timeline:
@@ -216,7 +233,7 @@ class _Span:
     def __exit__(self, *exc):
         t1 = self._tracer.now_us()
         _tls.depth = self._depth
-        self._tracer.events.append({
+        self._tracer.record({
             "name": self._name, "cat": "repro", "ph": "X",
             "ts": self._t0, "dur": t1 - self._t0,
             "pid": 1, "tid": self._tracer.tid(),
@@ -238,7 +255,7 @@ def instant(name: str, **args) -> None:
     t = _active
     if t is None or not _trace_state_clean():
         return
-    t.events.append({
+    t.record({
         "name": name, "cat": "repro", "ph": "i", "s": "t",
         "ts": t.now_us(), "pid": 1, "tid": t.tid(),
         "depth": _depth(), "args": args,
@@ -249,10 +266,11 @@ def maybe_block(x):
     """Synchronize JAX async dispatch — only while tracing.
 
     Keeps span durations honest (device work attributed to the span that
-    launched it) without perturbing the untraced pipeline.  Tolerates
-    abstract tracers and non-array pytrees.
+    launched it) without perturbing the untraced pipeline.  Skipped
+    outright under jit tracing (abstract values can't be blocked on);
+    tolerates non-array pytrees.
     """
-    if _active is not None:
+    if _active is not None and _trace_state_clean():
         try:
             jax.block_until_ready(x)
         except Exception:

@@ -42,6 +42,8 @@ from typing import Any, Hashable
 import jax
 import jax.numpy as jnp
 
+from ..obs.lockcheck import make_lock
+
 __all__ = [
     "MicroBatcher",
     "bucket_shape",
@@ -68,29 +70,40 @@ class MicroBatcher:
     ``max_delay_s`` (latency-triggered — the knob bounding the queueing
     delay a lone request can suffer).  ``drain=True`` releases everything
     regardless of age, the flush path.
+
+    Thread-safe on its own lock: the service pump, racing submitters and
+    a stats() poll can all touch one batcher without relying on the
+    caller's locking (the service still serializes pops for dispatch
+    consistency, but the batcher's counters can't be torn either way).
     """
+
+    GUARDED_BY = {"_queues": "_mu", "batch_sizes": "_mu", "enqueued": "_mu"}
+    GUARDED_READS = frozenset({"_queues"})
 
     def __init__(self, max_batch: int = 64, max_delay_s: float = 0.002):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_s)
+        self._mu = make_lock("MicroBatcher._mu")
         self._queues: "OrderedDict[Hashable, _Queue]" = OrderedDict()
         self.batch_sizes: list[int] = []  # every released batch's occupancy
         self.enqueued = 0
 
     def add(self, key: Hashable, item: Any, now: float | None = None) -> None:
         now = time.monotonic() if now is None else now
-        q = self._queues.get(key)
-        if q is None:
-            self._queues[key] = _Queue(items=[item], oldest=now)
-        else:
-            q.items.append(item)
-        self.enqueued += 1
+        with self._mu:
+            q = self._queues.get(key)
+            if q is None:
+                self._queues[key] = _Queue(items=[item], oldest=now)
+            else:
+                q.items.append(item)
+            self.enqueued += 1
 
     @property
     def pending(self) -> int:
-        return sum(len(q.items) for q in self._queues.values())
+        with self._mu:
+            return sum(len(q.items) for q in self._queues.values())
 
     def ready(
         self, now: float | None = None, *, drain: bool = False
@@ -98,27 +111,31 @@ class MicroBatcher:
         """Pop and return every batch the release rule fires for."""
         now = time.monotonic() if now is None else now
         out: list[tuple[Hashable, list]] = []
-        for key in list(self._queues):
-            q = self._queues[key]
-            while len(q.items) >= self.max_batch:
-                out.append((key, q.items[: self.max_batch]))
-                q.items = q.items[self.max_batch:]
-                q.oldest = now
-            if q.items and (drain or (now - q.oldest) >= self.max_delay_s):
-                out.append((key, q.items))
-                q.items = []
-            if not q.items:
-                del self._queues[key]
-        for _, items in out:
-            self.batch_sizes.append(len(items))
+        with self._mu:
+            for key in list(self._queues):
+                q = self._queues[key]
+                while len(q.items) >= self.max_batch:
+                    out.append((key, q.items[: self.max_batch]))
+                    q.items = q.items[self.max_batch:]
+                    q.oldest = now
+                if q.items and (drain or (now - q.oldest) >= self.max_delay_s):
+                    out.append((key, q.items))
+                    q.items = []
+                if not q.items:
+                    del self._queues[key]
+            for _, items in out:
+                self.batch_sizes.append(len(items))
         return out
 
     @property
     def mean_occupancy(self) -> float:
         """Mean released-batch size / max_batch ∈ (0, 1]."""
-        if not self.batch_sizes:
-            return 0.0
-        return sum(self.batch_sizes) / (len(self.batch_sizes) * self.max_batch)
+        with self._mu:
+            if not self.batch_sizes:
+                return 0.0
+            return sum(self.batch_sizes) / (
+                len(self.batch_sizes) * self.max_batch
+            )
 
 
 # ---------------------------------------------------------------------------

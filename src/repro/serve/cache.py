@@ -30,15 +30,16 @@ Policy and accounting:
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 from collections import OrderedDict
 from typing import Callable
 
 import jax
 
+from ..analysis.annotations import guarded_by
 from ..core.session import SketchedSolver
 from ..obs import trace as obs_trace
+from ..obs.lockcheck import make_rlock
 from ..obs.metrics import REGISTRY
 from .fingerprint import Fingerprint, fingerprint
 
@@ -72,10 +73,19 @@ class FactorCache:
     build of the same fingerprint is resolved first-put-wins.
     """
 
+    GUARDED_BY = {
+        "_entries": "_mu",
+        "bytes": "_mu",
+        "hits": "_mu",
+        "misses": "_mu",
+        "evictions": "_mu",
+    }
+    GUARDED_READS = frozenset({"_entries"})
+
     def __init__(self, max_bytes: int = 256 * 1024 * 1024):
         self.max_bytes = int(max_bytes)
         self._entries: "OrderedDict[Fingerprint, CacheEntry]" = OrderedDict()
-        self._mu = threading.RLock()
+        self._mu = make_rlock("FactorCache._mu")
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -87,6 +97,7 @@ class FactorCache:
         self._m_entries = REGISTRY.gauge("cache.entries")
         self._m_build_s = REGISTRY.histogram("cache.build_s")
 
+    @guarded_by("_mu")
     def _sync_gauges(self) -> None:
         self._m_bytes.set(self.bytes)
         self._m_entries.set(len(self._entries))
@@ -157,6 +168,7 @@ class FactorCache:
             self._sync_gauges()
             return entry
 
+    @guarded_by("_mu")
     def _drop(self, fp: Fingerprint) -> CacheEntry | None:
         entry = self._entries.pop(fp, None)
         if entry is not None:
@@ -183,6 +195,7 @@ class FactorCache:
             self.bytes = 0
             self._sync_gauges()
 
+    @guarded_by("_mu")
     def _evict_to_budget(self, keep: Fingerprint) -> None:
         # Evict LRU-first until under budget; the just-touched entry is
         # exempt so one oversized tenant degrades to cache-of-one rather

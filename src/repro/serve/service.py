@@ -57,6 +57,7 @@ from ..core.precond import default_sketch_size
 from ..core.result import SolveResult
 from ..core.session import SketchedSolver
 from ..obs import trace as obs_trace
+from ..obs.lockcheck import make_rlock
 from ..obs.metrics import REGISTRY
 from .batching import (
     MicroBatcher,
@@ -149,6 +150,15 @@ class SolveService:
     small_problem_flops : m·n² below which requests take the bucket path.
     """
 
+    # Checked by reprolint R1: these attrs may only be written under
+    # ``with self._lock:``.  The dispatch-side state (cache, sessions'
+    # internals) is guarded by the objects' own locks, not listed here.
+    GUARDED_BY = {
+        "counters": "_lock",
+        "_session_counter": "_lock",
+        "_bucket_keys": "_lock",
+    }
+
     def __init__(
         self,
         key: jax.Array,
@@ -189,8 +199,8 @@ class SolveService:
         # and the XLA compile ladder stay single-threaded.  submit()
         # never touches _dispatch_lock — clients keep enqueueing while a
         # batch computes.
-        self._lock = threading.RLock()
-        self._dispatch_lock = threading.RLock()
+        self._lock = make_rlock("SolveService._lock")
+        self._dispatch_lock = make_rlock("SolveService._dispatch_lock")
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
 

@@ -1,0 +1,19 @@
+"""R1 lock-order cycle: two paths take the same two locks in opposite
+orders — the canonical ABBA deadlock, visible statically."""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                return 1
+
+    def backward(self):
+        with self._b:
+            with self._a:  # FINDING: inverts forward()'s order
+                return 2

@@ -1,0 +1,27 @@
+"""R1 true positives: unguarded writes to GUARDED_BY attributes."""
+import threading
+
+
+class Engine:
+    GUARDED_BY = {"stats": "_lock", "jobs": "_lock"}
+    GUARDED_READS = frozenset({"jobs"})
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.stats = {"tiles": 0}
+        self.jobs: list = []
+
+    def bump_unlocked(self):
+        self.stats["tiles"] += 1  # FINDING: write outside the lock
+
+    def append_unlocked(self):
+        self.jobs.append("x")  # FINDING: mutator call outside the lock
+
+    def read_unlocked(self):
+        return len(self.jobs)  # FINDING: guarded READ outside the lock
+
+    def closure_escape(self):
+        with self._lock:
+            def later():
+                self.stats["tiles"] += 1  # FINDING: closure outlives guard
+            return later

@@ -1,0 +1,24 @@
+"""R2 true positives: host side effects in jit-reachable code."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def leaky_norm(x):
+    print("solving", x.shape)  # FINDING: print under jit
+    h = np.linalg.norm(x)  # FINDING: host numpy op under jit
+    return jnp.asarray(h)
+
+
+@jax.jit
+def solve(x):
+    return leaky_norm(x) + x.sum()
+
+
+def loop(x):
+    def body(v):
+        s = v.sum().item()  # FINDING: .item() host sync in while_loop body
+        return v * s
+
+    return lax.while_loop(lambda v: v.sum() > 0, body, x)

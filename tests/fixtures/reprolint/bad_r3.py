@@ -1,0 +1,18 @@
+"""R3 true positives: leaked non-daemon threads."""
+import threading
+
+
+class Pool:
+    def __init__(self):
+        # FINDING: non-daemon, never joined anywhere in the class
+        self.worker = threading.Thread(target=self._loop)
+        self.worker.start()
+
+    def _loop(self):
+        pass
+
+
+def fire_and_forget(fn):
+    t = threading.Thread(target=fn)  # FINDING: local, not joined
+    t.start()
+    return None

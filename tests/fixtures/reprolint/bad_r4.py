@@ -1,0 +1,30 @@
+"""R4 true positives: broken pytree registrations."""
+import dataclasses
+
+import jax
+from jax.tree_util import register_dataclass
+
+
+@dataclasses.dataclass  # FINDING: registration below @dataclass —
+@register_dataclass     # registers the bare class, flatten sees nothing
+class WrongOrder:
+    value: float
+    step: int
+
+
+@register_dataclass(data_fields=["value"], meta_fields=["step"])
+@dataclasses.dataclass
+class DroppedField:
+    value: float
+    hidden: float  # FINDING: in neither field list — vanishes on tree_map
+    step: int
+
+
+@dataclasses.dataclass
+class Unregistered:
+    value: float
+
+
+@jax.jit
+def make(x):
+    return Unregistered(value=x)  # FINDING: unregistered dataclass in jit

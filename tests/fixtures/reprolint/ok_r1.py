@@ -1,0 +1,35 @@
+"""R1 negatives: guarded writes, @guarded_by helpers, a justified
+suppression — reprolint must report nothing here."""
+import threading
+
+from repro.analysis.annotations import guarded_by
+
+
+class Engine:
+    GUARDED_BY = {"stats": "_lock", "jobs": "_lock"}
+    GUARDED_READS = frozenset({"jobs"})
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.stats = {"tiles": 0}  # __init__ is pre-sharing: exempt
+        self.jobs: list = []
+
+    def bump(self):
+        with self._lock:
+            self.stats["tiles"] += 1
+
+    @guarded_by("_lock")
+    def _bump_locked(self):
+        self.stats["tiles"] += 1  # caller holds the lock by contract
+
+    def bump_via_helper(self):
+        with self._lock:
+            self._bump_locked()
+
+    def monitor_only(self):
+        # reprolint: ignore[R1]: only the monitor thread ever writes this
+        self.stats["tiles"] += 1
+
+    def snapshot(self):
+        with self._lock:
+            return list(self.jobs)

@@ -1,0 +1,27 @@
+"""R2 negatives: guarded / self-guarding effects in jit-reachable code."""
+import jax
+
+from jax.core import trace_state_clean
+
+
+def span(name):
+    # Self-guarding tracer entry point: consults trace_state_clean
+    # itself, like repro.obs.trace.span — calls to it are exempt.
+    if not trace_state_clean():
+        return None
+    return name
+
+
+def report(x):
+    if trace_state_clean():
+        print("shape", x.shape)  # guarded: only runs outside tracing
+
+
+@jax.jit
+def solve(x):
+    span("solve")
+    report(x)
+    y = x.sum()
+    # reprolint: ignore[R2]: debug aid, removed before the jit wrapper lands
+    print("never traced in production")
+    return y

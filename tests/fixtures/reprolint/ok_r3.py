@@ -1,0 +1,23 @@
+"""R3 negatives: daemonized or provably joined threads."""
+import threading
+
+
+class Pool:
+    def __init__(self):
+        self.pump = threading.Thread(target=self._loop, daemon=True)
+        self.worker = threading.Thread(target=self._loop)
+        self.late = threading.Thread(target=self._loop)
+        self.late.daemon = True
+
+    def _loop(self):
+        pass
+
+    def close(self):
+        self.worker.join()  # joined on the teardown path: ok
+
+
+def scoped(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+    t.join()
+    return None

@@ -1,0 +1,42 @@
+"""R4 negatives: complete, correctly-ordered pytree registrations."""
+import dataclasses
+from typing import NamedTuple
+
+import jax
+from jax.tree_util import register_dataclass, register_pytree_node
+
+
+@register_dataclass
+@dataclasses.dataclass
+class Complete:
+    value: float
+    step: int
+
+
+@register_dataclass(data_fields=["value"], meta_fields=["step"])
+@dataclasses.dataclass
+class CompleteExplicit:
+    value: float
+    step: int
+
+
+class AsTuple(NamedTuple):  # NamedTuples flatten completely by design
+    value: float
+    step: int
+
+
+@dataclasses.dataclass
+class ViaCall:
+    value: float
+
+
+register_pytree_node(
+    ViaCall,
+    lambda t: ((t.value,), None),
+    lambda _, ch: ViaCall(*ch),
+)
+
+
+@jax.jit
+def make(x):
+    return Complete(value=x, step=0), AsTuple(value=x, step=1), ViaCall(x)

@@ -1,0 +1,296 @@
+"""reprolint: the analyzer itself, the fixtures, the live-repo gate and
+the runtime lock-order watchdog.
+
+Layout mirrors the rule catalog: per-rule positive/negative fixture
+pairs under ``tests/fixtures/reprolint/``, the lock-order graph's
+acceptance edges, suppression grammar, the seeded-violation gate proof
+(copy ``src/`` + drop a bad fixture in → CLI must fail), and the
+meta-test that the live repo is clean against the committed baseline.
+"""
+import shutil
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis.cli import main as cli_main
+from repro.analysis.findings import scan_suppressions
+from repro.obs import lockcheck
+
+REPO = Path(__file__).resolve().parent.parent
+FIX = REPO / "tests" / "fixtures" / "reprolint"
+SRC = REPO / "src"
+BASELINE = REPO / "reprolint-baseline.json"
+
+
+def rules_of(result):
+    return {f.rule for f in result.findings}
+
+
+def analyze(*paths, **kw):
+    kw.setdefault("root", REPO)
+    kw.setdefault("baseline_path", None)
+    return run_analysis([str(p) for p in paths], **kw)
+
+
+# ---------------------------------------------------------------- per rule
+class TestRuleFixtures:
+    def test_r1_positives(self):
+        res = analyze(FIX / "bad_r1.py")
+        msgs = [f.message for f in res.findings]
+        assert rules_of(res) == {"R1"}
+        assert sum("write to guarded" in m for m in msgs) == 3
+        assert sum("read of guarded" in m for m in msgs) == 1
+        # the closure write is attributed to the nested function
+        assert any(f.context == "Engine.later" for f in res.findings)
+
+    def test_r1_negative_guarded_and_suppressed(self):
+        res = analyze(FIX / "ok_r1.py")
+        assert res.findings == []
+        assert len(res.suppressed) == 1
+        assert res.suppressed[0][1].justification.startswith("only the")
+
+    def test_r1_lock_cycle(self):
+        res = analyze(FIX / "bad_lock_cycle.py")
+        assert any("cycle" in f.message for f in res.findings)
+        assert any("Pair._a" in f.message and "Pair._b" in f.message
+                   for f in res.findings)
+
+    def test_r2_positives(self):
+        res = analyze(FIX / "bad_r2.py")
+        assert rules_of(res) == {"R2"}
+        msgs = " | ".join(f.message for f in res.findings)
+        assert "print()" in msgs
+        assert "np.linalg.norm" in msgs
+        assert ".item()" in msgs  # reached through lax.while_loop body
+
+    def test_r2_negative_guards(self):
+        res = analyze(FIX / "ok_r2.py")
+        assert res.findings == []
+        assert len(res.suppressed) == 1
+
+    def test_r3_positives(self):
+        res = analyze(FIX / "bad_r3.py")
+        assert rules_of(res) == {"R3"}
+        assert len(res.findings) == 2
+
+    def test_r3_negatives(self):
+        res = analyze(FIX / "ok_r3.py")
+        assert res.findings == []
+
+    def test_r4_positives(self):
+        res = analyze(FIX / "bad_r4.py")
+        assert rules_of(res) == {"R4"}
+        msgs = " | ".join(f.message for f in res.findings)
+        assert "ABOVE @dataclass" in msgs
+        assert "'hidden'" in msgs
+        assert "Unregistered" in msgs
+
+    def test_r4_negatives(self):
+        res = analyze(FIX / "ok_r4.py")
+        assert res.findings == []
+
+
+# ----------------------------------------------------------- suppressions
+class TestSuppressions:
+    def test_missing_justification_is_a_finding(self):
+        table, bad = scan_suppressions(
+            "x = 1  # reprolint: ignore[R1]\n"
+        )
+        assert table == {}
+        assert len(bad) == 1 and "justification" in bad[0][1]
+
+    def test_unknown_rule_is_a_finding(self):
+        _, bad = scan_suppressions("x = 1  # reprolint: ignore[R9]: because\n")
+        assert len(bad) == 1 and "unknown rule" in bad[0][1]
+
+    def test_valid_suppression_parses(self):
+        table, bad = scan_suppressions(
+            "x = 1  # reprolint: ignore[R1,R2]: spelled-out reason\n"
+        )
+        assert bad == []
+        assert table[1].covers("R1") and table[1].covers("R2")
+        assert not table[1].covers("R3")
+
+    def test_previous_line_covers(self, tmp_path):
+        f = tmp_path / "prev.py"
+        f.write_text(
+            "import threading\n\n\n"
+            "class C:\n"
+            "    GUARDED_BY = {'n': '_mu'}\n\n"
+            "    def __init__(self):\n"
+            "        self._mu = threading.Lock()\n"
+            "        self.n = 0\n\n"
+            "    def bump(self):\n"
+            "        # reprolint: ignore[R1]: single-threaded test helper\n"
+            "        self.n += 1\n"
+        )
+        res = analyze(f, root=tmp_path)
+        assert res.findings == []
+        assert len(res.suppressed) == 1
+
+
+# -------------------------------------------------------------- lock graph
+class TestLockGraph:
+    def test_acceptance_edges_and_acyclicity(self):
+        res = analyze(SRC)
+        g = res.lock_graph
+        # serve ordering: dispatch lock is taken first, the submission
+        # lock (and the cache's) inside it — never the other way round
+        assert "SolveService._lock" in g.edges["SolveService._dispatch_lock"]
+        assert "FactorCache._mu" in g.edges["SolveService._dispatch_lock"]
+        assert "MicroBatcher._mu" in g.edges["SolveService._lock"]
+        # cluster coordinator/checkpoint locks are in the graph
+        assert {"ClusterEngine._lock", "ClusterEngine._ckpt_lock"} <= g.nodes
+        assert g.cycles() == []
+
+    def test_render_mentions_leaves(self):
+        res = analyze(SRC)
+        out = res.lock_graph.render()
+        assert "Tracer._mu" in out
+
+
+# ------------------------------------------------------- the gate, end-to-end
+class TestGate:
+    def test_live_repo_clean_against_committed_baseline(self):
+        res = run_analysis(
+            [str(SRC)],
+            baseline_path=str(BASELINE) if BASELINE.exists() else None,
+            root=REPO,
+        )
+        assert res.findings == [], "\n".join(f.render() for f in res.findings)
+
+    def test_every_suppression_in_src_has_rule_and_justification(self):
+        res = analyze(SRC)
+        for _, sup in res.suppressed:
+            assert sup.rules and "*" not in sup.rules
+            assert len(sup.justification) >= 8
+
+    @pytest.mark.parametrize(
+        "fixture", ["bad_r1.py", "bad_r2.py", "bad_r3.py", "bad_r4.py",
+                    "bad_lock_cycle.py"]
+    )
+    def test_seeded_violation_fails_the_gate(self, tmp_path, fixture):
+        seeded = tmp_path / "src"
+        shutil.copytree(SRC, seeded)
+        shutil.copy(FIX / fixture, seeded / "repro" / f"seeded_{fixture}")
+        res = run_analysis([str(seeded)], baseline_path=None, root=tmp_path)
+        assert res.findings, f"seeding {fixture} must fail the gate"
+
+    def test_cli_exit_codes(self, tmp_path):
+        assert cli_main([str(SRC), "--no-baseline", "--root", str(REPO)]) == 0
+        assert cli_main([str(FIX / "bad_r1.py"), "--no-baseline",
+                         "--root", str(REPO)]) == 1
+        assert cli_main([str(SRC), "--rules", "R7"]) == 2
+
+    def test_cli_subprocess_matches_ci_invocation(self):
+        # Exactly what the CI analysis job runs, minus the fixtures proof.
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "src/"],
+            cwd=REPO, capture_output=True, text=True,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "OK" in proc.stdout
+
+    def test_write_baseline_roundtrip(self, tmp_path):
+        bl = tmp_path / "baseline.json"
+        bad = FIX / "bad_r3.py"
+        assert cli_main([str(bad), "--baseline", str(bl),
+                         "--write-baseline", "--root", str(REPO)]) == 0
+        # same findings now tolerated via the baseline
+        assert cli_main([str(bad), "--baseline", str(bl),
+                         "--root", str(REPO)]) == 0
+        # but a different rule's violations still fail
+        assert cli_main([str(FIX / "bad_r1.py"), "--baseline", str(bl),
+                         "--root", str(REPO)]) == 1
+
+
+# ------------------------------------------------------------ the watchdog
+class TestLockWatchdog:
+    @pytest.fixture(autouse=True)
+    def _clean(self):
+        lockcheck.enable()
+        lockcheck.reset_observations()
+        yield
+        lockcheck.disable()
+        lockcheck.reset_observations()
+
+    def test_disabled_returns_plain_locks(self):
+        lockcheck.disable()
+        lk = lockcheck.make_lock("X")
+        assert not isinstance(lk, lockcheck.OrderedLock)
+        assert lockcheck.make_rlock("Y") is not None
+
+    def test_inversion_raises_on_second_ordering(self):
+        a = lockcheck.make_lock("A")
+        b = lockcheck.make_lock("B")
+        with a:
+            with b:
+                pass
+        with pytest.raises(lockcheck.LockOrderError, match="inversion"):
+            with b:
+                with a:
+                    pass
+
+    def test_transitive_inversion_detected(self):
+        a = lockcheck.make_lock("A")
+        b = lockcheck.make_lock("B")
+        c = lockcheck.make_lock("C")
+        with a:
+            with b:
+                pass
+        with b:
+            with c:
+                pass
+        with pytest.raises(lockcheck.LockOrderError):
+            with c:
+                with a:
+                    pass
+
+    def test_rlock_reentry_ignored(self):
+        r = lockcheck.make_rlock("R")
+        with r:
+            with r:
+                pass  # no self-edge, no error
+
+    def test_same_name_pairs_unordered(self):
+        m1 = lockcheck.make_lock("M._mu")
+        m2 = lockcheck.make_lock("M._mu")
+        with m1:
+            with m2:
+                pass
+        with m2:
+            with m1:
+                pass  # two instances of one class: never ordered
+
+    def test_edges_recorded_across_threads(self):
+        a = lockcheck.make_lock("A")
+        b = lockcheck.make_lock("B")
+
+        def use():
+            with a:
+                with b:
+                    pass
+
+        t = threading.Thread(target=use, daemon=True)
+        t.start()
+        t.join()
+        assert "B" in lockcheck.observed_edges().get("A", {})
+
+    def test_serve_stack_runs_clean_under_watchdog(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.serve import SolveService
+
+        svc = SolveService(jax.random.PRNGKey(0), max_delay_s=0.0)
+        A = jax.random.normal(jax.random.PRNGKey(1), (80, 6))
+        x = jnp.ones((6,))
+        resp = svc.solve(A, A @ x)
+        assert resp.status == "ok"
+        edges = lockcheck.observed_edges()
+        held_first = edges.get("SolveService._dispatch_lock", {})
+        assert "SolveService._lock" in held_first
